@@ -1,0 +1,40 @@
+//! Compare every pruning method on one model and pattern — a compact
+//! Table-1 column. Usage:
+//!
+//! `cargo run --release --example compare_methods -- [size] [pattern]`
+//! (defaults: s1 2:4)
+
+use anyhow::Result;
+use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let size = args.get(1).cloned().unwrap_or_else(|| "s1".into());
+    let pattern = match args.get(2).map(|s| s.as_str()) {
+        Some("4:8") => Pattern::NofM(4, 8),
+        Some("u0.5") => Pattern::Unstructured(0.5),
+        _ => Pattern::NofM(2, 4),
+    };
+
+    let rt = Runtime::new("artifacts")?;
+    let (dense, _) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
+    println!("{size} {} — dense ppl {dense:.3}", pattern.label());
+    println!("{:<12} {:>9} {:>8} {:>10}", "method", "ppl", "time(s)", "mem(MiB)");
+    for method in Method::all() {
+        let opts = PruneOptions::new(method, pattern);
+        match prune_and_eval(&rt, &size, &opts, EVAL_BATCHES) {
+            Ok(r) => println!(
+                "{:<12} {:>9.3} {:>8.1} {:>10.1}",
+                method.label(),
+                r.ppl_test,
+                r.report.secs,
+                r.report.memory.peak() as f64 / (1 << 20) as f64
+            ),
+            Err(e) => println!("{:<12} {:>9} ({e})", method.label(), "-"),
+        }
+    }
+    Ok(())
+}

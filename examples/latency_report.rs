@@ -1,0 +1,39 @@
+//! Deployment latency report (Tables 7 & 9): the roofline simulation of
+//! 2:4 sparsity's TTFT/TPOT/weight-memory reductions under FP16 and FP8.
+//!
+//! `cargo run --release --example latency_report`
+
+use wandapp::latency::*;
+
+fn main() {
+    let hw = HwProfile::h100();
+    let g = LlmGeometry::llama7b();
+    println!("hardware: {}", hw.name);
+    println!(
+        "model: LLaMA-7B geometry (d={}, ffn={}, L={})",
+        g.d, g.ffn, g.n_layers
+    );
+    for fmt in [Format::FP16, Format::FP8] {
+        println!("\n--- {fmt:?} ---");
+        let dense_w = weight_bytes(&g, fmt, false) / 1e9;
+        let sparse_w = weight_bytes(&g, fmt, true) / 1e9;
+        println!("weights: dense {dense_w:.1} GB -> 2:4 {sparse_w:.1} GB");
+        println!("batch  in_len   TTFT(d)   TTFT(s)   red%   TPOT(d)   TPOT(s)   red%");
+        for batch in [1.0, 4.0] {
+            for in_len in [128.0, 1024.0, 2048.0, 4096.0] {
+                let w = Workload { batch, input_len: in_len, output_len: 64.0 };
+                let d = simulate(&hw, &g, fmt, false, w);
+                let s = simulate(&hw, &g, fmt, true, w);
+                println!(
+                    "{batch:>5} {in_len:>7} {:>8.2}ms {:>8.2}ms {:>6.1} {:>8.3}ms {:>8.3}ms {:>6.1}",
+                    d.ttft * 1e3,
+                    s.ttft * 1e3,
+                    100.0 * (d.ttft - s.ttft) / d.ttft,
+                    d.tpot * 1e3,
+                    s.tpot * 1e3,
+                    100.0 * (d.tpot - s.tpot) / d.tpot,
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Sparsity-aware LoRA fine-tuning after pruning (Table 4's workflow):
+//! prune the primary model 2:4 with Wanda++, then recover perplexity with
+//! rank-4 LoRA adapters on q/v.
+//!
+//! `cargo run --release --example lora_finetune -- [steps]`
+
+use anyhow::Result;
+use wandapp::coordinator::Coordinator;
+use wandapp::eval::perplexity_split;
+use wandapp::lora::{finetune, perplexity_with_lora, LoraState};
+use wandapp::model::load_size;
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+
+fn main() -> Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(200);
+    let rt = Runtime::new("artifacts")?;
+    let size = rt.manifest.consts.primary.clone();
+
+    let mut w = load_size(&rt, &size)?;
+    let dense = perplexity_split(&rt, &w, "test", 24)?;
+    println!("dense ppl: {dense:.3}");
+
+    let coord = Coordinator::new(&rt);
+    let opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
+    let report = coord.prune(&mut w, &opts)?;
+    println!("{}", report.summary());
+    let pruned = perplexity_split(&rt, &w, "test", 24)?;
+    println!("pruned ppl: {pruned:.3}");
+
+    let rank = rt.manifest.consts.lora_rank;
+    let mut lora = LoraState::init(&w, rank, 7);
+    let rep = finetune(&rt, &w, &mut lora, steps, 1e-3, 11)?;
+    println!(
+        "lora: {} steps in {:.1}s, loss {:.4} -> {:.4}",
+        rep.steps,
+        rep.secs,
+        rep.losses.first().unwrap_or(&f32::NAN),
+        rep.losses.last().unwrap_or(&f32::NAN)
+    );
+    let tuned = perplexity_with_lora(&rt, &w, &lora, "test", 24)?;
+    println!(
+        "lora-tuned ppl: {tuned:.3} ({:+.1}% vs pruned)",
+        100.0 * (tuned - pruned) / pruned
+    );
+    Ok(())
+}

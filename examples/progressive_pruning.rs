@@ -1,0 +1,40 @@
+//! Figure-3-style progressive pruning: prune two more decoder blocks at a
+//! time and watch perplexity climb — Wanda vs Wanda++, 2:4 vs 4:8.
+//!
+//! `cargo run --release --example progressive_pruning -- [size]`
+
+use anyhow::Result;
+use wandapp::harness::{prune_and_eval, EVAL_BATCHES};
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+
+fn main() -> Result<()> {
+    let size = std::env::args().nth(1).unwrap_or_else(|| "s2".into());
+    let rt = Runtime::new("artifacts")?;
+    let n_layers = rt.manifest.size(&size)?.n_layers;
+
+    println!("progressive pruning on {size} ({n_layers} blocks)");
+    println!(
+        "{:<10} {:<6} {:>7} {:>10} {:>10}",
+        "method", "patt", "blocks", "ppl(test)", "ppl(val)"
+    );
+    for method in [Method::Wanda, Method::WandaPP] {
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            for upto in (0..=n_layers).step_by(2) {
+                let mut opts = PruneOptions::new(method, Pattern::NofM(n, m));
+                opts.max_blocks = Some(upto);
+                let r = prune_and_eval(&rt, &size, &opts, EVAL_BATCHES)?;
+                println!(
+                    "{:<10} {:<6} {:>7} {:>10.3} {:>10.3}",
+                    method.label(),
+                    format!("{n}:{m}"),
+                    upto,
+                    r.ppl_test,
+                    r.ppl_val
+                );
+            }
+        }
+    }
+    Ok(())
+}

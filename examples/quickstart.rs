@@ -1,0 +1,59 @@
+//! Quickstart — the end-to-end driver (DESIGN.md §9).
+//!
+//! Loads the pretrained primary model, prunes it to 2:4 with Wanda++
+//! (RGS + regional optimization) and with plain Wanda, and reports
+//! held-out perplexity for both against the dense baseline — the paper's
+//! headline comparison, on a real (small) workload.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use wandapp::eval::perplexity_split;
+use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new("artifacts")?;
+    let size = rt.manifest.consts.primary.clone();
+    println!("model: {size} ({} blocks)", rt.manifest.size(&size)?.n_layers);
+
+    let (dense_test, dense_val) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
+    println!("dense        ppl  test {dense_test:.3}  val {dense_val:.3}");
+
+    let wanda = prune_and_eval(
+        &rt,
+        &size,
+        &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
+        EVAL_BATCHES,
+    )?;
+    println!(
+        "wanda   2:4  ppl  test {:.3}  val {:.3}   ({:.1}s)",
+        wanda.ppl_test, wanda.ppl_val, wanda.report.secs
+    );
+
+    let wpp = prune_and_eval(
+        &rt,
+        &size,
+        &PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4)),
+        EVAL_BATCHES,
+    )?;
+    println!(
+        "wanda++ 2:4  ppl  test {:.3}  val {:.3}   ({:.1}s, sparsity {:.3})",
+        wpp.ppl_test,
+        wpp.ppl_val,
+        wpp.report.secs,
+        wpp.report.final_sparsity
+    );
+
+    let improvement =
+        100.0 * (wanda.ppl_test - wpp.ppl_test) / wanda.ppl_test;
+    println!("wanda++ improves pruned ppl by {improvement:.1}% over wanda");
+
+    // Sanity: the pruned model is still a usable LM.
+    let w = wandapp::model::load_size(&rt, &size)?;
+    let check = perplexity_split(&rt, &w, "val", 4)?;
+    assert!(check.is_finite());
+    Ok(())
+}

@@ -1,0 +1,283 @@
+"""AOT compiler: lowers every L2 compute graph to HLO *text* artifacts.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax>=0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the rust `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Every artifact takes weights as runtime parameters so one executable serves
+dense and pruned models. A manifest.json records, for each artifact, the
+ordered input/output names + shapes + dtypes the rust registry binds against.
+
+Usage: python -m compile.aot --out ../artifacts [--sizes s0,s1,...]
+"""
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import (ALPHA_DEFAULT, B_CAL, B_EVAL, M_RO, PRIMARY,
+                      S0_SEQ_VARIANTS, SIZES, weight_shapes)
+from . import model as M
+from .kernels.nm_mask import nm_mask
+from .kernels.rgs_score import rgs_score
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class Emitter:
+    def __init__(self, outdir):
+        self.outdir = outdir
+        self.manifest = {"sizes": {}, "consts": {}, "artifacts": {}}
+
+    def emit(self, key: str, fn, inputs, outputs):
+        """inputs: [(name, shape, dtype)] — lowered in this order."""
+        t0 = time.time()
+        specs = [jax.ShapeDtypeStruct(tuple(s), jnp.int32 if d == I32
+                                      else jnp.float32)
+                 for (_, s, d) in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.outdir, f"{key}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest["artifacts"][key] = {
+            "file": f"{key}.hlo.txt",
+            "inputs": [{"name": n, "shape": list(s), "dtype": d}
+                       for (n, s, d) in inputs],
+            "outputs": [{"name": n, "shape": list(s), "dtype": d}
+                        for (n, s, d) in outputs],
+        }
+        print(f"  {key}: {len(text)/1024:.0f} KiB in {time.time()-t0:.1f}s")
+
+
+def block_param_inputs(cfg):
+    d, f = cfg.d, cfg.ffn
+    return [("ln1", [d], F32), ("wq", [d, d], F32), ("wk", [d, d], F32),
+            ("wv", [d, d], F32), ("wo", [d, d], F32), ("ln2", [d], F32),
+            ("wg", [f, d], F32), ("wu", [f, d], F32), ("wd", [d, f], F32)]
+
+
+def bp_from_args(args):
+    return dict(zip(M.BLOCK_PARAM_NAMES, args))
+
+
+def emit_size(em: Emitter, cfg, seq_variants):
+    d, f, V = cfg.d, cfg.ffn, cfg.vocab
+    s = cfg.name
+    bp_in = block_param_inputs(cfg)
+    shapes7 = [dict(bp_in)[k] if False else None for k in M.PRUNABLE]
+    w_shape = {"wq": [d, d], "wk": [d, d], "wv": [d, d], "wo": [d, d],
+               "wg": [f, d], "wu": [f, d], "wd": [d, f]}
+
+    for t in seq_variants:
+        # --- block_fwd ---
+        def f_fwd(x, *bps, _t=t):
+            return (M.block_fwd(cfg, bp_from_args(bps), x),)
+        em.emit(f"{s}_block_fwd_t{t}", f_fwd,
+                [("x", [B_CAL, t, d], F32)] + bp_in,
+                [("y", [B_CAL, t, d], F32)])
+
+        # --- block_stats ---
+        def f_stats(x, *bps):
+            return M.block_stats(cfg, bp_from_args(bps), x)
+        em.emit(f"{s}_block_stats_t{t}", f_stats,
+                [("x", [B_CAL, t, d], F32)] + bp_in,
+                [("y", [B_CAL, t, d], F32), ("sq_qkv", [d], F32),
+                 ("sq_o", [d], F32), ("sq_mlp", [d], F32),
+                 ("sq_down", [f], F32)])
+
+        # --- rgs_grad ---
+        def f_rgs(x, *bps):
+            return M.rgs_sqgrad(cfg, bp_from_args(bps), x)
+        em.emit(f"{s}_rgs_grad_t{t}", f_rgs,
+                [("x", [B_CAL, t, d], F32)] + bp_in,
+                [(f"sg_{k}", w_shape[k], F32) for k in M.PRUNABLE])
+
+        # --- ro_step ---
+        mask_in = [(f"m_{k}", w_shape[k], F32) for k in M.PRUNABLE]
+        v_in = [(f"v_{n}", sh, dt) for (n, sh, dt) in bp_in]
+
+        def f_ro(x, dense_y, *rest):
+            bps = rest[:9]
+            masks = dict(zip(M.PRUNABLE, rest[9:16]))
+            vs = dict(zip(M.BLOCK_PARAM_NAMES, rest[16:25]))
+            lr = rest[25][0]
+            bp2, v2, loss = M.ro_step(cfg, bp_from_args(bps), masks, vs,
+                                      x, dense_y, lr)
+            return tuple(bp2[n] for n in M.BLOCK_PARAM_NAMES) + \
+                tuple(v2[n] for n in M.BLOCK_PARAM_NAMES) + (loss,)
+        em.emit(f"{s}_ro_step_t{t}", f_ro,
+                [("x", [M_RO, t, d], F32), ("dense_y", [M_RO, t, d], F32)]
+                + bp_in + mask_in + v_in + [("lr", [1], F32)],
+                [(f"new_{n}", sh, dt) for (n, sh, dt) in bp_in]
+                + [(f"nv_{n}", sh, dt) for (n, sh, dt) in bp_in]
+                + [("loss", [], F32)])
+
+    t = cfg.seq
+    # --- block_hessian (T=seq only; SparseGPT) ---
+    def f_hess(x, *bps):
+        return M.block_hessian(cfg, bp_from_args(bps), x)
+    em.emit(f"{s}_block_hessian_t{t}", f_hess,
+            [("x", [B_CAL, t, d], F32)] + bp_in,
+            [("y", [B_CAL, t, d], F32), ("h_qkv", [d, d], F32),
+             ("h_o", [d, d], F32), ("h_mlp", [d, d], F32),
+             ("h_down", [f, f], F32)])
+
+    # --- embed ---
+    em.emit(f"{s}_embed_t{t}",
+            lambda tok, emb: (M.embed_fwd(tok, emb),),
+            [("tokens", [B_EVAL, t], I32), ("embed", [V, d], F32)],
+            [("h", [B_EVAL, t, d], F32)])
+
+    # --- head_loss ---
+    em.emit(f"{s}_head_loss_t{t}",
+            lambda h, tgt, ln_f, head: M.head_loss(h, tgt, ln_f, head),
+            [("h", [B_EVAL, t, d], F32), ("targets", [B_EVAL, t], I32),
+             ("ln_f", [d], F32), ("head", [V, d], F32)],
+            [("sum_nll", [], F32), ("count", [], F32)])
+
+    # --- logits_all (zero-shot likelihood scoring) ---
+    em.emit(f"{s}_logits_t{t}",
+            lambda h, ln_f, head: (M.logits_all(h, ln_f, head),),
+            [("h", [B_EVAL, t, d], F32), ("ln_f", [d], F32),
+             ("head", [V, d], F32)],
+            [("logits", [B_EVAL, t, V], F32)])
+
+    # --- Pallas score + N:M mask kernels, one per weight shape ---
+    for tag, (dout, din) in weight_shapes(cfg).items():
+        em.emit(f"{s}_score_{tag}",
+                lambda w, g, xn, a: (rgs_score(w, g, xn, a[0]),),
+                [("w", [dout, din], F32), ("g", [dout, din], F32),
+                 ("xnorm", [din], F32), ("alpha", [1], F32)],
+                [("score", [dout, din], F32)])
+        for (n, m) in ((2, 4), (4, 8)):
+            em.emit(f"{s}_mask{n}{m}_{tag}",
+                    lambda sc, _n=n, _m=m: (nm_mask(sc, _n, _m),),
+                    [("score", [dout, din], F32)],
+                    [("mask", [dout, din], F32)])
+
+
+def emit_full_model(em: Emitter, cfg):
+    """full_grad (GBLM baseline) + lora_step — PRIMARY size only."""
+    s, d, f, V, t = cfg.name, cfg.d, cfg.ffn, cfg.vocab, cfg.seq
+    all_in = [("embed", [V, d], F32)]
+    for li in range(cfg.n_layers):
+        all_in += [(f"b{li}_{n}", sh, dt)
+                   for (n, sh, dt) in block_param_inputs(cfg)]
+    all_in += [("ln_f", [d], F32), ("head", [V, d], F32)]
+    n_all = len(all_in)
+    w_shape = {"wq": [d, d], "wk": [d, d], "wv": [d, d], "wo": [d, d],
+               "wg": [f, d], "wu": [f, d], "wd": [d, f]}
+
+    def params_from(args):
+        emb = args[0]
+        blocks = []
+        for li in range(cfg.n_layers):
+            chunk = args[1 + li * 9:1 + (li + 1) * 9]
+            blocks.append(dict(zip(M.BLOCK_PARAM_NAMES, chunk)))
+        return {"embed": emb, "blocks": blocks,
+                "ln_f": args[-2], "head": args[-1]}
+
+    def f_full(tok, tgt, *ws):
+        return M.full_sqgrad(cfg, params_from(ws), tok, tgt)
+    outs = []
+    for li in range(cfg.n_layers):
+        outs += [(f"sg_b{li}_{k}", w_shape[k], F32) for k in M.PRUNABLE]
+    em.emit(f"{s}_full_grad", f_full,
+            [("tokens", [B_CAL, t], I32), ("targets", [B_CAL, t], I32)]
+            + all_in, outs)
+
+    r = M.LORA_RANK
+    lora_in, v_in = [], []
+    for li in range(cfg.n_layers):
+        for mod in ("q", "v"):
+            lora_in += [(f"a_{mod}{li}", [r, d], F32),
+                        (f"b_{mod}{li}", [d, r], F32)]
+    v_in = [(f"v_{n}", sh, dt) for (n, sh, dt) in lora_in]
+    n_lora = len(lora_in)
+
+    def f_lora(tok, tgt, *rest):
+        ws = rest[:n_all]
+        lora = dict(zip([n for (n, _, _) in lora_in],
+                        rest[n_all:n_all + n_lora]))
+        vs = dict(zip([n for (n, _, _) in lora_in],
+                      rest[n_all + n_lora:n_all + 2 * n_lora]))
+        lr = rest[-1][0]
+        l2, v2, loss = M.lora_step(cfg, params_from(ws), lora, vs,
+                                   tok, tgt, lr)
+        names = [n for (n, _, _) in lora_in]
+        return tuple(l2[n] for n in names) + tuple(v2[n] for n in names) \
+            + (loss,)
+    em.emit(f"{s}_lora_step", f_lora,
+            [("tokens", [B_CAL, t], I32), ("targets", [B_CAL, t], I32)]
+            + all_in + lora_in + v_in + [("lr", [1], F32)],
+            [(f"new_{n}", sh, dt) for (n, sh, dt) in lora_in]
+            + [(f"nv_{n}", sh, dt) for (n, sh, dt) in lora_in]
+            + [("loss", [], F32)])
+
+    # lora_eval: full-model fwd with adapters, for ppl during/after tuning
+    def f_lora_eval(tok, tgt, *rest):
+        ws = rest[:n_all]
+        lora = dict(zip([n for (n, _, _) in lora_in],
+                        rest[n_all:n_all + n_lora]))
+        logits = M.model_fwd_lora(cfg, params_from(ws), lora, tok)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt_c = jnp.maximum(tgt, 0)
+        nll = -jnp.take_along_axis(logp, tgt_c[..., None], axis=-1)[..., 0]
+        valid = (tgt >= 0).astype(jnp.float32)
+        return jnp.sum(nll * valid), jnp.sum(valid)
+    em.emit(f"{s}_lora_eval", f_lora_eval,
+            [("tokens", [B_CAL, t], I32), ("targets", [B_CAL, t], I32)]
+            + all_in + lora_in,
+            [("sum_nll", [], F32), ("count", [], F32)])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(SIZES))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    em = Emitter(args.out)
+    em.manifest["consts"] = {
+        "B_CAL": B_CAL, "B_EVAL": B_EVAL, "M_RO": M_RO,
+        "alpha_default": ALPHA_DEFAULT, "lora_rank": M.LORA_RANK,
+        "lora_scale": M.LORA_SCALE, "rmsprop_rho": 0.99,
+        "rmsprop_eps": 1e-8, "primary": PRIMARY,
+    }
+    for name in args.sizes.split(","):
+        cfg = SIZES[name]
+        variants = S0_SEQ_VARIANTS if name == "s0" else (cfg.seq,)
+        em.manifest["sizes"][name] = {
+            "d": cfg.d, "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "ffn": cfg.ffn, "vocab": cfg.vocab, "seq": cfg.seq,
+            "seq_variants": list(variants),
+        }
+        print(f"[{name}] lowering artifacts…")
+        emit_size(em, cfg, variants)
+        if name == PRIMARY:
+            emit_full_model(em, cfg)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(em.manifest, f, indent=1)
+    print(f"manifest: {len(em.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Model size ladder and artifact-shape constants shared by pretrain/aot/tests.
+
+The paper prunes LLaMA-1 7B..65B / OpenLLaMA 3B..70B. This repo substitutes a
+four-size ladder of byte-level LLaMA-architecture LMs (RMSNorm + RoPE + SwiGLU,
+untied head) small enough to pretrain at build time on one CPU core while
+keeping the structures the pruner acts on (7 linear weights per decoder block)
+identical. See DESIGN.md §3.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d: int          # hidden size
+    n_layers: int   # decoder blocks
+    n_heads: int    # attention heads (head_dim = d / n_heads = 32)
+    ffn: int        # SwiGLU intermediate size (multiple of 8 for N:M groups)
+    vocab: int = 256  # byte-level
+    seq: int = 64     # default context length for artifacts
+
+    @property
+    def head_dim(self) -> int:
+        return self.d // self.n_heads
+
+    def block_param_count(self) -> int:
+        return 4 * self.d * self.d + 3 * self.d * self.ffn + 2 * self.d
+
+    def param_count(self) -> int:
+        # embed + blocks + final norm + untied head
+        return (
+            self.vocab * self.d
+            + self.n_layers * self.block_param_count()
+            + self.d
+            + self.vocab * self.d
+        )
+
+
+SIZES = {
+    "s0": ModelConfig("s0", d=64, n_layers=2, n_heads=2, ffn=176),
+    "s1": ModelConfig("s1", d=96, n_layers=3, n_heads=3, ffn=264),
+    "s2": ModelConfig("s2", d=128, n_layers=4, n_heads=4, ffn=352),
+    "s3": ModelConfig("s3", d=192, n_layers=5, n_heads=6, ffn=528),
+}
+
+# The size most tables use (the paper's "7B" workhorse slot).
+PRIMARY = "s2"
+
+# Batch shapes baked into artifacts (HLO shapes are static).
+B_CAL = 8    # calibration samples per block-artifact call; rust accumulates
+B_EVAL = 8   # eval batch for head_loss / block_fwd on the eval split
+M_RO = 8     # RO minibatch (paper: 32 of 128; scaled with model size)
+
+# Context-length variants emitted for s0 only, for the Fig. 4 calibration
+# sensitivity sweep (number-of-samples x context-length grid).
+S0_SEQ_VARIANTS = (8, 16, 32, 64)
+
+# Pruning-score scaling factor default (paper Eq. 4 uses alpha=100).
+ALPHA_DEFAULT = 100.0
+
+# The three distinct linear-weight shapes per block: (d_out, d_in).
+def weight_shapes(cfg: ModelConfig):
+    return {
+        "sq": (cfg.d, cfg.d),      # q, k, v, o
+        "sf": (cfg.ffn, cfg.d),    # gate, up
+        "fd": (cfg.d, cfg.ffn),    # down
+    }

@@ -1,0 +1,272 @@
+"""Deterministic synthetic corpus + downstream task generator.
+
+Substitute for C4 (calibration / LoRA tuning) and WikiText (perplexity eval):
+an English-like corpus sampled from a probabilistic grammar with enough
+structure (agreement, selectional preferences, discourse templates, numeric
+facts) that (a) a tiny byte-level LM learns non-trivial statistics and
+(b) likelihood-ranked zero-shot tasks are well-posed. Fully deterministic
+given the seed; documented in DESIGN.md §3.
+
+Outputs (under artifacts/):
+  corpus_train.bin / corpus_val.bin / corpus_test.bin   raw utf-8 bytes
+  tasks.json   nine synthetic zero-shot tasks (Table 2 substitute)
+"""
+
+import json
+import random
+
+# --- lexicon ---------------------------------------------------------------
+
+SINGULAR_NOUNS = [
+    "cat", "dog", "bird", "fox", "horse", "farmer", "teacher", "child",
+    "sailor", "wolf", "rabbit", "painter", "doctor", "miller", "baker",
+    "king", "queen", "soldier", "monk", "trader",
+]
+PLURAL = {n: (n + "s" if not n.endswith("x") and not n.endswith("ch") else n + "es")
+          for n in SINGULAR_NOUNS}
+PLURAL["wolf"] = "wolves"
+PLURAL["child"] = "children"
+
+TRANS_VERBS = [("chases", "chase"), ("sees", "see"), ("helps", "help"),
+               ("follows", "follow"), ("feeds", "feed"), ("finds", "find"),
+               ("greets", "greet"), ("watches", "watch")]
+INTRANS_VERBS = [("sleeps", "sleep"), ("runs", "run"), ("sings", "sing"),
+                 ("waits", "wait"), ("rests", "rest")]
+ADJ_POS = ["kind", "bright", "calm", "brave", "gentle", "happy", "wise"]
+ADJ_NEG = ["cruel", "gloomy", "angry", "fearful", "harsh", "sad", "bitter"]
+PLACES = ["village", "forest", "market", "river", "mountain", "harbor",
+          "garden", "castle", "valley", "mill"]
+TIMES = ["in the morning", "at noon", "in the evening", "at night",
+         "before dawn", "after the rain"]
+COLORS = ["red", "blue", "green", "white", "black", "golden"]
+OBJECTS = ["lantern", "basket", "letter", "coin", "map", "bell", "book",
+           "cloak", "key", "boat"]
+
+
+def _sentence(rng: random.Random) -> str:
+    form = rng.random()
+    if form < 0.35:
+        # transitive with agreement
+        plural = rng.random() < 0.4
+        subj = rng.choice(SINGULAR_NOUNS)
+        obj = rng.choice(SINGULAR_NOUNS)
+        v_sg, v_pl = rng.choice(TRANS_VERBS)
+        s = (f"the {PLURAL[subj]} {v_pl}" if plural else f"the {subj} {v_sg}")
+        s += f" the {rng.choice(ADJ_POS + ADJ_NEG)} {obj}"
+        if rng.random() < 0.5:
+            s += f" near the {rng.choice(PLACES)}"
+    elif form < 0.55:
+        plural = rng.random() < 0.4
+        subj = rng.choice(SINGULAR_NOUNS)
+        v_sg, v_pl = rng.choice(INTRANS_VERBS)
+        s = (f"the {PLURAL[subj]} {v_pl}" if plural else f"the {subj} {v_sg}")
+        s += f" {rng.choice(TIMES)}"
+    elif form < 0.72:
+        subj = rng.choice(SINGULAR_NOUNS)
+        s = (f"the {subj} carries a {rng.choice(COLORS)} "
+             f"{rng.choice(OBJECTS)} to the {rng.choice(PLACES)}")
+    elif form < 0.86:
+        adj = rng.choice(ADJ_POS) if rng.random() < 0.5 else rng.choice(ADJ_NEG)
+        s = f"the {rng.choice(OBJECTS)} in the {rng.choice(PLACES)} is {adj}"
+    else:
+        a, b = rng.randint(1, 6), rng.randint(1, 6)
+        s = f"{_num(a)} and {_num(b)} make {_num(a + b)}"
+    return s
+
+
+_NUMS = ["zero", "one", "two", "three", "four", "five", "six", "seven",
+         "eight", "nine", "ten", "eleven", "twelve"]
+
+
+def _num(n: int) -> str:
+    return _NUMS[n]
+
+
+def _paragraph(rng: random.Random) -> str:
+    n = rng.randint(3, 7)
+    return ". ".join(_sentence(rng) for _ in range(n)) + ".\n"
+
+
+def generate(n_bytes: int, seed: int) -> bytes:
+    rng = random.Random(seed)
+    parts, total = [], 0
+    while total < n_bytes:
+        p = _paragraph(rng)
+        parts.append(p)
+        total += len(p)
+    return "".join(parts).encode("utf-8")[:n_bytes]
+
+
+# --- zero-shot tasks (Table 2 substitute) -----------------------------------
+#
+# Each task is {name, examples: [{prompt, choices, answer}]}. Scoring is the
+# Harness protocol: pick the choice whose continuation log-likelihood under
+# the model is highest.
+
+def _task_agreement(rng, n):
+    """Subject-verb agreement (Wic/BLiMP-flavored)."""
+    ex = []
+    for _ in range(n):
+        plural = rng.random() < 0.5
+        subj = rng.choice(SINGULAR_NOUNS)
+        v_sg, v_pl = rng.choice(TRANS_VERBS)
+        noun = PLURAL[subj] if plural else subj
+        good, bad = (v_pl, v_sg) if plural else (v_sg, v_pl)
+        ex.append({
+            "prompt": f"the {noun} ",
+            "choices": [f"{good} the {rng.choice(SINGULAR_NOUNS)}",
+                        f"{bad} the {rng.choice(SINGULAR_NOUNS)}"],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_polarity(rng, n):
+    """Sentiment-like: positive vs negative adjective given a cue."""
+    ex = []
+    for _ in range(n):
+        pos = rng.random() < 0.5
+        adj = rng.choice(ADJ_POS if pos else ADJ_NEG)
+        ex.append({
+            "prompt": f"the {rng.choice(OBJECTS)} in the {rng.choice(PLACES)} is ",
+            "choices": [adj, rng.choice(ADJ_NEG if pos else ADJ_POS)],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_arith(rng, n):
+    ex = []
+    for _ in range(n):
+        a, b = rng.randint(1, 6), rng.randint(1, 6)
+        wrong = a + b
+        while wrong == a + b:
+            wrong = rng.randint(2, 12)
+        ex.append({
+            "prompt": f"{_num(a)} and {_num(b)} make ",
+            "choices": [_num(a + b), _num(wrong)],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_selection(rng, n):
+    """Selectional preference: carried objects vs actors."""
+    ex = []
+    for _ in range(n):
+        ex.append({
+            "prompt": f"the {rng.choice(SINGULAR_NOUNS)} carries a "
+                      f"{rng.choice(COLORS)} ",
+            "choices": [rng.choice(OBJECTS), rng.choice(SINGULAR_NOUNS)],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_plural(rng, n):
+    ex = []
+    for _ in range(n):
+        subj = rng.choice(SINGULAR_NOUNS)
+        other = rng.choice([x for x in SINGULAR_NOUNS if x != subj])
+        ex.append({
+            "prompt": f"one {subj} and another {subj} are two ",
+            "choices": [PLURAL[subj], PLURAL[other]],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_place(rng, n):
+    """'near the X' continuation expects a place noun."""
+    ex = []
+    for _ in range(n):
+        s = rng.choice(SINGULAR_NOUNS)
+        v_sg, _ = rng.choice(TRANS_VERBS)
+        ex.append({
+            "prompt": f"the {s} {v_sg} the {rng.choice(SINGULAR_NOUNS)} near the ",
+            "choices": [rng.choice(PLACES), rng.choice(OBJECTS)],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_copula(rng, n):
+    """'the lanterns are' vs 'is' — number agreement on the copula."""
+    ex = []
+    for _ in range(n):
+        plural = rng.random() < 0.5
+        obj = rng.choice(OBJECTS)
+        noun = obj + "s" if plural else obj
+        ex.append({
+            "prompt": f"the {noun} in the {rng.choice(PLACES)} ",
+            "choices": ["are" if plural else "is", "is" if plural else "are"],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_time(rng, n):
+    """Intransitive verbs pair with time adjuncts, not object NPs."""
+    ex = []
+    for _ in range(n):
+        s = rng.choice(SINGULAR_NOUNS)
+        v_sg, _ = rng.choice(INTRANS_VERBS)
+        ex.append({
+            "prompt": f"the {s} {v_sg} ",
+            "choices": [rng.choice(TIMES), f"the {rng.choice(OBJECTS)}"],
+            "answer": 0,
+        })
+    return ex
+
+
+def _task_article(rng, n):
+    """Determiner selection: 'carries a' vs 'carries the' templates."""
+    ex = []
+    for _ in range(n):
+        s = rng.choice(SINGULAR_NOUNS)
+        ex.append({
+            "prompt": f"the {s} carries ",
+            "choices": [f"a {rng.choice(COLORS)} {rng.choice(OBJECTS)}",
+                        f"an {rng.choice(COLORS)} {rng.choice(OBJECTS)}"],
+            "answer": 0,
+        })
+    return ex
+
+
+TASKS = [
+    ("agreement", _task_agreement),
+    ("polarity", _task_polarity),
+    ("arith", _task_arith),
+    ("selection", _task_selection),
+    ("plural", _task_plural),
+    ("place", _task_place),
+    ("copula", _task_copula),
+    ("time", _task_time),
+    ("article", _task_article),
+]
+
+
+def generate_tasks(n_per_task: int, seed: int):
+    rng = random.Random(seed)
+    out = []
+    for name, fn in TASKS:
+        out.append({"name": name, "examples": fn(rng, n_per_task)})
+    return out
+
+
+def write_all(outdir: str, train_bytes=1 << 20, val_bytes=1 << 16,
+              test_bytes=1 << 16, n_per_task=100, seed=1234):
+    import os
+    os.makedirs(outdir, exist_ok=True)
+    for split, n, s in (("train", train_bytes, seed),
+                        ("val", val_bytes, seed + 1),
+                        ("test", test_bytes, seed + 2)):
+        with open(os.path.join(outdir, f"corpus_{split}.bin"), "wb") as f:
+            f.write(generate(n, s))
+    with open(os.path.join(outdir, "tasks.json"), "w") as f:
+        json.dump(generate_tasks(n_per_task, seed + 3), f)
+
+
+if __name__ == "__main__":
+    import sys
+    write_all(sys.argv[1] if len(sys.argv) > 1 else "../artifacts")

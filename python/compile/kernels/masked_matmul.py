@@ -1,0 +1,74 @@
+"""Pallas kernel: tiled sparse-aware (masked) matmul, y = x @ (W*mask)^T.
+
+Used for the *pruned* forward inside the Regional-Optimization step, so the
+paper's sparse GEMM is exercised by an actual kernel rather than weight
+zeroing alone.
+
+GPU->TPU adaptation (DESIGN.md §4): NVIDIA's 2:4 sparse tensor cores skip
+half the MACs; the TPU MXU has no sparse mode, so the benefit translates to
+HBM->VMEM *bandwidth* (a compressed 2:4 stream halves weight traffic). The
+kernel therefore structures the computation as: stream W row-tiles through
+VMEM once, apply the mask at VMEM residency (stand-in for decompress), and
+feed dense tiles to the MXU via jnp.dot. Latency accounting for the real
+bandwidth saving lives in rust/src/latency/.
+
+Autodiff: pallas interpret kernels are not differentiated reliably, so the
+public entry point wraps the kernel in a custom_vjp whose backward pass is
+the (mathematically exact) jnp expression.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_tile
+
+TILE_R = 32   # rows of W (output features) per grid step
+
+
+def _kernel(x_ref, w_ref, m_ref, out_ref):
+    x = x_ref[...]             # (t, d_in)
+    w = w_ref[...]             # (tile, d_in)
+    msk = m_ref[...]
+    out_ref[...] = jnp.dot(x, (w * msk).T)
+
+
+def _fwd_impl(x, w, mask):
+    t, d_in = x.shape
+    d_out, _ = w.shape
+    tile = pick_tile(d_out)
+    return pl.pallas_call(
+        _kernel,
+        grid=(d_out // tile,),
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, tile), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), x.dtype),
+        interpret=True,
+    )(x, w, mask)
+
+
+@jax.custom_vjp
+def masked_matmul(x, w, mask):
+    """x: (t, d_in); w, mask: (d_out, d_in) -> (t, d_out)."""
+    return _fwd_impl(x, w, mask)
+
+
+def _vjp_fwd(x, w, mask):
+    return _fwd_impl(x, w, mask), (x, w, mask)
+
+
+def _vjp_bwd(res, gy):
+    x, w, mask = res
+    wm = w * mask
+    gx = gy @ wm                       # (t, d_in)
+    gw = (gy.T @ x) * mask             # masked-out weights get zero grad
+    return gx, gw, None
+
+
+masked_matmul.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,54 @@
+"""Pallas kernel: N:M semi-structured mask selection — the pruning hot spot.
+
+Within every contiguous group of M columns, keep the N largest-scoring
+entries (ties to the lower index, matching ref.nm_mask_ref and the rust
+implementation bit-for-bit).
+
+GPU->TPU adaptation (DESIGN.md §4): the paper's 2:4 selection on GPU is a
+warp-level sort. On TPU there is no per-lane shuffle; instead each VMEM row
+tile is viewed as (rows, groups, M) and the rank of every element is computed
+with a broadcast compare tree on the VPU — an O(M^2) compare-count which is
+branch-free, needs no scatter, and vectorizes across the whole tile. For
+M in {4, 8} the compare tree is tiny.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_tile
+
+TILE_R = 32
+
+
+def _kernel(n, m, s_ref, out_ref):
+    s = s_ref[...]                       # (tile, d_in)
+    r, c = s.shape
+    sg = s.reshape(r, c // m, m)
+    a = sg[..., :, None]                 # candidate
+    b = sg[..., None, :]                 # competitor
+    idx = jax.lax.iota(jnp.int32, m)
+    earlier = idx[None, :] < idx[:, None]      # [cand, comp]: comp earlier
+    gt = (b > a).astype(jnp.int32).sum(-1)
+    eq_earlier = ((b == a) & earlier[None, None, :, :]).astype(jnp.int32).sum(-1)
+    rank = gt + eq_earlier
+    out_ref[...] = (rank < n).astype(s.dtype).reshape(r, c)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m"))
+def nm_mask(scores, n: int, m: int):
+    """scores: (d_out, d_in) f32 -> {0,1} f32 mask, N of every M kept."""
+    d_out, d_in = scores.shape
+    assert d_in % m == 0, (d_in, m)
+    tile = pick_tile(d_out)
+    kernel = functools.partial(_kernel, n, m)
+    return pl.pallas_call(
+        kernel,
+        grid=(d_out // tile,),
+        in_specs=[pl.BlockSpec((tile, d_in), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), scores.dtype),
+        interpret=True,
+    )(scores)

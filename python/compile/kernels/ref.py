@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the CORE correctness references: pytest (with hypothesis sweeps)
+asserts each Pallas kernel matches its oracle (allclose) over randomized
+shapes and values. Nothing here is ever AOT-exported.
+"""
+
+import jax.numpy as jnp
+
+
+def rgs_score_ref(w, g, xnorm, alpha):
+    """Paper Eq. 4: S_ij = (alpha * G_ij + ||X_j||_2) * |W_ij|.
+
+    w, g: (d_out, d_in); xnorm: (d_in,); alpha: scalar.
+    """
+    return (alpha * g + xnorm[None, :]) * jnp.abs(w)
+
+
+def nm_mask_ref(scores, n, m):
+    """N:M mask: within every contiguous group of `m` columns, keep the `n`
+    entries with the largest score (ties broken toward the lower index).
+    Returns a {0,1} float mask of the same shape.
+    """
+    r, c = scores.shape
+    assert c % m == 0
+    s = scores.reshape(r, c // m, m)
+    # rank = #(strictly greater) + #(equal at an earlier index)
+    a = s[..., :, None]   # candidate
+    b = s[..., None, :]   # competitors
+    idx = jnp.arange(m)
+    earlier = idx[None, :] < idx[:, None]       # competitor index < candidate
+    gt = (b > a).sum(-1)
+    eq_earlier = ((b == a) & earlier[None, :, :]).sum(-1)
+    rank = gt + eq_earlier
+    keep = (rank < n).astype(scores.dtype)
+    return keep.reshape(r, c)
+
+
+def masked_matmul_ref(x, w, mask):
+    """y = x @ (w * mask)^T ; x: (t, d_in), w/mask: (d_out, d_in)."""
+    return x @ (w * mask).T
+
+
+def rmsprop_update_ref(w, grad, v, mask, lr, rho=0.99, eps=1e-8):
+    """Fused masked RMSprop step (paper §4.2: RMSprop, lr 3e-7 at scale).
+
+    v' = rho*v + (1-rho)*g^2 ; w' = w - lr * g / sqrt(v' + eps), applied
+    only where mask==1 (masked-out weights are frozen at zero).
+    """
+    v2 = rho * v + (1.0 - rho) * grad * grad
+    step = lr * grad / (jnp.sqrt(v2) + eps)
+    return w - step * mask, v2
+
+
+def unstructured_mask_ref(scores, keep_fraction):
+    """Keep the top `keep_fraction` of entries per ROW (Wanda compares
+    per-output groups). Used as oracle for the rust implementation too."""
+    r, c = scores.shape
+    k = int(round(c * keep_fraction))
+    order = jnp.argsort(-scores, axis=1)
+    rows = jnp.arange(r)[:, None]
+    ranks = jnp.zeros_like(order).at[rows, order].set(jnp.arange(c)[None, :])
+    return (ranks < k).astype(scores.dtype)

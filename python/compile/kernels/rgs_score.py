@@ -1,0 +1,52 @@
+"""Pallas kernel: fused Regional-Gradient-Score computation (paper Eq. 4).
+
+S = (alpha * G + ||X||_2) * |W|
+
+GPU->TPU adaptation (DESIGN.md §4): instead of a three-pass elementwise
+pipeline over HBM, the kernel tiles W and G into VMEM row-blocks and keeps the
+broadcast `||X||` vector resident in VMEM across the whole sweep, producing the
+score tile in a single fused VPU pass. Always interpret=True here (CPU PJRT
+cannot execute Mosaic custom-calls); the BlockSpec structure is what we
+estimate real-TPU VMEM/MXU numbers from.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_tile
+
+# Row-tile height. 32 rows x d_in<=704 cols x 3 f32 operands stays well under
+# a 4 MiB VMEM budget for every weight shape in the ladder.
+TILE_R = 32
+
+
+def _kernel(w_ref, g_ref, xn_ref, alpha_ref, out_ref):
+    w = w_ref[...]
+    g = g_ref[...]
+    xn = xn_ref[...]          # (1, d_in) broadcast row
+    alpha = alpha_ref[0]
+    out_ref[...] = (alpha * g + xn) * jnp.abs(w)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def rgs_score(w, g, xnorm, alpha):
+    """w, g: (d_out, d_in) f32; xnorm: (d_in,) f32; alpha: scalar f32."""
+    d_out, d_in = w.shape
+    tile = pick_tile(d_out)
+    grid = (d_out // tile,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+            pl.BlockSpec((1, d_in), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, d_in), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), w.dtype),
+        interpret=True,
+    )(w, g, xnorm.reshape(1, d_in), jnp.asarray(alpha, w.dtype).reshape(1))

@@ -1,0 +1,51 @@
+"""Pallas kernel: fused masked RMSprop update (paper §4.2).
+
+v' = rho*v + (1-rho)*g^2 ;  w' = w - lr * g / (sqrt(v') + eps) * mask
+
+GPU->TPU adaptation (DESIGN.md §4): a naive implementation is four HBM
+passes (read w, g, v, write w', v'); the kernel fuses them into one VMEM
+round-trip per tile — read (w, g, v, mask) tiles, one VPU pass, write
+(w', v'). Masked-out weights stay frozen at zero so sparsity survives the
+update (the pipeline still re-prunes per Alg. 1 step 11, because scores of
+*kept* weights drift).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .tiling import pick_tile
+
+TILE_R = 32
+
+RHO = 0.99
+EPS = 1e-8
+
+
+def _kernel(w_ref, g_ref, v_ref, m_ref, lr_ref, w_out, v_out):
+    w = w_ref[...]
+    g = g_ref[...]
+    v = v_ref[...]
+    msk = m_ref[...]
+    lr = lr_ref[0]
+    v2 = RHO * v + (1.0 - RHO) * g * g
+    w_out[...] = w - lr * g / (jnp.sqrt(v2) + EPS) * msk
+    v_out[...] = v2
+
+
+def rmsprop_update(w, grad, v, mask, lr):
+    """All matrices (d_out, d_in) f32; lr scalar. Returns (w', v')."""
+    d_out, d_in = w.shape
+    tile = pick_tile(d_out)
+    spec = pl.BlockSpec((tile, d_in), lambda i: (i, 0))
+    return pl.pallas_call(
+        _kernel,
+        grid=(d_out // tile,),
+        in_specs=[spec, spec, spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((d_out, d_in), w.dtype),
+            jax.ShapeDtypeStruct((d_out, d_in), w.dtype),
+        ],
+        interpret=True,
+    )(w, grad, v, mask, jnp.asarray(lr, w.dtype).reshape(1))

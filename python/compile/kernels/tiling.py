@@ -1,0 +1,16 @@
+"""Shared tile-size selection for the Pallas kernels.
+
+All kernels sweep row tiles of the weight matrix through VMEM. The tile
+height is the largest divisor of d_out not exceeding MAX_TILE_R, so every
+shape in the model ladder (d in {64..192}, ffn in {176..528}) gets an exact
+grid with no padding logic inside the kernels.
+"""
+
+MAX_TILE_R = 32
+
+
+def pick_tile(d_out: int, max_tile: int = MAX_TILE_R) -> int:
+    for t in range(min(max_tile, d_out), 0, -1):
+        if d_out % t == 0:
+            return t
+    return 1

@@ -1,0 +1,365 @@
+"""L2: the paper's compute graphs in JAX, calling the Pallas kernels.
+
+Everything here is build-time only — aot.py lowers these functions to HLO
+text; the rust coordinator executes them via PJRT. The model is a byte-level
+LLaMA-architecture LM: RMSNorm, RoPE attention, SwiGLU MLP, untied head.
+
+Decoder-block parameter order (canonical, shared with rust via manifest):
+    ln1, wq, wk, wv, wo, ln2, wg, wu, wd
+The seven *prunable* weights (paper: every linear in the block) in order:
+    wq, wk, wv, wo, wg, wu, wd
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.masked_matmul import masked_matmul
+from .kernels.rmsprop import rmsprop_update
+
+EPS_NORM = 1e-5
+
+BLOCK_PARAM_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd")
+PRUNABLE = ("wq", "wk", "wv", "wo", "wg", "wu", "wd")
+
+
+# --- primitives --------------------------------------------------------------
+
+def rmsnorm(x, w):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + EPS_NORM) * w
+
+
+def _rope_tables(t: int, head_dim: int, base: float = 10000.0):
+    half = head_dim // 2
+    freqs = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.arange(t, dtype=jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)  # (t, half)
+
+
+def apply_rope(x, cos, sin):
+    """x: (b, t, heads, head_dim), rotate-half convention."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _attention(q, k, v, head_dim):
+    """q,k,v: (b, t, h, hd) -> (b, t, h, hd), causal."""
+    t = q.shape[1]
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(head_dim))
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(causal[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+# --- decoder block (dense path) ----------------------------------------------
+
+def block_fwd(cfg: ModelConfig, bp: dict, x):
+    """x: (b, t, d) -> (b, t, d). Dense forward; pruning is realized by
+    zeroed weights, so the same graph serves dense and pruned models."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = _rope_tables(t, hd)
+
+    xn = rmsnorm(x, bp["ln1"])
+    q = (xn @ bp["wq"].T).reshape(b, t, h, hd)
+    k = (xn @ bp["wk"].T).reshape(b, t, h, hd)
+    v = (xn @ bp["wv"].T).reshape(b, t, h, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    attn = _attention(q, k, v, hd).reshape(b, t, d)
+    x = x + attn @ bp["wo"].T
+
+    xm = rmsnorm(x, bp["ln2"])
+    gate = jax.nn.silu(xm @ bp["wg"].T)
+    up = xm @ bp["wu"].T
+    x = x + (gate * up) @ bp["wd"].T
+    return x
+
+
+# --- decoder block (masked path: Pallas sparse-aware GEMM) --------------------
+
+def _mm(x3, w, mask):
+    """(b,t,din) @ masked (dout,din)^T via the Pallas kernel."""
+    b, t, din = x3.shape
+    y = masked_matmul(x3.reshape(b * t, din), w, mask)
+    return y.reshape(b, t, -1)
+
+
+def block_fwd_masked(cfg: ModelConfig, bp: dict, masks: dict, x):
+    """Pruned forward: every linear goes through the Pallas masked GEMM.
+    Differentiable via the kernel's custom_vjp (used by the RO step)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = _rope_tables(t, hd)
+
+    xn = rmsnorm(x, bp["ln1"])
+    q = _mm(xn, bp["wq"], masks["wq"]).reshape(b, t, h, hd)
+    k = _mm(xn, bp["wk"], masks["wk"]).reshape(b, t, h, hd)
+    v = _mm(xn, bp["wv"], masks["wv"]).reshape(b, t, h, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    attn = _attention(q, k, v, hd).reshape(b, t, d)
+    x = x + _mm(attn, bp["wo"], masks["wo"])
+
+    xm = rmsnorm(x, bp["ln2"])
+    gate = jax.nn.silu(_mm(xm, bp["wg"], masks["wg"]))
+    up = _mm(xm, bp["wu"], masks["wu"])
+    x = x + _mm(gate * up, bp["wd"], masks["wd"])
+    return x
+
+
+# --- calibration statistics ---------------------------------------------------
+
+def block_stats(cfg: ModelConfig, bp: dict, x):
+    """Forward + per-input-channel squared norms for the four distinct
+    linear-layer input sites (Wanda's ||X_j||_2; rust accumulates chunks
+    and takes the final sqrt).
+
+    Returns: y, sq_qkv (d,), sq_o (d,), sq_mlp (d,), sq_down (ffn,).
+    """
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = _rope_tables(t, hd)
+
+    xn = rmsnorm(x, bp["ln1"])
+    sq_qkv = jnp.sum(xn * xn, axis=(0, 1))
+    q = (xn @ bp["wq"].T).reshape(b, t, h, hd)
+    k = (xn @ bp["wk"].T).reshape(b, t, h, hd)
+    v = (xn @ bp["wv"].T).reshape(b, t, h, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    attn = _attention(q, k, v, hd).reshape(b, t, d)
+    sq_o = jnp.sum(attn * attn, axis=(0, 1))
+    x = x + attn @ bp["wo"].T
+
+    xm = rmsnorm(x, bp["ln2"])
+    sq_mlp = jnp.sum(xm * xm, axis=(0, 1))
+    gate = jax.nn.silu(xm @ bp["wg"].T)
+    up = xm @ bp["wu"].T
+    act = gate * up
+    sq_down = jnp.sum(act * act, axis=(0, 1))
+    x = x + act @ bp["wd"].T
+    return x, sq_qkv, sq_o, sq_mlp, sq_down
+
+
+def block_hessian(cfg: ModelConfig, bp: dict, x):
+    """Forward + Gram matrices X^T X for the four input sites (SparseGPT's
+    layer Hessians; rust accumulates chunks and adds damping)."""
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    cos, sin = _rope_tables(t, hd)
+
+    def gram(a):
+        f = a.reshape(-1, a.shape[-1])
+        return f.T @ f
+
+    xn = rmsnorm(x, bp["ln1"])
+    h_qkv = gram(xn)
+    q = (xn @ bp["wq"].T).reshape(b, t, h, hd)
+    k = (xn @ bp["wk"].T).reshape(b, t, h, hd)
+    v = (xn @ bp["wv"].T).reshape(b, t, h, hd)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    attn = _attention(q, k, v, hd).reshape(b, t, d)
+    h_o = gram(attn)
+    x = x + attn @ bp["wo"].T
+
+    xm = rmsnorm(x, bp["ln2"])
+    h_mlp = gram(xm)
+    gate = jax.nn.silu(xm @ bp["wg"].T)
+    up = xm @ bp["wu"].T
+    act = gate * up
+    h_down = gram(act)
+    x = x + act @ bp["wd"].T
+    return x, h_qkv, h_o, h_mlp, h_down
+
+
+# --- regional gradients (paper Eq. 3) ------------------------------------------
+
+def rgs_sqgrad(cfg: ModelConfig, bp: dict, xb):
+    """Sum over the batch of squared per-sample gradients of the regional
+    loss L_RGS(x) = ||f(x)||_2 w.r.t. the seven prunable weights.
+
+    xb: (B, t, d). Rust accumulates chunk sums and finishes Eq. 3's
+    sqrt(sum/N). Returns the 7 matrices in PRUNABLE order.
+    """
+    mats = {k: bp[k] for k in PRUNABLE}
+    rest = {k: bp[k] for k in BLOCK_PARAM_NAMES if k not in PRUNABLE}
+
+    def loss_one(mats_, x):
+        y = block_fwd(cfg, {**mats_, **rest}, x[None])
+        return jnp.sqrt(jnp.sum(y * y) + 1e-12)
+
+    grads = jax.vmap(jax.grad(loss_one), in_axes=(None, 0))(mats, xb)
+    return tuple(jnp.sum(grads[k] ** 2, axis=0) for k in PRUNABLE)
+
+
+# --- regional optimization (paper Eq. 5, Alg. 1 steps 6-8) ----------------------
+
+def ro_step(cfg: ModelConfig, bp: dict, masks: dict, vstate: dict,
+            x, dense_y, lr):
+    """One RO round over an M-sample minibatch: MSE(dense_y, pruned fwd),
+    backprop through the masked Pallas GEMMs, fused masked-RMSprop update
+    of the seven matrices + both norm vectors. Returns (bp', vstate', loss)."""
+
+    def loss_fn(bp_):
+        y = block_fwd_masked(cfg, bp_, masks, x)
+        d = y - dense_y
+        return jnp.mean(d * d)
+
+    loss, grads = jax.value_and_grad(loss_fn)(bp)
+    new_bp, new_v = {}, {}
+    for name in BLOCK_PARAM_NAMES:
+        w, g, v = bp[name], grads[name], vstate[name]
+        if name in PRUNABLE:
+            w2, v2 = rmsprop_update(w, g, v, masks[name], lr)
+        else:  # norm vectors: dense update through the same fused kernel
+            ones = jnp.ones((1, w.shape[0]), w.dtype)
+            w2, v2 = rmsprop_update(w.reshape(1, -1), g.reshape(1, -1),
+                                    v.reshape(1, -1), ones, lr)
+            w2, v2 = w2.reshape(-1), v2.reshape(-1)
+        new_bp[name], new_v[name] = w2, v2
+    return new_bp, new_v, loss
+
+
+# --- embedding / head / full model ---------------------------------------------
+
+def embed_fwd(tokens, emb):
+    return emb[tokens]
+
+
+def head_loss(h, targets, ln_f, head):
+    """h: (b,t,d); targets: (b,t) i32 with -1 = ignore.
+    Returns (sum_nll, count) as f32 scalars."""
+    hn = rmsnorm(h, ln_f)
+    logits = hn @ head.T
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    valid = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid), jnp.sum(valid)
+
+
+def logits_all(h, ln_f, head):
+    hn = rmsnorm(h, ln_f)
+    return hn @ head.T
+
+
+def model_fwd(cfg: ModelConfig, params: dict, tokens):
+    """Full model: tokens (b,t) -> logits (b,t,V). Build-time use
+    (pretraining) + the full_grad / lora_step artifacts."""
+    x = embed_fwd(tokens, params["embed"])
+    for bp in params["blocks"]:
+        x = block_fwd(cfg, bp, x)
+    return logits_all(x, params["ln_f"], params["head"])
+
+
+def ce_loss(cfg: ModelConfig, params: dict, tokens, targets):
+    logits = model_fwd(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    tgt = jnp.maximum(targets, 0)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    valid = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+# --- GBLM baseline: full-model per-sample squared gradients ---------------------
+
+def full_sqgrad(cfg: ModelConfig, params: dict, tokens, targets):
+    """GBLM (Das et al., 2023): gradients of the full-model cross-entropy.
+    Returns, for every block in order, the 7 PRUNABLE sq-grad sums over the
+    batch — the expensive thing the paper's regional gradients avoid."""
+    mats = [{k: bp[k] for k in PRUNABLE} for bp in params["blocks"]]
+    rest = [{k: bp[k] for k in BLOCK_PARAM_NAMES if k not in PRUNABLE}
+            for bp in params["blocks"]]
+    fixed = {"embed": params["embed"], "ln_f": params["ln_f"],
+             "head": params["head"]}
+
+    def loss_one(mats_, tok, tgt):
+        blocks = [{**m, **r} for m, r in zip(mats_, rest)]
+        p = {**fixed, "blocks": blocks}
+        return ce_loss(cfg, p, tok[None], tgt[None])
+
+    grads = jax.vmap(jax.grad(loss_one), in_axes=(None, 0, 0))(
+        mats, tokens, targets)
+    out = []
+    for li in range(cfg.n_layers):
+        for k in PRUNABLE:
+            out.append(jnp.sum(grads[li][k] ** 2, axis=0))
+    return tuple(out)
+
+
+# --- LoRA fine-tuning step (Table 4) --------------------------------------------
+
+LORA_RANK = 4
+LORA_SCALE = 2.0  # alpha / rank
+
+
+def model_fwd_lora(cfg: ModelConfig, params, lora, tokens):
+    """LoRA on q and v projections of every block (paper §5.6 setup)."""
+    x = embed_fwd(tokens, params["embed"])
+    for li, bp in enumerate(params["blocks"]):
+        a_q, b_q = lora[f"a_q{li}"], lora[f"b_q{li}"]
+        a_v, b_v = lora[f"a_v{li}"], lora[f"b_v{li}"]
+        bp2 = dict(bp)
+        bp2["wq"] = bp["wq"] + LORA_SCALE * (b_q @ a_q)
+        bp2["wv"] = bp["wv"] + LORA_SCALE * (b_v @ a_v)
+        x = block_fwd(cfg, bp2, x)
+    return logits_all(x, params["ln_f"], params["head"])
+
+
+def lora_step(cfg: ModelConfig, params, lora, vstate, tokens, targets, lr):
+    """One RMSprop step on the LoRA adapters only (frozen base weights)."""
+
+    def loss_fn(lora_):
+        logits = model_fwd_lora(cfg, params, lora_, tokens)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tgt = jnp.maximum(targets, 0)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        valid = (targets >= 0).astype(jnp.float32)
+        return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+    loss, grads = jax.value_and_grad(loss_fn)(lora)
+    new_lora, new_v = {}, {}
+    for name, w in lora.items():
+        g, v = grads[name], vstate[name]
+        w2, v2 = rmsprop_update(w, g, v, jnp.ones_like(w), lr)
+        new_lora[name], new_v[name] = w2, v2
+    return new_lora, new_v, loss
+
+
+# --- parameter init (pretraining) ------------------------------------------------
+
+def init_params(cfg: ModelConfig, key):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+
+    def dense(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale)
+
+    blocks = []
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[li], 7)
+        s_d = cfg.d ** -0.5
+        s_f = cfg.ffn ** -0.5
+        blocks.append({
+            "ln1": jnp.ones(cfg.d, jnp.float32),
+            "wq": dense(ks[0], (cfg.d, cfg.d), s_d),
+            "wk": dense(ks[1], (cfg.d, cfg.d), s_d),
+            "wv": dense(ks[2], (cfg.d, cfg.d), s_d),
+            "wo": dense(ks[3], (cfg.d, cfg.d), s_d / (2 * cfg.n_layers) ** 0.5),
+            "ln2": jnp.ones(cfg.d, jnp.float32),
+            "wg": dense(ks[4], (cfg.ffn, cfg.d), s_d),
+            "wu": dense(ks[5], (cfg.ffn, cfg.d), s_d),
+            "wd": dense(ks[6], (cfg.d, cfg.ffn), s_f / (2 * cfg.n_layers) ** 0.5),
+        })
+    return {
+        "embed": dense(keys[-2], (cfg.vocab, cfg.d), 0.02),
+        "blocks": blocks,
+        "ln_f": jnp.ones(cfg.d, jnp.float32),
+        "head": dense(keys[-1], (cfg.vocab, cfg.d), cfg.d ** -0.5),
+    }

@@ -1,0 +1,123 @@
+"""Build-time pretraining of the model size ladder on the synthetic corpus.
+
+This stands in for the public LLaMA checkpoints (DESIGN.md §3): pruning a
+random-init model tells you nothing, so each size is trained with AdamW for a
+few hundred steps — enough that (a) held-out perplexity is far below the
+255-uniform baseline and (b) 50% pruning causes the realistic, method-ordered
+degradation the paper studies.
+
+Usage: python -m compile.pretrain --out ../artifacts [--sizes s0,s1] [--steps N]
+"""
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import SIZES
+from .model import ce_loss, init_params
+from .weights_io import save_weights
+
+BATCH = 8
+
+
+def batches(data: np.ndarray, t: int, batch: int, steps: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(data) - t - 1
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        wins = np.stack([data[i:i + t + 1] for i in idx]).astype(np.int32)
+        yield wins[:, :t], wins[:, 1:t + 1]
+
+
+def adamw_update(params, grads, m, v, step, lr, wd=0.01, b1=0.9, b2=0.98,
+                 eps=1e-9):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1 - b1 ** step
+    bc2 = 1 - b2 ** step
+
+    def upd(p, m_, v_):
+        return p - lr * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps) - lr * wd * p
+
+    return jax.tree.map(upd, params, m, v), m, v
+
+
+def train_one(cfg, data: np.ndarray, steps: int, lr: float, seed: int):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    m, v = zeros, jax.tree.map(jnp.zeros_like, params)
+
+    @jax.jit
+    def step_fn(params, m, v, tok, tgt, stepno, lr_now):
+        loss, grads = jax.value_and_grad(
+            lambda p: ce_loss(cfg, p, tok, tgt))(params)
+        gn = jnp.sqrt(sum(jnp.sum(g * g)
+                          for g in jax.tree.leaves(grads)) + 1e-12)
+        clip = jnp.minimum(1.0, 1.0 / gn)
+        grads = jax.tree.map(lambda g: g * clip, grads)
+        params, m, v = adamw_update(params, grads, m, v, stepno, lr_now)
+        return params, m, v, loss
+
+    t0 = time.time()
+    for i, (tok, tgt) in enumerate(
+            batches(data, cfg.seq, BATCH, steps, seed + 7)):
+        warm = min(1.0, (i + 1) / 40)
+        cos = 0.5 * (1 + np.cos(np.pi * i / steps))
+        lr_now = lr * warm * (0.1 + 0.9 * cos)
+        params, m, v, loss = step_fn(params, m, v, jnp.asarray(tok),
+                                     jnp.asarray(tgt), i + 1.0, lr_now)
+        if i % 50 == 0 or i == steps - 1:
+            print(f"  [{cfg.name}] step {i:4d} loss {float(loss):.4f} "
+                  f"lr {lr_now:.2e} ({time.time() - t0:.0f}s)")
+    return params
+
+
+def eval_ppl(cfg, params, data: np.ndarray, n_batches=8, seed=99):
+    tot, cnt = 0.0, 0.0
+    for tok, tgt in batches(data, cfg.seq, BATCH, n_batches, seed):
+        from .model import model_fwd
+        logits = model_fwd(cfg, params, jnp.asarray(tok))
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(
+            logp, jnp.asarray(tgt)[..., None], axis=-1)[..., 0]
+        tot += float(jnp.sum(nll))
+        cnt += nll.size
+    return float(np.exp(tot / cnt))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(SIZES))
+    ap.add_argument("--steps", type=int, default=350)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if not os.path.exists(os.path.join(args.out, "corpus_train.bin")):
+        print("generating corpus…")
+        corpus.write_all(args.out)
+    train = np.frombuffer(
+        open(os.path.join(args.out, "corpus_train.bin"), "rb").read(),
+        dtype=np.uint8)
+    val = np.frombuffer(
+        open(os.path.join(args.out, "corpus_val.bin"), "rb").read(),
+        dtype=np.uint8)
+
+    for name in args.sizes.split(","):
+        cfg = SIZES[name]
+        print(f"pretraining {name}: {cfg.param_count()/1e6:.2f}M params")
+        params = train_one(cfg, train, args.steps, args.lr, seed=42)
+        ppl = eval_ppl(cfg, params, val)
+        print(f"  [{name}] val ppl/byte: {ppl:.3f}")
+        save_weights(os.path.join(args.out, f"weights_{name}.bin"), cfg, params)
+
+
+if __name__ == "__main__":
+    main()

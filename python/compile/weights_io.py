@@ -1,0 +1,69 @@
+"""Weight-file format shared with the rust model store.
+
+Layout:  b"WPPW" | u32 LE header_len | JSON header | raw f32 LE tensor data.
+Header: {"meta": {...model config...},
+         "tensors": [{"name", "shape", "offset"}]}   # offset in f32 elements
+Tensor names: "embed", "blocks.<i>.<ln1|wq|wk|wv|wo|ln2|wg|wu|wd>",
+"ln_f", "head".
+"""
+
+import json
+import struct
+
+import numpy as np
+
+MAGIC = b"WPPW"
+
+
+def save_weights(path: str, cfg, params: dict):
+    entries, blobs, offset = [], [], 0
+
+    def put(name, arr):
+        nonlocal offset
+        a = np.asarray(arr, dtype=np.float32)
+        entries.append({"name": name, "shape": list(a.shape), "offset": offset})
+        blobs.append(a.tobytes())
+        offset += a.size
+
+    put("embed", params["embed"])
+    for i, bp in enumerate(params["blocks"]):
+        for k in ("ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"):
+            put(f"blocks.{i}.{k}", bp[k])
+    put("ln_f", params["ln_f"])
+    put("head", params["head"])
+
+    meta = {"name": cfg.name, "d": cfg.d, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "ffn": cfg.ffn, "vocab": cfg.vocab,
+            "seq": cfg.seq}
+    header = json.dumps({"meta": meta, "tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(header)))
+        f.write(header)
+        for b in blobs:
+            f.write(b)
+
+
+def load_weights(path: str):
+    """Returns (meta, {name: np.ndarray})  — for tests / round-trips."""
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC
+        (hlen,) = struct.unpack("<I", f.read(4))
+        header = json.loads(f.read(hlen))
+        data = np.frombuffer(f.read(), dtype=np.float32)
+    out = {}
+    for e in header["tensors"]:
+        n = int(np.prod(e["shape"]))
+        out[e["name"]] = data[e["offset"]:e["offset"] + n].reshape(e["shape"])
+    return header["meta"], out
+
+
+def params_from_flat(cfg, flat: dict):
+    """Rebuild the nested params dict from {name: array}."""
+    blocks = []
+    for i in range(cfg.n_layers):
+        blocks.append({k: flat[f"blocks.{i}.{k}"]
+                       for k in ("ln1", "wq", "wk", "wv", "wo",
+                                 "ln2", "wg", "wu", "wd")})
+    return {"embed": flat["embed"], "blocks": blocks,
+            "ln_f": flat["ln_f"], "head": flat["head"]}

@@ -1,0 +1,200 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps randomize shapes (within the divisibility constraints the
+model ladder obeys) and values; fixed-seed numpy cases cover the exact shapes
+the AOT artifacts bake in.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.masked_matmul import masked_matmul
+from compile.kernels.nm_mask import nm_mask
+from compile.kernels.rgs_score import rgs_score
+from compile.kernels.rmsprop import rmsprop_update
+from compile.kernels.tiling import pick_tile
+
+LADDER_SHAPES = [(64, 64), (176, 64), (64, 176), (128, 128), (352, 128),
+                 (128, 352), (192, 192), (528, 192), (192, 528)]
+
+
+def rnd(rng, shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# --- tiling ------------------------------------------------------------------
+
+def test_pick_tile_divides():
+    for d in [1, 2, 7, 32, 64, 96, 176, 264, 352, 528, 704]:
+        t = pick_tile(d)
+        assert d % t == 0 and 1 <= t <= 32
+
+
+@given(st.integers(min_value=1, max_value=4096))
+def test_pick_tile_any(d):
+    t = pick_tile(d)
+    assert d % t == 0 and t >= 1 and t <= min(32, d)
+
+
+# --- rgs_score -----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", LADDER_SHAPES)
+def test_rgs_score_ladder(shape):
+    rng = np.random.default_rng(hash(shape) % 2**31)
+    w, g = rnd(rng, shape), jnp.abs(rnd(rng, shape))
+    xn = jnp.abs(rnd(rng, (shape[1],)))
+    for alpha in (0.0, 1.0, 100.0, 1e6):
+        got = rgs_score(w, g, xn, alpha)
+        want = ref.rgs_score_ref(w, g, xn, alpha)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 12).map(lambda k: 8 * k),
+    cols=st.integers(1, 12).map(lambda k: 8 * k),
+    alpha=st.floats(0.0, 1e4),
+    seed=st.integers(0, 2**16),
+)
+def test_rgs_score_hypothesis(rows, cols, alpha, seed):
+    rng = np.random.default_rng(seed)
+    w, g = rnd(rng, (rows, cols)), jnp.abs(rnd(rng, (rows, cols)))
+    xn = jnp.abs(rnd(rng, (cols,)))
+    np.testing.assert_allclose(
+        rgs_score(w, g, xn, alpha), ref.rgs_score_ref(w, g, xn, alpha),
+        rtol=1e-5, atol=1e-6)
+
+
+# --- nm_mask ---------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", LADDER_SHAPES)
+@pytest.mark.parametrize("nm", [(2, 4), (4, 8), (1, 4), (2, 8), (6, 8)])
+def test_nm_mask_ladder(shape, nm):
+    n, m = nm
+    rng = np.random.default_rng(0)
+    s = jnp.abs(rnd(rng, shape))
+    got = np.asarray(nm_mask(s, n, m))
+    want = np.asarray(ref.nm_mask_ref(s, n, m))
+    np.testing.assert_array_equal(got, want)
+    # invariant: exactly n survivors per group of m
+    assert np.all(got.reshape(shape[0], -1, m).sum(-1) == n)
+
+
+def test_nm_mask_ties_prefer_lower_index():
+    s = jnp.asarray([[1.0, 1.0, 1.0, 1.0, 0.0, 2.0, 2.0, 2.0]])
+    got = np.asarray(nm_mask(s, 2, 4))
+    np.testing.assert_array_equal(got, [[1, 1, 0, 0, 0, 1, 1, 0]])
+
+
+def test_nm_mask_keeps_largest():
+    rng = np.random.default_rng(3)
+    s = np.abs(rng.normal(size=(16, 32)).astype(np.float32))
+    got = np.asarray(nm_mask(jnp.asarray(s), 2, 4))
+    sg = s.reshape(16, 8, 4)
+    mg = got.reshape(16, 8, 4)
+    kept_min = np.where(mg == 1, sg, np.inf).min(-1)
+    dropped_max = np.where(mg == 0, sg, -np.inf).max(-1)
+    assert np.all(kept_min >= dropped_max)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.integers(1, 8).map(lambda k: 4 * k),
+    groups=st.integers(1, 16),
+    nm=st.sampled_from([(2, 4), (4, 8), (1, 4), (3, 4), (2, 8)]),
+    seed=st.integers(0, 2**16),
+)
+def test_nm_mask_hypothesis(rows, groups, nm, seed):
+    n, m = nm
+    rng = np.random.default_rng(seed)
+    s = jnp.abs(rnd(rng, (rows, groups * m)))
+    got = np.asarray(nm_mask(s, n, m))
+    np.testing.assert_array_equal(got, np.asarray(ref.nm_mask_ref(s, n, m)))
+    assert np.all(got.reshape(rows, groups, m).sum(-1) == n)
+
+
+# --- masked_matmul -----------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", LADDER_SHAPES)
+def test_masked_matmul_ladder(shape):
+    d_out, d_in = shape
+    rng = np.random.default_rng(1)
+    x = rnd(rng, (24, d_in))
+    w = rnd(rng, shape)
+    mask = np.asarray(ref.nm_mask_ref(jnp.abs(w), 2, 4))
+    got = masked_matmul(x, w, jnp.asarray(mask))
+    want = ref.masked_matmul_ref(x, w, jnp.asarray(mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_matmul_grad_respects_mask():
+    rng = np.random.default_rng(2)
+    x, w = rnd(rng, (8, 64)), rnd(rng, (64, 64))
+    mask = jnp.asarray(ref.nm_mask_ref(jnp.abs(w), 2, 4))
+
+    gw = jax.grad(lambda w_: jnp.sum(masked_matmul(x, w_, mask) ** 2))(w)
+    assert np.all(np.asarray(gw)[np.asarray(mask) == 0] == 0.0)
+    gw_ref = jax.grad(
+        lambda w_: jnp.sum(ref.masked_matmul_ref(x, w_, mask) ** 2))(w)
+    np.testing.assert_allclose(gw, gw_ref, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t=st.integers(1, 32),
+    d_in=st.integers(1, 10).map(lambda k: 8 * k),
+    d_out=st.integers(1, 10).map(lambda k: 8 * k),
+    seed=st.integers(0, 2**16),
+)
+def test_masked_matmul_hypothesis(t, d_in, d_out, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rnd(rng, (t, d_in)), rnd(rng, (d_out, d_in))
+    mask = (rnd(rng, (d_out, d_in)) > 0).astype(jnp.float32)
+    np.testing.assert_allclose(
+        masked_matmul(x, w, mask), ref.masked_matmul_ref(x, w, mask),
+        rtol=1e-4, atol=1e-4)
+
+
+# --- rmsprop_update ------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", LADDER_SHAPES)
+def test_rmsprop_ladder(shape):
+    rng = np.random.default_rng(4)
+    w, g = rnd(rng, shape), rnd(rng, shape)
+    v = jnp.abs(rnd(rng, shape))
+    mask = (rnd(rng, shape) > 0).astype(jnp.float32)
+    w2, v2 = rmsprop_update(w, g, v, mask, 3e-4)
+    rw, rv = ref.rmsprop_update_ref(w, g, v, mask, 3e-4)
+    np.testing.assert_allclose(v2, rv, rtol=1e-6)
+    np.testing.assert_allclose(w2, rw, rtol=1e-5, atol=1e-7)
+
+
+def test_rmsprop_masked_frozen():
+    rng = np.random.default_rng(5)
+    w, g = rnd(rng, (32, 64)), rnd(rng, (32, 64))
+    v = jnp.zeros((32, 64))
+    mask = jnp.zeros((32, 64))
+    w2, _ = rmsprop_update(w, g, v, mask, 1e-2)
+    np.testing.assert_array_equal(np.asarray(w2), np.asarray(w))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    d_out=st.integers(1, 12).map(lambda k: 4 * k),
+    d_in=st.integers(1, 12).map(lambda k: 4 * k),
+    lr=st.floats(1e-7, 1e-1),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsprop_hypothesis(d_out, d_in, lr, seed):
+    rng = np.random.default_rng(seed)
+    w, g = rnd(rng, (d_out, d_in)), rnd(rng, (d_out, d_in))
+    v = jnp.abs(rnd(rng, (d_out, d_in)))
+    mask = (rnd(rng, (d_out, d_in)) > 0).astype(jnp.float32)
+    w2, v2 = rmsprop_update(w, g, v, mask, lr)
+    rw, rv = ref.rmsprop_update_ref(w, g, v, mask, lr)
+    np.testing.assert_allclose(v2, rv, rtol=1e-5, atol=1e-8)
+    np.testing.assert_allclose(w2, rw, rtol=1e-4, atol=1e-7)

@@ -1,0 +1,190 @@
+"""L2 correctness: model graphs, regional losses, RO step behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.configs import SIZES
+from compile.kernels import ref
+
+CFG = SIZES["s0"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def x():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(4, 16, CFG.d)).astype(np.float32))
+
+
+def ones_masks(cfg=CFG):
+    shapes = {"wq": (cfg.d, cfg.d), "wk": (cfg.d, cfg.d),
+              "wv": (cfg.d, cfg.d), "wo": (cfg.d, cfg.d),
+              "wg": (cfg.ffn, cfg.d), "wu": (cfg.ffn, cfg.d),
+              "wd": (cfg.d, cfg.ffn)}
+    return {k: jnp.ones(v, jnp.float32) for k, v in shapes.items()}
+
+
+def test_block_fwd_shape(params, x):
+    y = M.block_fwd(CFG, params["blocks"][0], x)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_masked_equals_dense_with_ones_mask(params, x):
+    bp = params["blocks"][0]
+    y_dense = M.block_fwd(CFG, bp, x)
+    y_masked = M.block_fwd_masked(CFG, bp, ones_masks(), x)
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_masked),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_masked_equals_zeroed_weights(params, x):
+    """Masked forward == dense forward on explicitly zeroed weights — the
+    equivalence the rust pipeline relies on."""
+    bp = params["blocks"][0]
+    masks = {k: jnp.asarray(ref.nm_mask_ref(jnp.abs(bp[k]), 2, 4))
+             for k in M.PRUNABLE}
+    zeroed = dict(bp)
+    for k in M.PRUNABLE:
+        zeroed[k] = bp[k] * masks[k]
+    y1 = M.block_fwd_masked(CFG, bp, masks, x)
+    y2 = M.block_fwd(CFG, zeroed, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_block_stats_matches_manual(params, x):
+    bp = params["blocks"][0]
+    y, sq_qkv, sq_o, sq_mlp, sq_down = M.block_stats(CFG, bp, x)
+    y2 = M.block_fwd(CFG, bp, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), rtol=1e-5)
+    xn = M.rmsnorm(x, bp["ln1"])
+    np.testing.assert_allclose(
+        np.asarray(sq_qkv),
+        np.asarray(jnp.sum(xn * xn, axis=(0, 1))), rtol=1e-4)
+    assert sq_down.shape == (CFG.ffn,)
+    assert np.all(np.asarray(sq_qkv) >= 0)
+
+
+def test_block_hessian_psd(params, x):
+    bp = params["blocks"][0]
+    _, h_qkv, h_o, h_mlp, h_down = M.block_hessian(CFG, bp, x)
+    for h in (h_qkv, h_o, h_mlp, h_down):
+        a = np.asarray(h)
+        np.testing.assert_allclose(a, a.T, rtol=1e-4, atol=1e-4)
+        evals = np.linalg.eigvalsh(a)
+        assert evals.min() > -1e-2  # PSD up to float32 noise
+
+
+def test_rgs_sqgrad_matches_autodiff(params, x):
+    """Vectorized per-sample sq-grads == loop of per-sample jax.grad."""
+    bp = params["blocks"][0]
+    got = M.rgs_sqgrad(CFG, bp, x)
+
+    def loss_one(w, xi, name):
+        bp2 = dict(bp)
+        bp2[name] = w
+        y = M.block_fwd(CFG, bp2, xi[None])
+        return jnp.sqrt(jnp.sum(y * y) + 1e-12)
+
+    for ki, name in enumerate(M.PRUNABLE):
+        acc = jnp.zeros_like(bp[name])
+        for i in range(x.shape[0]):
+            g = jax.grad(loss_one)(bp[name], x[i], name)
+            acc = acc + g * g
+        np.testing.assert_allclose(np.asarray(got[ki]), np.asarray(acc),
+                                   rtol=2e-2, atol=1e-5)
+
+
+def test_ro_step_reduces_mse(params, x):
+    """Several RO steps must reduce the dense-vs-pruned MSE (the paper's
+    Eq. 5 objective) — the central claim of regional optimization."""
+    bp = params["blocks"][0]
+    masks = {k: jnp.asarray(ref.nm_mask_ref(jnp.abs(bp[k]), 2, 4))
+             for k in M.PRUNABLE}
+    dense_y = M.block_fwd(CFG, bp, x)
+    # start from masked weights (as the rust pipeline does)
+    cur = dict(bp)
+    for k in M.PRUNABLE:
+        cur[k] = bp[k] * masks[k]
+    vstate = {k: jnp.zeros_like(v) for k, v in cur.items()}
+
+    losses = []
+    for _ in range(6):
+        cur, vstate, loss = M.ro_step(CFG, cur, masks, vstate, x, dense_y,
+                                      lr=1e-3)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+    # sparsity must survive the updates
+    for k in M.PRUNABLE:
+        assert np.all(np.asarray(cur[k])[np.asarray(masks[k]) == 0] == 0.0)
+
+
+def test_head_loss_uniform_logits(params):
+    """Untrained-head sanity: loss close to log(V) for random hidden."""
+    rng = np.random.default_rng(1)
+    h = jnp.asarray(rng.normal(size=(2, 8, CFG.d)).astype(np.float32))
+    tgt = jnp.asarray(rng.integers(0, CFG.vocab, size=(2, 8)).astype(np.int32))
+    s, c = M.head_loss(h, tgt, jnp.ones(CFG.d), jnp.zeros((CFG.vocab, CFG.d)))
+    assert float(c) == 16.0
+    np.testing.assert_allclose(float(s) / float(c), np.log(CFG.vocab),
+                               rtol=1e-5)
+
+
+def test_head_loss_ignore_index(params):
+    rng = np.random.default_rng(2)
+    h = jnp.asarray(rng.normal(size=(2, 8, CFG.d)).astype(np.float32))
+    tgt = -jnp.ones((2, 8), jnp.int32)
+    s, c = M.head_loss(h, tgt, jnp.ones(CFG.d),
+                       jnp.zeros((CFG.vocab, CFG.d)))
+    assert float(c) == 0.0 and float(s) == 0.0
+
+
+def test_full_sqgrad_shapes(params):
+    rng = np.random.default_rng(3)
+    tok = jnp.asarray(rng.integers(0, 255, size=(2, 16)).astype(np.int32))
+    tgt = jnp.asarray(rng.integers(0, 255, size=(2, 16)).astype(np.int32))
+    out = M.full_sqgrad(CFG, params, tok, tgt)
+    assert len(out) == CFG.n_layers * 7
+    assert out[0].shape == (CFG.d, CFG.d)
+    assert all(np.all(np.asarray(o) >= 0) for o in out)
+
+
+def test_lora_step_reduces_loss(params):
+    rng = np.random.default_rng(4)
+    tok = jnp.asarray(rng.integers(0, 255, size=(4, 16)).astype(np.int32))
+    tgt = jnp.asarray(rng.integers(0, 255, size=(4, 16)).astype(np.int32))
+    r = M.LORA_RANK
+    lora, vs = {}, {}
+    key = jax.random.PRNGKey(7)
+    for li in range(CFG.n_layers):
+        for mod in ("q", "v"):
+            key, k1 = jax.random.split(key)
+            lora[f"a_{mod}{li}"] = 0.01 * jax.random.normal(
+                k1, (r, CFG.d), jnp.float32)
+            lora[f"b_{mod}{li}"] = jnp.zeros((CFG.d, r), jnp.float32)
+    vs = {k: jnp.zeros_like(v) for k, v in lora.items()}
+    losses = []
+    for _ in range(5):
+        lora, vs, loss = M.lora_step(CFG, params, lora, vs, tok, tgt, 1e-2)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0]
+
+
+def test_weights_roundtrip(tmp_path, params):
+    from compile.weights_io import load_weights, params_from_flat, save_weights
+    p = str(tmp_path / "w.bin")
+    save_weights(p, CFG, params)
+    meta, flat = load_weights(p)
+    assert meta["d"] == CFG.d and meta["n_layers"] == CFG.n_layers
+    re = params_from_flat(CFG, flat)
+    np.testing.assert_array_equal(np.asarray(params["embed"]), re["embed"])
+    np.testing.assert_array_equal(
+        np.asarray(params["blocks"][1]["wg"]), re["blocks"][1]["wg"])

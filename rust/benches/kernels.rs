@@ -1,0 +1,125 @@
+//! Kernel-level benches (in-tree harness; criterion is unavailable in the
+//! offline build): the Pallas score and N:M mask artifacts vs their native
+//! rust counterparts, the block forward, the regional-gradient pass and
+//! the RO step — the building blocks every paper table exercises.
+//!
+//! Run with `cargo bench --bench kernels`.
+
+use wandapp::bench::Group;
+use wandapp::model::load_size;
+use wandapp::runtime::Runtime;
+use wandapp::tensor::{Tensor, Value};
+
+fn block_inputs(w: &wandapp::model::Weights, x: &Tensor) -> Vec<Value> {
+    let mut v: Vec<Value> = vec![x.clone().into()];
+    for p in w.block(0) {
+        v.push(p.clone().into());
+    }
+    v
+}
+
+fn main() {
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first");
+    let w = load_size(&rt, "s2").unwrap();
+    let d = w.cfg.d;
+
+    // --- Pallas score kernel vs native formula --------------------------
+    let wt = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.37).sin()).collect(),
+    );
+    let g = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.11).cos().abs()).collect(),
+    );
+    let xn = Tensor::ones(&[d]);
+    let alpha = Tensor::new(vec![1], vec![100.0]);
+    rt.warmup("s2_score_sq").unwrap();
+
+    let mut grp = Group::new("score kernel (s2, d x d)");
+    grp.bench("pallas_score_sq", || {
+        rt.exec_f32(
+            "s2_score_sq",
+            &[
+                wt.clone().into(),
+                g.clone().into(),
+                xn.clone().into(),
+                alpha.clone().into(),
+            ],
+        )
+        .unwrap();
+    });
+    grp.bench("native_score_sq", || {
+        let mut out = vec![0.0f32; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                out[i * d + j] = wt.data[i * d + j].abs()
+                    * (100.0 * g.data[i * d + j] + xn.data[j]);
+            }
+        }
+        std::hint::black_box(&out);
+    });
+
+    // --- N:M mask: Pallas kernel vs native ------------------------------
+    rt.warmup("s2_mask24_sq").unwrap();
+    let scores = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.7).sin().abs()).collect(),
+    );
+    let mut grp = Group::new("2:4 mask selection (s2, d x d)");
+    grp.bench("pallas_mask24_sq", || {
+        rt.exec_f32("s2_mask24_sq", &[scores.clone().into()]).unwrap();
+    });
+    grp.bench("native_mask24_sq", || {
+        std::hint::black_box(wandapp::sparsity::nm_mask_native(&scores, 2, 4));
+    });
+
+    // --- block forward / stats / rgs grad / ro step ----------------------
+    let x = Tensor::filled(&[8, 64, d], 0.05);
+    for key in [
+        "s2_block_fwd_t64",
+        "s2_block_stats_t64",
+        "s2_rgs_grad_t64",
+        "s2_block_hessian_t64",
+    ] {
+        rt.warmup(key).unwrap();
+    }
+    let mut grp = Group::new("block passes (s2, B=8, T=64)").budget(2.0);
+    grp.bench("block_fwd", || {
+        rt.exec_f32("s2_block_fwd_t64", &block_inputs(&w, &x)).unwrap();
+    });
+    grp.bench("block_stats", || {
+        rt.exec_f32("s2_block_stats_t64", &block_inputs(&w, &x)).unwrap();
+    });
+    grp.bench("rgs_grad", || {
+        rt.exec_f32("s2_rgs_grad_t64", &block_inputs(&w, &x)).unwrap();
+    });
+    grp.bench("block_hessian", || {
+        rt.exec_f32("s2_block_hessian_t64", &block_inputs(&w, &x)).unwrap();
+    });
+
+    // --- ro_step ---------------------------------------------------------
+    rt.warmup("s2_ro_step_t64").unwrap();
+    let m_ro = rt.manifest.consts.m_ro;
+    let xr = Tensor::filled(&[m_ro, 64, d], 0.05);
+    let yr = Tensor::filled(&[m_ro, 64, d], 0.05);
+    let mut inputs: Vec<Value> = vec![xr.into(), yr.into()];
+    for p in w.block(0) {
+        inputs.push(p.clone().into());
+    }
+    for name in wandapp::PRUNABLE {
+        let shape = &w.get(&format!("blocks.0.{name}")).shape;
+        inputs.push(Tensor::ones(shape).into());
+    }
+    for p in w.block(0) {
+        inputs.push(Tensor::zeros(&p.shape).into());
+    }
+    inputs.push(Tensor::new(vec![1], vec![1e-4]).into());
+    let mut grp = Group::new("RO step (s2, M=8, T=64)").budget(3.0);
+    grp.bench("ro_step", || {
+        rt.exec_f32("s2_ro_step_t64", &inputs).unwrap();
+    });
+
+    println!("\n(see EXPERIMENTS.md §Perf for tracked before/after numbers)");
+}

@@ -1,0 +1,99 @@
+//! End-to-end pipeline benches (in-tree harness): one per paper table
+//! family — full pruning under each method (Table 1 / Table 3 cost), the
+//! SparseGPT OBS solve, perplexity evaluation (every table's readout), the
+//! zero-shot task suite (Table 2), and the latency simulator sweep
+//! (Tables 7/9).
+//!
+//! Run with `cargo bench --bench pipeline`.
+
+use wandapp::bench::Group;
+use wandapp::coordinator::Coordinator;
+use wandapp::eval::perplexity_split;
+use wandapp::latency::{
+    sparsity_reduction, Format, HwProfile, LlmGeometry, Workload,
+};
+use wandapp::model::load_size;
+use wandapp::pruner::{sparsegpt::sparsegpt_prune, Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+use wandapp::tensor::Tensor;
+
+fn main() {
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first");
+
+    // --- per-method block pruning on s0 (Table 1/3 cost shape) ----------
+    let mut grp = Group::new("prune s0, 2:4 (16 calib samples)").budget(5.0);
+    for method in [
+        Method::Magnitude,
+        Method::Wanda,
+        Method::WandaPPRgs,
+        Method::SparseGpt,
+    ] {
+        grp.bench(method.label(), || {
+            let mut w = load_size(&rt, "s0").unwrap();
+            let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+            opts.n_calib = 16;
+            Coordinator::new(&rt).prune(&mut w, &opts).unwrap();
+        });
+    }
+    let mut grp = Group::new("wanda++ full (s0, K=2)").budget(8.0);
+    grp.bench("wanda++_k2", || {
+        let mut w = load_size(&rt, "s0").unwrap();
+        let mut opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
+        opts.n_calib = 16;
+        opts.k_iters = 2;
+        Coordinator::new(&rt).prune(&mut w, &opts).unwrap();
+    });
+
+    // --- SparseGPT OBS solve (native linalg) ------------------------------
+    let d = 128;
+    let mut h = Tensor::zeros(&[d, d]);
+    for i in 0..d {
+        for j in 0..d {
+            h.data[i * d + j] = if i == j { 2.0 } else { 0.01 };
+        }
+    }
+    let w0 = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.31).sin()).collect(),
+    );
+    let mut grp = Group::new("sparsegpt OBS solve").budget(2.0);
+    grp.bench("obs_128x128_2:4", || {
+        let mut w = w0.clone();
+        std::hint::black_box(sparsegpt_prune(&mut w, &h, Pattern::NofM(2, 4)));
+    });
+
+    // --- perplexity eval ---------------------------------------------------
+    let w = load_size(&rt, "s0").unwrap();
+    perplexity_split(&rt, &w, "val", 1).unwrap(); // compile warmup
+    let mut grp = Group::new("perplexity eval").budget(3.0);
+    grp.bench("ppl_s0_4batches", || {
+        perplexity_split(&rt, &w, "val", 4).unwrap();
+    });
+
+    // --- zero-shot task scoring -------------------------------------------
+    let mut grp = Group::new("zero-shot tasks (s0)").budget(5.0);
+    grp.bench("tasks_10ex", || {
+        wandapp::eval::run_tasks(&rt, &w, 10).unwrap();
+    });
+
+    // --- latency simulator --------------------------------------------------
+    let hw = HwProfile::h100();
+    let g = LlmGeometry::llama7b();
+    let mut grp = Group::new("latency roofline sim").budget(0.5);
+    grp.bench("full_sweep_16cfg", || {
+        let mut acc = 0.0;
+        for fmt in [Format::FP16, Format::FP8] {
+            for batch in [1.0, 4.0] {
+                for in_len in [128.0, 1024.0, 2048.0, 4096.0] {
+                    let w = Workload { batch, input_len: in_len, output_len: 64.0 };
+                    acc += sparsity_reduction(&hw, &g, fmt, w).ttft_pct;
+                }
+            }
+        }
+        std::hint::black_box(acc);
+    });
+
+    println!("\n(see EXPERIMENTS.md §Perf for tracked before/after numbers)");
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmark substrate (criterion is unavailable in the offline
+//! build): warmup + timed iterations with mean / stddev / min reporting,
+//! plus a tiny group API that mirrors how the bench binaries are written.
+//! `cargo bench` invokes the bench targets, which drive this harness.
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let (scale, unit) = unit_for(self.mean_secs);
+        format!(
+            "{:<42} {:>10.3} {unit} (±{:.3}, min {:.3}, n={})",
+            self.name,
+            self.mean_secs * scale,
+            self.stddev_secs * scale,
+            self.min_secs * scale,
+            self.iters
+        )
+    }
+}
+
+fn unit_for(secs: f64) -> (f64, &'static str) {
+    if secs < 1e-6 {
+        (1e9, "ns")
+    } else if secs < 1e-3 {
+        (1e6, "µs")
+    } else if secs < 1.0 {
+        (1e3, "ms")
+    } else {
+        (1.0, "s ")
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to the target time budget.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, 2, 0.75, &mut f)
+}
+
+/// Benchmark with explicit warmup iterations and measurement budget.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    budget_secs: f64,
+    f: &mut F,
+) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // estimate cost
+    let t0 = Instant::now();
+    f();
+    let est = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_secs / est) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean).powi(2)).sum::<f64>()
+        / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_secs: mean,
+        stddev_secs: var.sqrt(),
+        min_secs: min,
+    };
+    println!("{}", r.report());
+    r
+}
+
+/// Named group of benches (prints a header, collects results).
+pub struct Group {
+    pub name: String,
+    pub results: Vec<BenchResult>,
+    budget: f64,
+}
+
+impl Group {
+    pub fn new(name: &str) -> Self {
+        println!("\n=== {name} ===");
+        Self { name: name.to_string(), results: Vec::new(), budget: 0.75 }
+    }
+
+    pub fn budget(mut self, secs: f64) -> Self {
+        self.budget = secs;
+        self
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &mut Self {
+        let r = bench_with(name, 1, self.budget, &mut f);
+        self.results.push(r);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let mut counter = 0u64;
+        let r = bench_with(
+            "noop",
+            1,
+            0.01,
+            &mut || {
+                counter = counter.wrapping_add(1);
+                std::hint::black_box(counter);
+            },
+        );
+        assert!(r.iters >= 3);
+        assert!(r.mean_secs >= 0.0 && r.min_secs <= r.mean_secs * 1.01);
+    }
+
+    #[test]
+    fn unit_scaling() {
+        assert_eq!(unit_for(2e-9).1, "ns");
+        assert_eq!(unit_for(2e-6).1, "µs");
+        assert_eq!(unit_for(2e-3).1, "ms");
+        assert_eq!(unit_for(2.0).1, "s ");
+    }
+}

@@ -1,0 +1,185 @@
+//! Byte-exact memory accounting for the pruning pipeline (Table 3's
+//! memory column). Tracks the working set the coordinator actually holds:
+//! the streamed calibration chunks, one block's parameters / masks /
+//! optimizer state / gradients, SparseGPT Hessians, and — for GBLM — the
+//! full model plus all its gradient accumulators, which is precisely the
+//! asymmetry the paper's regional design removes.
+
+use crate::coordinator::{BlockReport, CalibStream};
+use crate::model::{ModelConfig, Weights};
+use crate::pruner::{BlockGrads, PruneOptions};
+use crate::tensor::Tensor;
+
+const F32: usize = 4;
+
+#[derive(Debug, Clone, Default)]
+pub struct MemoryBreakdown {
+    /// Calibration hidden states + dense targets, bytes.
+    pub calibration: usize,
+    /// Peak single-block working set (params + masks + v-state + grads).
+    pub block_peak: usize,
+    /// SparseGPT Hessians, if used.
+    pub hessians: usize,
+    /// Full model + full-gradient accumulators (GBLM only).
+    pub full_model: usize,
+}
+
+impl MemoryBreakdown {
+    pub fn peak(&self) -> usize {
+        self.calibration + self.block_peak + self.hessians + self.full_model
+    }
+}
+
+/// Outcome of one pruning run.
+#[derive(Debug, Clone)]
+pub struct PruneReport {
+    pub method: String,
+    pub pattern: String,
+    pub model: String,
+    pub secs: f64,
+    pub memory: MemoryBreakdown,
+    pub blocks: Vec<BlockReport>,
+    pub final_sparsity: f64,
+}
+
+impl PruneReport {
+    pub fn new(opts: &PruneOptions, cfg: &ModelConfig) -> Self {
+        Self {
+            method: opts.method.label().to_string(),
+            pattern: opts.pattern.label(),
+            model: cfg.name.clone(),
+            secs: 0.0,
+            memory: MemoryBreakdown::default(),
+            blocks: Vec::new(),
+            final_sparsity: 0.0,
+        }
+    }
+
+    pub fn account_calibration(&mut self, calib: &CalibStream) {
+        // x chunks and (during RO) an equal-sized dense-target set.
+        let xs: usize = calib.xs.iter().map(|t| t.numel() * F32).sum();
+        self.memory.calibration = xs * 2;
+    }
+
+    pub fn account_block(&mut self, bp: &[Tensor], grads: Option<&BlockGrads>) {
+        let params: usize = bp.iter().map(|t| t.numel() * F32).sum();
+        let grad_bytes: usize = grads
+            .map(|g| g.sq.iter().map(|t| t.numel() * F32).sum())
+            .unwrap_or(0);
+        // params + masks (7 of the 9 tensors, conservatively all 9)
+        let set = params * 2 + grad_bytes;
+        self.memory.block_peak = self.memory.block_peak.max(set);
+    }
+
+    pub fn account_ro(&mut self, bp: &[Tensor]) {
+        // RMSprop v-state mirrors the block parameters.
+        let params: usize = bp.iter().map(|t| t.numel() * F32).sum();
+        self.memory.block_peak = self.memory.block_peak.max(params * 3);
+    }
+
+    pub fn account_sparsegpt(&mut self, d: usize, ffn: usize) {
+        // three d x d Grams + one ffn x ffn, plus the f64 inverse factor
+        let grams = (3 * d * d + ffn * ffn) * F32;
+        let chol = ffn * ffn * 8;
+        self.memory.hessians = self.memory.hessians.max(grams + chol);
+    }
+
+    pub fn account_full_model(&mut self, w: &Weights) {
+        // GBLM: the whole model resident + one sq-grad accumulator per
+        // prunable matrix.
+        let model: usize = w.param_count() * F32;
+        let grads: usize = w.prunable_count() * F32;
+        self.memory.full_model = model + grads;
+    }
+
+    /// Mean final RO loss across blocks (diagnostic).
+    pub fn mean_final_ro_loss(&self) -> Option<f32> {
+        let finals: Vec<f32> = self
+            .blocks
+            .iter()
+            .filter_map(|b| b.ro_losses.last().copied())
+            .collect();
+        if finals.is_empty() {
+            None
+        } else {
+            Some(finals.iter().sum::<f32>() / finals.len() as f32)
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} {} on {}: {:.1}s, peak {:.1} MiB, sparsity {:.3}",
+            self.method,
+            self.pattern,
+            self.model,
+            self.secs,
+            self.memory.peak() as f64 / (1 << 20) as f64,
+            self.final_sparsity
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::{Method, PruneOptions};
+    use crate::sparsity::Pattern;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d: 8,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 16,
+            vocab: 32,
+            seq: 8,
+        }
+    }
+
+    #[test]
+    fn block_peak_takes_max() {
+        let mut r = PruneReport::new(
+            &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
+            &cfg(),
+        );
+        let small = vec![Tensor::zeros(&[4, 4])];
+        let big = vec![Tensor::zeros(&[16, 16])];
+        r.account_block(&small, None);
+        r.account_block(&big, None);
+        r.account_block(&small, None);
+        assert_eq!(r.memory.block_peak, 16 * 16 * 4 * 2);
+    }
+
+    #[test]
+    fn gblm_dominates_memory() {
+        // The full-model term must dwarf the single-block term — the
+        // paper's Table 3 asymmetry.
+        let mut r = PruneReport::new(
+            &PruneOptions::new(Method::Gblm, Pattern::NofM(2, 4)),
+            &cfg(),
+        );
+        let bp = vec![Tensor::zeros(&[8, 8]); 9];
+        r.account_block(&bp, None);
+        let w = {
+            let mut map = std::collections::HashMap::new();
+            map.insert("embed".into(), Tensor::zeros(&[32, 8]));
+            for i in 0..2 {
+                for k in crate::BLOCK_PARAMS {
+                    let shape: Vec<usize> = match k {
+                        "ln1" | "ln2" => vec![8],
+                        "wg" | "wu" => vec![16, 8],
+                        "wd" => vec![8, 16],
+                        _ => vec![8, 8],
+                    };
+                    map.insert(format!("blocks.{i}.{k}"), Tensor::zeros(&shape));
+                }
+            }
+            map.insert("ln_f".into(), Tensor::zeros(&[8]));
+            map.insert("head".into(), Tensor::zeros(&[32, 8]));
+            Weights { cfg: cfg(), map }
+        };
+        r.account_full_model(&w);
+        assert!(r.memory.full_model > r.memory.block_peak);
+    }
+}

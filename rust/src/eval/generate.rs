@@ -1,0 +1,84 @@
+//! Byte-level text generation from a (possibly pruned) model — the
+//! qualitative check that a 2:4 model is still a language model, and the
+//! serving-shaped workload the latency simulator abstracts.
+//!
+//! The artifacts bake a fixed context T, so generation runs a sliding
+//! window: each step re-embeds the last T tokens, forwards the full
+//! stack, and samples from the temperature-scaled distribution at the
+//! final occupied position.
+
+use anyhow::Result;
+
+use crate::eval::forward_hidden;
+use crate::model::Weights;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::TensorI32;
+
+/// Sample `n_tokens` continuation bytes after `prompt`.
+pub fn generate(
+    rt: &Runtime,
+    w: &Weights,
+    prompt: &str,
+    n_tokens: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<String> {
+    let b = rt.manifest.consts.b_eval;
+    let t = w.cfg.seq;
+    let v = w.cfg.vocab;
+    let size = &w.cfg.name;
+    let logits_key = format!("{size}_logits_t{t}");
+    let mut rng = Rng::seed_from_u64(seed);
+
+    let mut tokens: Vec<i32> = prompt.bytes().map(|x| x as i32).collect();
+    if tokens.is_empty() {
+        tokens.push(b'.' as i32);
+    }
+    let mut out = Vec::with_capacity(n_tokens);
+
+    for _ in 0..n_tokens {
+        // last T tokens, right-padded; `pos` is the last occupied index
+        let start = tokens.len().saturating_sub(t);
+        let window = &tokens[start..];
+        let pos = window.len() - 1;
+        let mut padded = window.to_vec();
+        padded.resize(t, 0);
+        // batch dim is baked at B_EVAL: replicate (row 0 is read back)
+        let mut batch = Vec::with_capacity(b * t);
+        for _ in 0..b {
+            batch.extend_from_slice(&padded);
+        }
+        let toks = TensorI32::new(vec![b, t], batch);
+        let h = forward_hidden(rt, w, &toks)?;
+        let logits = rt
+            .exec_fv(
+                &logits_key,
+                &[(&h).into(), w.get("ln_f").into(), w.get("head").into()],
+            )?
+            .remove(0);
+        let row = &logits.data[pos * v..(pos + 1) * v];
+
+        // temperature softmax sample
+        let inv_t = 1.0 / temperature.max(1e-3);
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
+        let mut probs: Vec<f32> =
+            row.iter().map(|x| ((x - maxv) * inv_t).exp()).collect();
+        let z: f32 = probs.iter().sum();
+        for p in &mut probs {
+            *p /= z;
+        }
+        let mut u = rng.gen_f32();
+        let mut next = v - 1;
+        for (i, p) in probs.iter().enumerate() {
+            if u < *p {
+                next = i;
+                break;
+            }
+            u -= p;
+        }
+        tokens.push(next as i32);
+        out.push(next as u8);
+    }
+    Ok(String::from_utf8_lossy(&out).into_owned())
+}

@@ -1,0 +1,10 @@
+//! Evaluation: perplexity (the paper's primary metric) and the zero-shot
+//! likelihood-ranking task suite (Table 2 substitute).
+
+mod generate;
+mod ppl;
+pub mod tasks;
+
+pub use generate::generate;
+pub use ppl::{forward_hidden, perplexity, perplexity_split};
+pub use tasks::{load_tasks, run_tasks, Task, TaskResult};

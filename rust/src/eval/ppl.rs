@@ -1,0 +1,76 @@
+//! Perplexity evaluation through the AOT artifacts: embed -> N x block_fwd
+//! -> head_loss, accumulated over contiguous eval batches.
+
+use anyhow::Result;
+
+use crate::model::{CorpusData, EvalBatches, Weights};
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorI32, ValueView};
+
+/// Run embedding + all decoder blocks, returning the final hidden states.
+pub fn forward_hidden(
+    rt: &Runtime,
+    w: &Weights,
+    tokens: &TensorI32,
+) -> Result<Tensor> {
+    let size = &w.cfg.name;
+    let t = w.cfg.seq;
+    let mut h = rt
+        .exec_fv(
+            &format!("{size}_embed_t{t}"),
+            &[tokens.into(), w.get("embed").into()],
+        )?
+        .remove(0);
+    let fwd_key = format!("{size}_block_fwd_t{t}");
+    for i in 0..w.cfg.n_layers {
+        let mut inputs: Vec<ValueView> = Vec::with_capacity(10);
+        inputs.push((&h).into());
+        for p in w.block(i) {
+            inputs.push(p.into());
+        }
+        let y = rt.exec_fv(&fwd_key, &inputs)?.remove(0);
+        h = y;
+    }
+    Ok(h)
+}
+
+/// Perplexity over up to `max_batches` contiguous eval batches.
+pub fn perplexity(
+    rt: &Runtime,
+    w: &Weights,
+    corpus: &CorpusData,
+    max_batches: usize,
+) -> Result<f64> {
+    let b = rt.manifest.consts.b_eval;
+    let t = w.cfg.seq;
+    let size = &w.cfg.name;
+    let head_key = format!("{size}_head_loss_t{t}");
+    let mut total_nll = 0.0f64;
+    let mut total_cnt = 0.0f64;
+    for (inp, tgt) in EvalBatches::new(corpus, b, t, max_batches) {
+        let h = forward_hidden(rt, w, &inp)?;
+        let out = rt.exec_fv(
+            &head_key,
+            &[
+                (&h).into(),
+                (&tgt).into(),
+                w.get("ln_f").into(),
+                w.get("head").into(),
+            ],
+        )?;
+        total_nll += out[0].item() as f64;
+        total_cnt += out[1].item() as f64;
+    }
+    Ok((total_nll / total_cnt.max(1.0)).exp())
+}
+
+/// Convenience: perplexity on a named corpus split from the artifacts dir.
+pub fn perplexity_split(
+    rt: &Runtime,
+    w: &Weights,
+    split: &str,
+    max_batches: usize,
+) -> Result<f64> {
+    let corpus = CorpusData::load(rt.artifacts_dir(), split)?;
+    perplexity(rt, w, &corpus, max_batches)
+}

@@ -1,0 +1,218 @@
+//! Zero-shot downstream tasks (Table 2 substitute): nine synthetic
+//! likelihood-ranking tasks generated alongside the corpus
+//! (`artifacts/tasks.json`). Scoring follows the lm-eval-harness protocol:
+//! the predicted answer is the choice whose continuation log-likelihood
+//! under the model is highest.
+
+use anyhow::Result;
+
+use crate::eval::forward_hidden;
+use crate::json::Json;
+use crate::model::Weights;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, TensorI32};
+
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub prompt: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub name: String,
+    pub examples: Vec<Example>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub name: String,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+pub fn load_tasks(rt: &Runtime) -> Result<Vec<Task>> {
+    let text =
+        std::fs::read_to_string(rt.artifacts_dir().join("tasks.json"))?;
+    let j = Json::parse(&text)?;
+    j.as_arr()?
+        .iter()
+        .map(|t| {
+            let examples = t
+                .get("examples")?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    Ok(Example {
+                        prompt: e.get("prompt")?.as_str()?.to_string(),
+                        choices: e
+                            .get("choices")?
+                            .as_arr()?
+                            .iter()
+                            .map(|c| Ok(c.as_str()?.to_string()))
+                            .collect::<Result<_>>()?,
+                        answer: e.get("answer")?.as_usize()?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            Ok(Task { name: t.get("name")?.as_str()?.to_string(), examples })
+        })
+        .collect()
+}
+
+/// One scored candidate: byte tokens of prompt+choice, and the span of
+/// positions whose log-likelihood constitutes the choice score.
+struct Candidate {
+    tokens: Vec<i32>,
+    span: (usize, usize), // token indices of the choice region
+}
+
+fn build_candidate(prompt: &str, choice: &str, t: usize) -> Candidate {
+    let p: Vec<i32> = prompt.bytes().map(|b| b as i32).collect();
+    let c: Vec<i32> = choice.bytes().map(|b| b as i32).collect();
+    let mut tokens: Vec<i32> = p.iter().chain(c.iter()).copied().collect();
+    tokens.truncate(t);
+    let start = p.len().min(t);
+    let end = (p.len() + c.len()).min(t);
+    tokens.resize(t, 0); // right-pad; causal attention keeps earlier
+                         // positions unaffected
+    Candidate { tokens, span: (start, end) }
+}
+
+/// Sum of log P(token_i | prefix) over the choice span, from full logits.
+fn span_loglik(
+    logits: &Tensor,
+    row: usize,
+    tokens: &[i32],
+    span: (usize, usize),
+    vocab: usize,
+    t: usize,
+) -> f64 {
+    let mut total = 0.0f64;
+    for pos in span.0..span.1 {
+        if pos == 0 {
+            continue; // no prefix to condition on
+        }
+        // logits at pos-1 predict token at pos
+        let base = (row * t + (pos - 1)) * vocab;
+        let rowv = &logits.data[base..base + vocab];
+        let maxv = rowv.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+        let logz: f32 =
+            rowv.iter().map(|v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
+        total += (rowv[tokens[pos] as usize] - logz) as f64;
+    }
+    total
+}
+
+/// Evaluate all tasks; `max_examples` caps per-task cost.
+pub fn run_tasks(
+    rt: &Runtime,
+    w: &Weights,
+    max_examples: usize,
+) -> Result<Vec<TaskResult>> {
+    let tasks = load_tasks(rt)?;
+    let b = rt.manifest.consts.b_eval;
+    let t = w.cfg.seq;
+    let vocab = w.cfg.vocab;
+    let size = &w.cfg.name;
+    let logits_key = format!("{size}_logits_t{t}");
+
+    let mut results = Vec::new();
+    for task in &tasks {
+        let examples = &task.examples[..task.examples.len().min(max_examples)];
+        // Flatten all candidates, batch them through the model, then regroup.
+        let mut cands: Vec<Candidate> = Vec::new();
+        let mut owner: Vec<(usize, usize)> = Vec::new(); // (example, choice)
+        for (ei, ex) in examples.iter().enumerate() {
+            for (ci, ch) in ex.choices.iter().enumerate() {
+                cands.push(build_candidate(&ex.prompt, ch, t));
+                owner.push((ei, ci));
+            }
+        }
+        let mut scores = vec![vec![f64::NEG_INFINITY; 2]; examples.len()];
+        for (ei, ex) in examples.iter().enumerate() {
+            scores[ei] = vec![f64::NEG_INFINITY; ex.choices.len()];
+        }
+
+        for chunk_start in (0..cands.len()).step_by(b) {
+            let chunk = &cands[chunk_start..(chunk_start + b).min(cands.len())];
+            let mut tok = Vec::with_capacity(b * t);
+            for c in chunk {
+                tok.extend_from_slice(&c.tokens);
+            }
+            // pad the batch to B with the last candidate
+            for _ in chunk.len()..b {
+                tok.extend_from_slice(&chunk[chunk.len() - 1].tokens);
+            }
+            let tokens = TensorI32::new(vec![b, t], tok);
+            let h = forward_hidden(rt, w, &tokens)?;
+            let logits = rt
+                .exec_f32(
+                    &logits_key,
+                    &[
+                        h.into(),
+                        w.get("ln_f").clone().into(),
+                        w.get("head").clone().into(),
+                    ],
+                )?
+                .remove(0);
+            for (ri, c) in chunk.iter().enumerate() {
+                let (ei, ci) = owner[chunk_start + ri];
+                scores[ei][ci] =
+                    span_loglik(&logits, ri, &c.tokens, c.span, vocab, t);
+            }
+        }
+
+        let mut correct = 0usize;
+        for (ei, ex) in examples.iter().enumerate() {
+            let best = scores[ei]
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            if best == ex.answer {
+                correct += 1;
+            }
+        }
+        results.push(TaskResult {
+            name: task.name.clone(),
+            accuracy: correct as f64 / examples.len().max(1) as f64,
+            n: examples.len(),
+        });
+    }
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_spans() {
+        let c = build_candidate("ab", "cde", 8);
+        assert_eq!(c.span, (2, 5));
+        assert_eq!(c.tokens.len(), 8);
+        assert_eq!(&c.tokens[..5], &[97, 98, 99, 100, 101]);
+        assert_eq!(&c.tokens[5..], &[0, 0, 0]);
+    }
+
+    #[test]
+    fn candidate_truncates() {
+        let c = build_candidate("abcdefgh", "ij", 8);
+        assert_eq!(c.span, (8, 8)); // choice fell off the window
+        assert_eq!(c.tokens.len(), 8);
+    }
+
+    #[test]
+    fn span_loglik_uniform() {
+        // logits all zero -> each token has log p = -ln(V)
+        let v = 4usize;
+        let t = 4usize;
+        let logits = Tensor::zeros(&[1, t, v]);
+        let tokens = vec![0, 1, 2, 3];
+        let ll = span_loglik(&logits, 0, &tokens, (1, 3), v, t);
+        assert!((ll - (-(2.0) * (v as f64).ln())).abs() < 1e-6);
+    }
+}

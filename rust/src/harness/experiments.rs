@@ -1,0 +1,552 @@
+//! Drivers for every table and figure in the paper's evaluation section.
+//! Each prints the paper-shaped rows and returns the numbers.
+
+use anyhow::Result;
+
+use crate::harness::runs::{dense_ppl, prune_and_eval, EVAL_BATCHES};
+use crate::pruner::{Method, PruneOptions};
+use crate::runtime::Runtime;
+use crate::sparsity::Pattern;
+
+/// Figure 1: relative ppl improvement of Wanda++ over Wanda, 2:4, across
+/// the model-size ladder.
+pub fn fig1(rt: &Runtime, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
+    println!("== Figure 1: relative ppl improvement over Wanda (2:4) ==");
+    let mut rows = Vec::new();
+    for size in sizes {
+        let wanda = prune_and_eval(
+            rt,
+            size,
+            &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
+            EVAL_BATCHES,
+        )?;
+        let wpp = prune_and_eval(
+            rt,
+            size,
+            &PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4)),
+            EVAL_BATCHES,
+        )?;
+        let improvement =
+            100.0 * (wanda.ppl_test - wpp.ppl_test) / wanda.ppl_test;
+        println!(
+            "{size}: wanda {:.3}  wanda++ {:.3}  improvement {improvement:.1}%",
+            wanda.ppl_test, wpp.ppl_test
+        );
+        rows.push((size.to_string(), improvement));
+    }
+    Ok(rows)
+}
+
+/// Figure 3: perplexity as progressively more decoder blocks are pruned
+/// (2 at a time), 2:4 and 4:8, on both eval splits.
+pub fn fig3(rt: &Runtime, size: &str) -> Result<Vec<Fig3Row>> {
+    println!("== Figure 3: progressive block pruning ({size}) ==");
+    let n_layers = rt.manifest.size(size)?.n_layers;
+    let mut rows = Vec::new();
+    for method in [Method::Wanda, Method::WandaPP] {
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            for upto in (0..=n_layers).step_by(2.max(n_layers / 4)) {
+                let mut opts =
+                    PruneOptions::new(method, Pattern::NofM(n, m));
+                opts.max_blocks = Some(upto);
+                let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+                println!(
+                    "{} {n}:{m} blocks<={upto}: test {:.3} val {:.3}",
+                    method.label(),
+                    r.ppl_test,
+                    r.ppl_val
+                );
+                rows.push(Fig3Row {
+                    method: method.label().into(),
+                    pattern: format!("{n}:{m}"),
+                    blocks: upto,
+                    ppl_test: r.ppl_test,
+                    ppl_val: r.ppl_val,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    pub method: String,
+    pub pattern: String,
+    pub blocks: usize,
+    pub ppl_test: f64,
+    pub ppl_val: f64,
+}
+
+/// Table 1: the full method x pattern x size perplexity grid.
+pub fn table1(
+    rt: &Runtime,
+    sizes: &[&str],
+    methods: &[Method],
+) -> Result<Vec<Table1Row>> {
+    println!("== Table 1: Wikitext(ppl-test) comparison ==");
+    let mut rows = Vec::new();
+    for size in sizes {
+        let (dense_test, _) = dense_ppl(rt, size, EVAL_BATCHES)?;
+        println!("[{size}] dense: {dense_test:.3}");
+        rows.push(Table1Row {
+            size: size.to_string(),
+            method: "dense".into(),
+            pattern: "-".into(),
+            ppl: dense_test,
+        });
+        for pattern in [
+            Pattern::Unstructured(0.5),
+            Pattern::NofM(2, 4),
+            Pattern::NofM(4, 8),
+        ] {
+            for &method in methods {
+                let opts = PruneOptions::new(method, pattern);
+                match prune_and_eval(rt, size, &opts, EVAL_BATCHES) {
+                    Ok(r) => {
+                        println!(
+                            "[{size}] {:<11} {:<14}: {:.3}",
+                            method.label(),
+                            pattern.label(),
+                            r.ppl_test
+                        );
+                        rows.push(Table1Row {
+                            size: size.to_string(),
+                            method: method.label().into(),
+                            pattern: pattern.label(),
+                            ppl: r.ppl_test,
+                        });
+                    }
+                    Err(e) => {
+                        // GBLM off-primary sizes: "-" like the paper.
+                        println!(
+                            "[{size}] {:<11} {:<14}: -  ({e})",
+                            method.label(),
+                            pattern.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub size: String,
+    pub method: String,
+    pub pattern: String,
+    pub ppl: f64,
+}
+
+/// Table 2: zero-shot accuracy across the nine synthetic tasks, 2:4.
+pub fn table2(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+    use crate::eval::run_tasks;
+    use crate::model::load_size;
+
+    println!("== Table 2: zero-shot accuracy (2:4, {size}) ==");
+    let mut columns: Vec<(String, Vec<f64>)> = Vec::new();
+
+    let dense = load_size(rt, size)?;
+    let dense_res = run_tasks(rt, &dense, 50)?;
+    let names: Vec<String> = dense_res.iter().map(|r| r.name.clone()).collect();
+    columns.push((
+        "dense".into(),
+        dense_res.iter().map(|r| r.accuracy).collect(),
+    ));
+
+    for method in [Method::Wanda, Method::Gblm, Method::WandaPPRgs, Method::WandaPP] {
+        let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+        let mut w = load_size(rt, size)?;
+        let coord = crate::coordinator::Coordinator::new(rt);
+        if coord.prune(&mut w, &opts).is_err() {
+            println!("{:<11} -", method.label());
+            continue;
+        }
+        let res = run_tasks(rt, &w, 50)?;
+        columns.push((
+            method.label().into(),
+            res.iter().map(|r| r.accuracy).collect(),
+        ));
+    }
+
+    print!("{:<12}", "task");
+    for (m, _) in &columns {
+        print!("{m:>12}");
+    }
+    println!();
+    for (ti, name) in names.iter().enumerate() {
+        print!("{name:<12}");
+        for (_, accs) in &columns {
+            print!("{:>11.1}%", 100.0 * accs[ti]);
+        }
+        println!();
+    }
+    print!("{:<12}", "mean");
+    for (_, accs) in &columns {
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        print!("{:>11.1}%", 100.0 * mean);
+    }
+    println!();
+    Ok(columns)
+}
+
+/// Table 3: pruning time and memory per method.
+pub fn table3(rt: &Runtime, sizes: &[&str]) -> Result<Vec<Table3Row>> {
+    println!("== Table 3: pruning time (s) and peak memory (MiB) ==");
+    let mut rows = Vec::new();
+    for &method in &[
+        Method::SparseGpt,
+        Method::Gblm,
+        Method::Wanda,
+        Method::WandaPPRgs,
+        Method::WandaPP,
+    ] {
+        for size in sizes {
+            let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+            match prune_and_eval(rt, size, &opts, 2) {
+                Ok(r) => {
+                    let mib = r.report.memory.peak() as f64 / (1 << 20) as f64;
+                    println!(
+                        "{:<11} {size}: {:>7.1}s {:>8.1} MiB",
+                        method.label(),
+                        r.report.secs,
+                        mib
+                    );
+                    rows.push(Table3Row {
+                        method: method.label().into(),
+                        size: size.to_string(),
+                        secs: r.report.secs,
+                        peak_bytes: r.report.memory.peak(),
+                    });
+                }
+                Err(e) => {
+                    println!("{:<11} {size}: -  ({e})", method.label());
+                }
+            }
+        }
+    }
+    Ok(rows)
+}
+
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    pub method: String,
+    pub size: String,
+    pub secs: f64,
+    pub peak_bytes: usize,
+}
+
+/// Table 4: LoRA fine-tuning after pruning (Wanda vs Wanda++).
+pub fn table4(rt: &Runtime, steps: usize) -> Result<Vec<Table4Row>> {
+    use crate::lora::{finetune, perplexity_with_lora, LoraState};
+    use crate::model::load_size;
+
+    let size = rt.manifest.consts.primary.clone();
+    println!("== Table 4: perplexity with LoRA ({size}, 2:4, {steps} steps) ==");
+    let (dense_test, _) = dense_ppl(rt, &size, EVAL_BATCHES)?;
+    let mut rows = Vec::new();
+    for method in [Method::Wanda, Method::WandaPP] {
+        let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+        let mut w = load_size(rt, &size)?;
+        let coord = crate::coordinator::Coordinator::new(rt);
+        coord.prune(&mut w, &opts)?;
+        let pruned = crate::eval::perplexity_split(rt, &w, "test", EVAL_BATCHES)?;
+        let rank = rt.manifest.consts.lora_rank;
+        let mut lora = LoraState::init(&w, rank, 7);
+        finetune(rt, &w, &mut lora, steps, 1e-3, 11)?;
+        let tuned = perplexity_with_lora(rt, &w, &lora, "test", EVAL_BATCHES)?;
+        println!(
+            "{:<9} dense {dense_test:.3}  pruned {pruned:.3}  lora {tuned:.3} ({:+.0}%)",
+            method.label(),
+            100.0 * (tuned - pruned) / pruned
+        );
+        rows.push(Table4Row {
+            method: method.label().into(),
+            dense: dense_test,
+            pruned,
+            lora: tuned,
+        });
+    }
+    Ok(rows)
+}
+
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    pub method: String,
+    pub dense: f64,
+    pub pruned: f64,
+    pub lora: f64,
+}
+
+/// Table 5: higher unstructured sparsity (0.6 / 0.7 / 0.8).
+pub fn table5(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+    println!("== Table 5: high unstructured sparsity ({size}) ==");
+    let mut rows = Vec::new();
+    for method in [Method::Gblm, Method::Wanda, Method::WandaPP] {
+        let mut ppls = Vec::new();
+        for s in [0.6, 0.7, 0.8] {
+            let opts = PruneOptions::new(method, Pattern::Unstructured(s));
+            match prune_and_eval(rt, size, &opts, EVAL_BATCHES) {
+                Ok(r) => ppls.push(r.ppl_test),
+                Err(_) => ppls.push(f64::NAN),
+            }
+        }
+        println!(
+            "{:<9} 0.6: {:>9.3}  0.7: {:>9.3}  0.8: {:>9.3}",
+            method.label(),
+            ppls[0],
+            ppls[1],
+            ppls[2]
+        );
+        rows.push((method.label().into(), ppls));
+    }
+    Ok(rows)
+}
+
+/// Table 6: structured row pruning (Wanda-SP vs Wanda++-SP).
+pub fn table6(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+    println!("== Table 6: structured row pruning ({size}) ==");
+    let mut rows = Vec::new();
+    for (label, method) in
+        [("wanda-SP", Method::Wanda), ("wanda++-SP", Method::WandaPP)]
+    {
+        let mut ppls = Vec::new();
+        for f in [0.1, 0.3, 0.5] {
+            let opts = PruneOptions::new(method, Pattern::StructuredRows(f));
+            let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+            ppls.push(r.ppl_test);
+        }
+        println!(
+            "{label:<11} 0.1: {:>9.3}  0.3: {:>9.3}  0.5: {:>10.3}",
+            ppls[0], ppls[1], ppls[2]
+        );
+        rows.push((label.into(), ppls));
+    }
+    Ok(rows)
+}
+
+/// Tables 7 & 9: the deployment latency simulation.
+pub fn table7_table9() {
+    use crate::latency::*;
+    let hw = HwProfile::h100();
+    let g = LlmGeometry::llama7b();
+    for (fmt, label) in [(Format::FP16, "Table 7 (FP16)"), (Format::FP8, "Table 9 (FP8)")] {
+        println!("== {label}: relative reduction (%) from 2:4 sparsity ==");
+        println!("batch  in_len  out_len   TTFT%   TPOT%  weight%");
+        for batch in [1.0, 4.0] {
+            for in_len in [128.0, 1024.0, 2048.0, 4096.0] {
+                let w = Workload { batch, input_len: in_len, output_len: 64.0 };
+                let r = sparsity_reduction(&hw, &g, fmt, w);
+                println!(
+                    "{batch:>5} {in_len:>7} {:>8} {:>7.1} {:>7.1} {:>8.1}",
+                    64, r.ttft_pct, r.tpot_pct, r.weight_pct
+                );
+            }
+        }
+    }
+}
+
+/// Table 8: the RGS alpha ablation.
+pub fn table8(rt: &Runtime, size: &str) -> Result<Vec<(f32, f64)>> {
+    println!("== Table 8: alpha ablation (RGS, 2:4, {size}) ==");
+    let mut rows = Vec::new();
+    for alpha in [1.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0, 1e4, 1e6] {
+        let mut opts = PruneOptions::new(Method::WandaPPRgs, Pattern::NofM(2, 4));
+        opts.alpha = alpha as f32;
+        let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+        println!("alpha {alpha:>9}: {:.3}", r.ppl_test);
+        rows.push((alpha as f32, r.ppl_test));
+    }
+    Ok(rows)
+}
+
+/// Figure 4: calibration-size sensitivity box plot data. Returns, per
+/// (method, n, ctx) setting, the perplexities across `runs` seeds.
+pub fn fig4(
+    rt: &Runtime,
+    size: &str,
+    runs: usize,
+) -> Result<Vec<Fig4Row>> {
+    println!("== Figure 4: calibration sensitivity ({size}, {runs} runs) ==");
+    let variants = rt.manifest.size(size)?.seq_variants.clone();
+    let settings: Vec<(usize, usize)> = [
+        (8usize, 8usize),
+        (8, 16),
+        (16, 16),
+        (16, 32),
+        (32, 32),
+        (32, 64),
+        (64, 64),
+        (128, 64),
+    ]
+    .into_iter()
+    .filter(|(_, ctx)| variants.contains(ctx))
+    .collect();
+
+    let mut rows = Vec::new();
+    for method in [Method::WandaPPRo, Method::WandaPP] {
+        for &(n, ctx) in &settings {
+            let mut ppls = Vec::with_capacity(runs);
+            for seed in 0..runs as u64 {
+                let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+                opts.n_calib = n;
+                opts.ctx = ctx;
+                opts.seed = seed;
+                let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+                ppls.push(r.ppl_test);
+            }
+            let mean = ppls.iter().sum::<f64>() / ppls.len() as f64;
+            let med = {
+                let mut s = ppls.clone();
+                s.sort_by(|a, b| a.total_cmp(b));
+                s[s.len() / 2]
+            };
+            println!(
+                "{:<10} {n:>4}/{ctx:<4} median {med:.3} mean {mean:.3} min {:.3} max {:.3}",
+                method.label(),
+                ppls.iter().cloned().fold(f64::INFINITY, f64::min),
+                ppls.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            );
+            rows.push(Fig4Row {
+                method: method.label().into(),
+                n_samples: n,
+                ctx,
+                ppls,
+            });
+        }
+    }
+    // Wanda reference line (deterministic given the calibration set).
+    let wanda = prune_and_eval(
+        rt,
+        size,
+        &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
+        EVAL_BATCHES,
+    )?;
+    println!("wanda reference (128-sample default): {:.3}", wanda.ppl_test);
+    rows.push(Fig4Row {
+        method: "wanda".into(),
+        n_samples: 128,
+        ctx: 64,
+        ppls: vec![wanda.ppl_test],
+    });
+    Ok(rows)
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    pub method: String,
+    pub n_samples: usize,
+    pub ctx: usize,
+    pub ppls: Vec<f64>,
+}
+
+/// Ablation (extension beyond the paper's tables): how many RO rounds K
+/// are needed — the paper fixes K=5 and calls RO "only 5 iterations";
+/// this sweep shows the marginal value of each round.
+pub fn ablation_k(rt: &Runtime, size: &str) -> Result<Vec<(usize, f64)>> {
+    println!("== Ablation: RO rounds K (2:4, {size}) ==");
+    let mut rows = Vec::new();
+    for k in [0usize, 1, 2, 3, 5, 8] {
+        let mut opts = PruneOptions::new(
+            if k == 0 { Method::WandaPPRgs } else { Method::WandaPP },
+            Pattern::NofM(2, 4),
+        );
+        opts.k_iters = k.max(1);
+        if k == 0 {
+            opts.k_iters = 1; // unused without RO
+        }
+        let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+        println!("K={k}: {:.3}  ({:.1}s)", r.ppl_test, r.report.secs);
+        rows.push((k, r.ppl_test));
+    }
+    Ok(rows)
+}
+
+/// Ablation (extension): RO minibatch source — does re-sampling the M RO
+/// inputs each round (the paper's design) beat a fixed set? Approximated
+/// by comparing seeds, since sampling is seed-driven.
+pub fn ablation_seeds(rt: &Runtime, size: &str, n: usize) -> Result<Vec<f64>> {
+    println!("== Ablation: seed variance of wanda++ (2:4, {size}) ==");
+    let mut ppls = Vec::new();
+    for seed in 0..n as u64 {
+        let mut opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
+        opts.seed = seed;
+        let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+        ppls.push(r.ppl_test);
+    }
+    let mean = ppls.iter().sum::<f64>() / ppls.len() as f64;
+    let var = ppls.iter().map(|p| (p - mean).powi(2)).sum::<f64>()
+        / ppls.len() as f64;
+    println!("mean {mean:.3} stddev {:.4} over {n} seeds", var.sqrt());
+    Ok(ppls)
+}
+
+/// Dispatcher used by the CLI `repro` subcommand.
+pub fn run_experiment(
+    rt: &Runtime,
+    name: &str,
+    sizes: Option<&str>,
+    runs: usize,
+) -> Result<()> {
+    let size_vec: Vec<String> = sizes
+        .unwrap_or("s0,s1,s2,s3")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let size_refs: Vec<&str> = size_vec.iter().map(|s| s.as_str()).collect();
+    let primary = rt.manifest.consts.primary.clone();
+
+    match name {
+        "fig1" => {
+            fig1(rt, &size_refs)?;
+        }
+        "fig3" => {
+            fig3(rt, &primary)?;
+        }
+        "fig4" => {
+            fig4(rt, "s0", runs)?;
+        }
+        "table1" => {
+            table1(rt, &size_refs, &Method::all())?;
+        }
+        "table2" => {
+            table2(rt, &primary)?;
+        }
+        "table3" => {
+            table3(rt, &size_refs)?;
+        }
+        "table4" => {
+            table4(rt, 200)?;
+        }
+        "table5" => {
+            table5(rt, &primary)?;
+        }
+        "table6" => {
+            table6(rt, &primary)?;
+        }
+        "table7" | "table9" => {
+            table7_table9();
+        }
+        "table8" => {
+            table8(rt, &primary)?;
+        }
+        "ablation_k" => {
+            ablation_k(rt, "s0")?;
+        }
+        "ablation_seeds" => {
+            ablation_seeds(rt, "s0", runs)?;
+        }
+        "all" => {
+            for e in [
+                "fig1", "fig3", "fig4", "table1", "table2", "table3",
+                "table4", "table5", "table6", "table7", "table8",
+            ] {
+                run_experiment(rt, e, sizes, runs)?;
+            }
+        }
+        other => return Err(anyhow::anyhow!("unknown experiment `{other}`")),
+    }
+    Ok(())
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: one driver per paper table/figure (DESIGN.md §7).
+//! Each driver prints the same rows/series the paper reports and returns
+//! structured results so tests can assert the qualitative shape.
+
+mod experiments;
+mod runs;
+
+pub use experiments::*;
+pub use runs::{dense_ppl, prune_and_eval, PruneEval, EVAL_BATCHES};

@@ -1,0 +1,46 @@
+//! Shared run helper: prune a fresh copy of a model and evaluate
+//! perplexity on the held-out splits.
+
+use anyhow::Result;
+
+use crate::coordinator::{Coordinator, PruneReport};
+use crate::eval::perplexity_split;
+use crate::model::load_size;
+use crate::pruner::PruneOptions;
+use crate::runtime::Runtime;
+
+/// Default number of eval batches (covers the full test split at 8x64).
+pub const EVAL_BATCHES: usize = 24;
+
+#[derive(Debug, Clone)]
+pub struct PruneEval {
+    pub report: PruneReport,
+    /// Perplexity on the test split ("WikiText" column).
+    pub ppl_test: f64,
+    /// Perplexity on the val split ("C4 validation" column).
+    pub ppl_val: f64,
+}
+
+/// Prune a fresh copy of `size` under `opts` and evaluate it.
+pub fn prune_and_eval(
+    rt: &Runtime,
+    size: &str,
+    opts: &PruneOptions,
+    eval_batches: usize,
+) -> Result<PruneEval> {
+    let mut w = load_size(rt, size)?;
+    let coord = Coordinator::new(rt);
+    let report = coord.prune(&mut w, opts)?;
+    let ppl_test = perplexity_split(rt, &w, "test", eval_batches)?;
+    let ppl_val = perplexity_split(rt, &w, "val", eval_batches)?;
+    Ok(PruneEval { report, ppl_test, ppl_val })
+}
+
+/// Dense (unpruned) perplexities of a size.
+pub fn dense_ppl(rt: &Runtime, size: &str, eval_batches: usize) -> Result<(f64, f64)> {
+    let w = load_size(rt, size)?;
+    Ok((
+        perplexity_split(rt, &w, "test", eval_batches)?,
+        perplexity_split(rt, &w, "val", eval_batches)?,
+    ))
+}

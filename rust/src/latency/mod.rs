@@ -1,0 +1,280 @@
+//! Analytic roofline latency simulator — the substitute for the paper's
+//! H100 + TensorRT-LLM measurements (Appendix B.1/B.3, Tables 7 and 9).
+//!
+//! The paper's numbers are, at heart, memory-bandwidth arithmetic: TTFT at
+//! small batch is weight-load bound, so 2:4-compressed MLP weights cut it
+//! by roughly the weight-traffic reduction; under FP8 the same model shifts
+//! toward compute-bound and the benefit collapses with input length
+//! (Table 9's small/negative cells). This module encodes exactly that
+//! arithmetic:
+//!
+//!   phase_latency = max(flops / throughput, bytes / bandwidth) + overhead
+//!
+//! with 2:4 sparsity modeled as (a) compressed weight storage (values/2 +
+//! 12.5% index metadata, NVIDIA's format), (b) 2x sparse-tensor-core
+//! throughput on the pruned GEMMs at FP16 but ~1x at FP8 (FP8 dense
+//! already runs at doubled rate; sparse FP8 kernels barely add), and
+//! (c) a fixed decode-engine overhead that dilutes the TPOT benefit.
+//! Only MLP modules are pruned, as in the paper's deployment experiment.
+
+/// Numeric format of weights/activations/KV-cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    FP16,
+    FP8,
+}
+
+impl Format {
+    pub fn bytes(self) -> f64 {
+        match self {
+            Format::FP16 => 2.0,
+            Format::FP8 => 1.0,
+        }
+    }
+}
+
+/// Hardware profile (H100-SXM-like defaults).
+#[derive(Debug, Clone)]
+pub struct HwProfile {
+    pub name: String,
+    /// Dense tensor-core throughput, FLOP/s, at FP16.
+    pub flops_fp16: f64,
+    /// Dense throughput at FP8 (2x FP16 on H100).
+    pub flops_fp8: f64,
+    /// Sparse-tensor-core speedup on 2:4 GEMMs at FP16.
+    pub sparse_speedup: f64,
+    /// Sparse speedup at FP8 (near 1.0: FP8 dense is already 2x FP16 and
+    /// sparse FP8 kernels carry overhead — the source of Table 9's
+    /// negative cells).
+    pub sparse_speedup_fp8: f64,
+    /// Fixed per-decode-step engine overhead (scheduler/sampling), secs.
+    pub overhead_decode: f64,
+    /// HBM bandwidth, bytes/s.
+    pub mem_bw: f64,
+    /// Fixed per-layer kernel-launch/sync overhead, seconds.
+    pub overhead_per_layer: f64,
+    /// Fraction of peak actually achieved (efficiency).
+    pub mfu: f64,
+}
+
+impl HwProfile {
+    pub fn h100() -> Self {
+        Self {
+            name: "H100-SXM (sim)".into(),
+            flops_fp16: 989e12,
+            flops_fp8: 1979e12,
+            sparse_speedup: 2.0,
+            sparse_speedup_fp8: 1.05,
+            overhead_decode: 1.2e-3,
+            mem_bw: 3.35e12,
+            overhead_per_layer: 4e-6,
+            mfu: 0.55,
+        }
+    }
+
+    fn flops(&self, fmt: Format) -> f64 {
+        match fmt {
+            Format::FP16 => self.flops_fp16,
+            Format::FP8 => self.flops_fp8,
+        }
+    }
+}
+
+/// Transformer geometry. Defaults mirror the paper's "dummy 7B
+/// LLaMA-akin" deployment model.
+#[derive(Debug, Clone)]
+pub struct LlmGeometry {
+    pub d: f64,
+    pub ffn: f64,
+    pub n_layers: f64,
+    pub vocab: f64,
+}
+
+impl LlmGeometry {
+    pub fn llama7b() -> Self {
+        Self { d: 4096.0, ffn: 11008.0, n_layers: 32.0, vocab: 32000.0 }
+    }
+
+    /// Weight elements of the attention (q,k,v,o) per layer.
+    fn attn_weights(&self) -> f64 {
+        4.0 * self.d * self.d
+    }
+
+    /// Weight elements of the MLP (gate, up, down) per layer.
+    fn mlp_weights(&self) -> f64 {
+        3.0 * self.d * self.ffn
+    }
+}
+
+/// 2:4 compressed bytes per weight element: half the values survive, plus
+/// index metadata (NVIDIA's compressed format: 2 bits per kept value =
+/// 12.5% overhead at FP16, i.e. 1 bit per original element).
+fn sparse_bytes_per_elem(fmt: Format) -> f64 {
+    0.5 * fmt.bytes() + 1.0 / 8.0
+}
+
+/// A deployment workload (one row of Table 7/9).
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub batch: f64,
+    pub input_len: f64,
+    pub output_len: f64,
+}
+
+/// Latency outputs for one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Latency {
+    pub ttft: f64,
+    pub tpot: f64,
+    pub weight_bytes: f64,
+}
+
+/// Total model weight bytes (all layers + embeddings/head at `fmt`).
+pub fn weight_bytes(g: &LlmGeometry, fmt: Format, sparse_mlp: bool) -> f64 {
+    let dense_b = fmt.bytes();
+    let mlp_b = if sparse_mlp { sparse_bytes_per_elem(fmt) } else { dense_b };
+    let per_layer = g.attn_weights() * dense_b + g.mlp_weights() * mlp_b;
+    let embed = 2.0 * g.vocab * g.d * dense_b;
+    g.n_layers * per_layer + embed
+}
+
+/// One transformer pass over `tokens` positions with `ctx` of KV context:
+/// returns (flops_attn_gemm, flops_mlp_gemm, hbm_bytes).
+fn pass_cost(
+    g: &LlmGeometry,
+    fmt: Format,
+    sparse_mlp: bool,
+    batch: f64,
+    tokens: f64,
+    ctx: f64,
+) -> (f64, f64, f64) {
+    let nt = batch * tokens;
+    // GEMM flops: 2 * weights * tokens
+    let f_attn = 2.0 * g.attn_weights() * nt * g.n_layers
+        // score + context matmuls against ctx keys
+        + 4.0 * g.d * ctx * nt * g.n_layers;
+    let f_mlp = 2.0 * g.mlp_weights() * nt * g.n_layers;
+    // HBM traffic: weights once per pass + KV cache read + activations
+    let w_bytes = weight_bytes(g, fmt, sparse_mlp);
+    let kv_bytes = 2.0 * g.d * ctx * batch * g.n_layers * fmt.bytes();
+    let act_bytes = 8.0 * g.d * nt * g.n_layers * fmt.bytes();
+    (f_attn, f_mlp, w_bytes + kv_bytes + act_bytes)
+}
+
+fn phase_latency(
+    hw: &HwProfile,
+    g: &LlmGeometry,
+    fmt: Format,
+    sparse_mlp: bool,
+    batch: f64,
+    tokens: f64,
+    ctx: f64,
+) -> f64 {
+    let (f_attn, f_mlp, bytes) = pass_cost(g, fmt, sparse_mlp, batch, tokens, ctx);
+    let dense_tp = hw.flops(fmt) * hw.mfu;
+    let speedup = match fmt {
+        Format::FP16 => hw.sparse_speedup,
+        Format::FP8 => hw.sparse_speedup_fp8,
+    };
+    let mlp_tp = if sparse_mlp { dense_tp * speedup } else { dense_tp };
+    let t_compute = f_attn / dense_tp + f_mlp / mlp_tp;
+    let t_mem = bytes / hw.mem_bw;
+    t_compute.max(t_mem) + hw.overhead_per_layer * g.n_layers
+}
+
+/// Simulate a workload end to end.
+pub fn simulate(
+    hw: &HwProfile,
+    g: &LlmGeometry,
+    fmt: Format,
+    sparse_mlp: bool,
+    w: Workload,
+) -> Latency {
+    let ttft = phase_latency(hw, g, fmt, sparse_mlp, w.batch, w.input_len, w.input_len);
+    // TPOT: average decode step halfway through the output, plus the
+    // fixed engine overhead (scheduler + sampling) that dilutes the
+    // weight-traffic benefit in the paper's measurements.
+    let ctx = w.input_len + w.output_len / 2.0;
+    let tpot = phase_latency(hw, g, fmt, sparse_mlp, w.batch, 1.0, ctx)
+        + hw.overhead_decode;
+    Latency { ttft, tpot, weight_bytes: weight_bytes(g, fmt, sparse_mlp) }
+}
+
+/// Relative reduction (%) of 2:4-MLP-sparse vs dense for one workload.
+pub struct Reduction {
+    pub ttft_pct: f64,
+    pub tpot_pct: f64,
+    pub weight_pct: f64,
+}
+
+pub fn sparsity_reduction(
+    hw: &HwProfile,
+    g: &LlmGeometry,
+    fmt: Format,
+    w: Workload,
+) -> Reduction {
+    let dense = simulate(hw, g, fmt, false, w);
+    let sparse = simulate(hw, g, fmt, true, w);
+    let pct = |a: f64, b: f64| 100.0 * (a - b) / a;
+    Reduction {
+        ttft_pct: pct(dense.ttft, sparse.ttft),
+        tpot_pct: pct(dense.tpot, sparse.tpot),
+        weight_pct: pct(dense.weight_bytes, sparse.weight_bytes),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (HwProfile, LlmGeometry) {
+        (HwProfile::h100(), LlmGeometry::llama7b())
+    }
+
+    #[test]
+    fn fp16_weight_reduction_near_paper() {
+        // Paper: 28% total weight reduction under FP16 (12.8 -> 9.2 GB)
+        let (_, g) = setup();
+        let d = weight_bytes(&g, Format::FP16, false);
+        let s = weight_bytes(&g, Format::FP16, true);
+        let red = 100.0 * (d - s) / d;
+        assert!((d / 1e9 - 13.5).abs() < 1.5, "dense ~13 GB, got {d}");
+        assert!((22.0..34.0).contains(&red), "reduction {red}");
+    }
+
+    #[test]
+    fn fp8_weight_reduction_smaller_than_fp16() {
+        let (_, g) = setup();
+        let r16 = {
+            let d = weight_bytes(&g, Format::FP16, false);
+            (d - weight_bytes(&g, Format::FP16, true)) / d
+        };
+        let r8 = {
+            let d = weight_bytes(&g, Format::FP8, false);
+            (d - weight_bytes(&g, Format::FP8, true)) / d
+        };
+        assert!(r8 < r16);
+    }
+
+    #[test]
+    fn ttft_reduction_larger_under_fp16_than_fp8() {
+        // Table 7 vs Table 9's headline contrast.
+        let (hw, g) = setup();
+        let w = Workload { batch: 1.0, input_len: 1024.0, output_len: 64.0 };
+        let r16 = sparsity_reduction(&hw, &g, Format::FP16, w);
+        let r8 = sparsity_reduction(&hw, &g, Format::FP8, w);
+        assert!(r16.ttft_pct > r8.ttft_pct);
+        assert!(r16.ttft_pct > 15.0, "{}", r16.ttft_pct);
+    }
+
+    #[test]
+    fn latencies_positive_and_monotone_in_batch() {
+        let (hw, g) = setup();
+        let small = simulate(&hw, &g, Format::FP16, false,
+            Workload { batch: 1.0, input_len: 128.0, output_len: 64.0 });
+        let big = simulate(&hw, &g, Format::FP16, false,
+            Workload { batch: 8.0, input_len: 128.0, output_len: 64.0 });
+        assert!(small.ttft > 0.0 && small.tpot > 0.0);
+        assert!(big.ttft >= small.ttft);
+    }
+}

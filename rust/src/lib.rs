@@ -1,0 +1,60 @@
+//! # wandapp — Wanda++ (ACL 2025) reproduction
+//!
+//! Post-training LLM pruning via **regional gradients**: a Regional Gradient
+//! Score (RGS, paper Eq. 4) for in-block layer-wise pruning plus Regional
+//! Optimization (RO, paper Eq. 5) that tunes each decoder block against its
+//! dense output — never materializing full-model gradients.
+//!
+//! Architecture (DESIGN.md): a rust coordinator (this crate) drives
+//! AOT-compiled JAX/Pallas compute graphs through the PJRT C API. Python is
+//! build-time only; this crate is self-contained once `make artifacts` has
+//! produced `artifacts/*.hlo.txt`, the pretrained weight files, and the
+//! manifest.
+//!
+//! Quick tour:
+//! - [`runtime`] — PJRT client + artifact registry (HLO text -> executable).
+//! - [`model`] — model config, weight store, calibration/eval data.
+//! - [`sparsity`] — mask algebra: unstructured, 2:4, 4:8, structured rows.
+//! - [`pruner`] — scoring methods: magnitude, Wanda, SparseGPT, GBLM,
+//!   Wanda++ (RGS / RO / full), all behind one [`pruner::PruneMethod`] enum.
+//! - [`coordinator`] — the block-streaming pipeline (the paper's Alg. 1)
+//!   with time/memory accounting.
+//! - [`eval`] — perplexity + the zero-shot likelihood-ranking task suite.
+//! - [`latency`] — roofline latency simulator for the 2:4 deployment tables.
+//! - [`lora`] — sparsity-aware LoRA fine-tuning (paper §5.6).
+//! - [`harness`] — one driver per paper table/figure.
+
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod harness;
+pub mod json;
+pub mod latency;
+pub mod linalg;
+pub mod lora;
+pub mod model;
+pub mod pruner;
+pub mod rng;
+pub mod runtime;
+pub mod sparsity;
+pub mod tensor;
+
+pub use anyhow::{anyhow, Result};
+
+/// Canonical per-block parameter order, shared with python via the manifest.
+pub const BLOCK_PARAMS: [&str; 9] =
+    ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
+
+/// The seven prunable linear weights of a decoder block, in order.
+pub const PRUNABLE: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// Which of the four calibration-statistics sites feeds each prunable layer.
+pub fn stat_site(name: &str) -> usize {
+    match name {
+        "wq" | "wk" | "wv" => 0, // post-ln1 hidden states
+        "wo" => 1,               // attention output
+        "wg" | "wu" => 2,        // post-ln2 hidden states
+        "wd" => 3,               // swiglu activations
+        _ => panic!("not a prunable weight: {name}"),
+    }
+}

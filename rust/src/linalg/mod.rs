@@ -1,0 +1,198 @@
+//! Small dense linear algebra substrate for the SparseGPT baseline:
+//! Cholesky factorization, triangular solves, and the damped-inverse
+//! helper SparseGPT's OBS updates need. Row-major `Vec<f64>` matrices —
+//! the Hessians are accumulated in f32 by the artifacts but inverted in
+//! f64 for stability (as the reference implementation does).
+
+/// Cholesky factorization A = L L^T (lower). Returns None if A is not
+/// positive definite.
+pub fn cholesky(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b (forward substitution), L lower-triangular.
+pub fn solve_lower(l: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    y
+}
+
+/// Solve L^T x = y (back substitution).
+pub fn solve_upper_t(l: &[f64], y: &[f64], n: usize) -> Vec<f64> {
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in i + 1..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    x
+}
+
+/// Full inverse via Cholesky: A^-1 (A symmetric positive definite).
+pub fn spd_inverse(a: &[f64], n: usize) -> Option<Vec<f64>> {
+    let l = cholesky(a, n)?;
+    let mut inv = vec![0.0f64; n * n];
+    let mut e = vec![0.0f64; n];
+    for col in 0..n {
+        e.fill(0.0);
+        e[col] = 1.0;
+        let y = solve_lower(&l, &e, n);
+        let x = solve_upper_t(&l, &y, n);
+        for row in 0..n {
+            inv[row * n + col] = x[row];
+        }
+    }
+    Some(inv)
+}
+
+/// SparseGPT's damped Hessian-inverse-Cholesky: given H (f32 Gram matrix),
+/// add `percdamp * mean(diag)` to the diagonal, invert, and return the
+/// upper Cholesky factor of H^-1 (what the column sweep consumes).
+pub fn hessian_inv_chol(h: &[f32], n: usize, percdamp: f64) -> Option<Vec<f64>> {
+    let mut a: Vec<f64> = h.iter().map(|v| *v as f64).collect();
+    let mean_diag: f64 =
+        (0..n).map(|i| a[i * n + i]).sum::<f64>() / n as f64;
+    let damp = percdamp * mean_diag.max(1e-12);
+    for i in 0..n {
+        a[i * n + i] += damp;
+    }
+    let inv = spd_inverse(&a, n)?;
+    // upper Cholesky of inv == transpose of lower Cholesky of inv
+    let l = cholesky(&inv, n)?;
+    let mut u = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            u[j * n + i] = l[i * n + j];
+        }
+    }
+    Some(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul(a: &[f64], b: &[f64], n: usize) -> Vec<f64> {
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let aik = a[i * n + k];
+                for j in 0..n {
+                    c[i * n + j] += aik * b[k * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn spd(n: usize, seed: u64) -> Vec<f64> {
+        // A = B B^T + n I
+        let mut s = seed;
+        let b: Vec<f64> = (0..n * n)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((s >> 33) as f64 / 2e9) - 1.0
+            })
+            .collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += b[i * n + k] * b[j * n + k];
+                }
+            }
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let n = 8;
+        let a = spd(n, 42);
+        let l = cholesky(&a, n).unwrap();
+        let mut lt = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                lt[i * n + j] = l[j * n + i];
+            }
+        }
+        let r = matmul(&l, &lt, n);
+        for (x, y) in r.iter().zip(&a) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let n = 12;
+        let a = spd(n, 7);
+        let inv = spd_inverse(&a, n).unwrap();
+        let prod = matmul(&a, &inv, n);
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod[i * n + j] - want).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn triangular_solves() {
+        let n = 6;
+        let a = spd(n, 9);
+        let l = cholesky(&a, n).unwrap();
+        let b: Vec<f64> = (0..n).map(|i| i as f64 + 1.0).collect();
+        let y = solve_lower(&l, &b, n);
+        let x = solve_upper_t(&l, &y, n);
+        // L L^T x = b  =>  A x = b
+        for i in 0..n {
+            let got: f64 = (0..n).map(|j| a[i * n + j] * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn not_spd_returns_none() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_none());
+    }
+
+    #[test]
+    fn hessian_inv_chol_upper_triangular() {
+        let n = 8;
+        let h: Vec<f32> = spd(n, 3).iter().map(|v| *v as f32).collect();
+        let u = hessian_inv_chol(&h, n, 0.01).unwrap();
+        for i in 0..n {
+            for j in 0..i {
+                assert_eq!(u[i * n + j], 0.0);
+            }
+            assert!(u[i * n + i] > 0.0);
+        }
+    }
+}

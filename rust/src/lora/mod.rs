@@ -1,0 +1,180 @@
+//! Sparsity-aware LoRA fine-tuning (paper §5.6, Table 4): rank-r adapters
+//! on the q and v projections of every block, trained with RMSprop on the
+//! train split while the (pruned) base weights stay frozen. Driven through
+//! the `lora_step` / `lora_eval` artifacts — the full-model backward the
+//! paper contrasts against regional optimization.
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{sample_windows, CorpusData, Weights};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::{Tensor, ValueView};
+
+/// LoRA adapter state: a/b per (module, layer), plus optimizer state.
+pub struct LoraState {
+    /// Interleaved (a_q, b_q, a_v, b_v) per layer, artifact order.
+    pub tensors: Vec<Tensor>,
+    pub vstate: Vec<Tensor>,
+    pub rank: usize,
+}
+
+impl LoraState {
+    /// Kaiming-ish init for A, zeros for B (standard LoRA init: the
+    /// adapters start as an exact no-op).
+    pub fn init(w: &Weights, rank: usize, seed: u64) -> Self {
+        let mut rng = Rng::seed_from_u64(seed);
+        let d = w.cfg.d;
+        let mut tensors = Vec::new();
+        for _li in 0..w.cfg.n_layers {
+            for _mod in 0..2 {
+                let a = Tensor::new(
+                    vec![rank, d],
+                    (0..rank * d)
+                        .map(|_| (rng.gen_f32() - 0.5) * 0.02)
+                        .collect(),
+                );
+                let b = Tensor::zeros(&[d, rank]);
+                tensors.push(a);
+                tensors.push(b);
+            }
+        }
+        let vstate = tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect();
+        Self { tensors, vstate, rank }
+    }
+}
+
+/// Outcome of a LoRA fine-tuning run.
+#[derive(Debug, Clone)]
+pub struct LoraReport {
+    pub steps: usize,
+    pub losses: Vec<f32>,
+    pub secs: f64,
+}
+
+fn all_weight_inputs<'a>(w: &'a Weights, inputs: &mut Vec<ValueView<'a>>) {
+    inputs.push(w.get("embed").into());
+    for i in 0..w.cfg.n_layers {
+        for p in w.block(i) {
+            inputs.push(p.into());
+        }
+    }
+    inputs.push(w.get("ln_f").into());
+    inputs.push(w.get("head").into());
+}
+
+/// Fine-tune adapters on `w` (typically a pruned model) for `steps` steps.
+pub fn finetune(
+    rt: &Runtime,
+    w: &Weights,
+    lora: &mut LoraState,
+    steps: usize,
+    lr: f32,
+    seed: u64,
+) -> Result<LoraReport> {
+    let size = &w.cfg.name;
+    let key = format!("{size}_lora_step");
+    if rt.manifest.artifact(&key).is_err() {
+        return Err(anyhow!("lora_step artifact only compiled for the primary size"));
+    }
+    let b = rt.manifest.consts.b_cal;
+    let t = w.cfg.seq;
+    let corpus = CorpusData::load(rt.artifacts_dir(), "train")?;
+    let t0 = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let (tok, tgt) =
+            sample_windows(&corpus, b, t, seed.wrapping_add(step as u64));
+        let lr_t = Tensor::new(vec![1], vec![lr]);
+        let mut inputs: Vec<ValueView> = vec![(&tok).into(), (&tgt).into()];
+        all_weight_inputs(w, &mut inputs);
+        for a in &lora.tensors {
+            inputs.push(a.into());
+        }
+        for v in &lora.vstate {
+            inputs.push(v.into());
+        }
+        inputs.push((&lr_t).into());
+        let mut out = rt.exec_fv(&key, &inputs)?;
+        let loss = out.pop().expect("loss").item();
+        let n = lora.tensors.len();
+        let vs = out.split_off(n);
+        lora.tensors = out;
+        lora.vstate = vs;
+        losses.push(loss);
+    }
+    Ok(LoraReport { steps, losses, secs: t0.elapsed().as_secs_f64() })
+}
+
+/// Perplexity of the model *with adapters applied*, on a corpus split.
+pub fn perplexity_with_lora(
+    rt: &Runtime,
+    w: &Weights,
+    lora: &LoraState,
+    split: &str,
+    max_batches: usize,
+) -> Result<f64> {
+    let size = &w.cfg.name;
+    let key = format!("{size}_lora_eval");
+    let b = rt.manifest.consts.b_cal;
+    let t = w.cfg.seq;
+    let corpus = CorpusData::load(rt.artifacts_dir(), split)?;
+    let mut nll = 0.0f64;
+    let mut cnt = 0.0f64;
+    for (tok, tgt) in crate::model::EvalBatches::new(&corpus, b, t, max_batches)
+    {
+        let mut inputs: Vec<ValueView> = vec![(&tok).into(), (&tgt).into()];
+        all_weight_inputs(w, &mut inputs);
+        for a in &lora.tensors {
+            inputs.push(a.into());
+        }
+        let out = rt.exec_fv(&key, &inputs)?;
+        nll += out[0].item() as f64;
+        cnt += out[1].item() as f64;
+    }
+    Ok((nll / cnt.max(1.0)).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use std::collections::HashMap;
+
+    #[test]
+    fn init_is_noop_shaped() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 8,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 16,
+            vocab: 32,
+            seq: 8,
+        };
+        let mut map = HashMap::new();
+        map.insert("embed".into(), Tensor::zeros(&[32, 8]));
+        for i in 0..2 {
+            for k in crate::BLOCK_PARAMS {
+                let shape: Vec<usize> = match k {
+                    "ln1" | "ln2" => vec![8],
+                    "wg" | "wu" => vec![16, 8],
+                    "wd" => vec![8, 16],
+                    _ => vec![8, 8],
+                };
+                map.insert(format!("blocks.{i}.{k}"), Tensor::zeros(&shape));
+            }
+        }
+        map.insert("ln_f".into(), Tensor::zeros(&[8]));
+        map.insert("head".into(), Tensor::zeros(&[32, 8]));
+        let w = Weights { cfg, map };
+        let st = LoraState::init(&w, 4, 0);
+        assert_eq!(st.tensors.len(), 2 * 2 * 2); // layers x {q,v} x {a,b}
+        // every B starts at zero => adapters are a no-op at init
+        for (i, t) in st.tensors.iter().enumerate() {
+            if i % 2 == 1 {
+                assert!(t.data.iter().all(|v| *v == 0.0));
+            }
+        }
+    }
+}

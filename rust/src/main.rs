@@ -1,0 +1,243 @@
+//! wandapp CLI: prune / eval / tasks / repro / latency / profile.
+//!
+//! The leader entrypoint for the Wanda++ reproduction. All compute goes
+//! through AOT-compiled HLO artifacts (build them once with
+//! `make artifacts`); this binary never touches python. Argument parsing
+//! is hand-rolled (the offline build vendors no CLI crate).
+
+use anyhow::{anyhow, bail, Result};
+
+use wandapp::eval::{perplexity_split, run_tasks};
+use wandapp::harness;
+use wandapp::model::load_size;
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::Pattern;
+
+const USAGE: &str = "\
+wandapp — Wanda++ pruning framework (ACL 2025 reproduction)
+
+USAGE: wandapp [--artifacts DIR] <command> [options]
+
+COMMANDS
+  prune    --size s2 --method wanda++ --pattern 2:4 [--calib 32]
+           [--alpha 100] [--k 5] [--seed 0] [--save FILE]
+           Prune a model; report ppl before/after.
+  eval     --size s2 [--weights FILE]
+           Perplexity of a weight file (or the pristine size).
+  tasks    --size s2 [--weights FILE] [--max-examples 50]
+           Zero-shot task suite.
+  repro    <fig1|fig3|fig4|table1..table9|all> [--sizes s0,s1] [--runs 10]
+           Regenerate a paper table/figure.
+  latency  Roofline latency simulation (Tables 7 & 9).
+  generate --size s2 [--weights FILE] [--prompt STR] [--tokens 200]
+           [--temp 0.8] Sample text from a (pruned) model.
+  inspect  --weights FILE [--fmt fp16|f32]
+           Per-layer sparsity + 2:4 compressed-size report of a pruned model.
+  profile  [--size s0]  Execution profile of a short Wanda++ run.
+
+METHODS  magnitude wanda sparsegpt gblm wanda++rgs wanda++ro wanda++
+PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
+";
+
+/// Tiny flag parser: positional args + `--key value` pairs.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            if let Some(key) = argv[i].strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(argv[i].clone());
+                i += 1;
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_opt(&self, key: &str) -> Option<String> {
+        self.flags.get(key).cloned()
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("bad value for --{key}: {v}")),
+        }
+    }
+}
+
+fn parse_pattern(s: &str) -> Result<Pattern> {
+    if let Some((n, m)) = s.split_once(':') {
+        return Ok(Pattern::NofM(n.parse()?, m.parse()?));
+    }
+    if let Some(f) = s.strip_prefix('u') {
+        return Ok(Pattern::Unstructured(f.parse()?));
+    }
+    if let Some(f) = s.strip_prefix('r') {
+        return Ok(Pattern::StructuredRows(f.parse()?));
+    }
+    bail!("bad pattern `{s}` (try 2:4, 4:8, u0.5, r0.3)")
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let args = Args::parse(&argv)?;
+    let artifacts = args.get("artifacts", "artifacts");
+    let cmd = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("no command\n{USAGE}"))?
+        .clone();
+    let rt = Runtime::new(&artifacts)?;
+
+    match cmd.as_str() {
+        "prune" => {
+            let size = args.get("size", "s2");
+            let method = Method::parse(&args.get("method", "wanda++"))
+                .ok_or_else(|| anyhow!("unknown method"))?;
+            let mut opts =
+                PruneOptions::new(method, parse_pattern(&args.get("pattern", "2:4"))?);
+            opts.n_calib = args.get_parse("calib", 32)?;
+            opts.alpha = args.get_parse("alpha", opts.alpha)?;
+            opts.k_iters = args.get_parse("k", 5)?;
+            opts.seed = args.get_parse("seed", 0)?;
+            opts.ctx = args.get_parse("ctx", 64)?;
+            opts.ro_lr = args.get_parse("ro-lr", opts.ro_lr)?;
+
+            let (dense_test, _) =
+                harness::dense_ppl(&rt, &size, harness::EVAL_BATCHES)?;
+            let mut w = load_size(&rt, &size)?;
+            let coord = wandapp::coordinator::Coordinator::new(&rt);
+            let report = coord.prune(&mut w, &opts)?;
+            let ppl_test = perplexity_split(&rt, &w, "test", harness::EVAL_BATCHES)?;
+            let ppl_val = perplexity_split(&rt, &w, "val", harness::EVAL_BATCHES)?;
+            println!("{}", report.summary());
+            println!("ppl(test): dense {dense_test:.3} -> pruned {ppl_test:.3}");
+            println!("ppl(val):  pruned {ppl_val:.3}");
+            if let Some(path) = args.get_opt("save") {
+                w.save(&path)?;
+                println!("saved pruned weights to {path}");
+            }
+        }
+        "eval" => {
+            let w = match args.get_opt("weights") {
+                Some(p) => wandapp::model::Weights::load(p)?,
+                None => load_size(&rt, &args.get("size", "s2"))?,
+            };
+            let test = perplexity_split(&rt, &w, "test", harness::EVAL_BATCHES)?;
+            let val = perplexity_split(&rt, &w, "val", harness::EVAL_BATCHES)?;
+            println!(
+                "{} ({:.2}M params, sparsity {:.3}): test {test:.3}  val {val:.3}",
+                w.cfg.name,
+                w.param_count() as f64 / 1e6,
+                w.prunable_sparsity()
+            );
+        }
+        "tasks" => {
+            let w = match args.get_opt("weights") {
+                Some(p) => wandapp::model::Weights::load(p)?,
+                None => load_size(&rt, &args.get("size", "s2"))?,
+            };
+            let max = args.get_parse("max-examples", 50)?;
+            let results = run_tasks(&rt, &w, max)?;
+            let mut mean = 0.0;
+            for r in &results {
+                println!("{:<12} {:.1}% (n={})", r.name, 100.0 * r.accuracy, r.n);
+                mean += r.accuracy;
+            }
+            println!("mean: {:.1}%", 100.0 * mean / results.len() as f64);
+        }
+        "repro" => {
+            let exp = args
+                .positional
+                .get(1)
+                .ok_or_else(|| anyhow!("repro needs an experiment name"))?;
+            let sizes = args.get_opt("sizes");
+            let runs = args.get_parse("runs", 10)?;
+            harness::run_experiment(&rt, exp, sizes.as_deref(), runs)?;
+        }
+        "latency" => harness::table7_table9(),
+        "generate" => {
+            let w = match args.get_opt("weights") {
+                Some(p) => wandapp::model::Weights::load(p)?,
+                None => load_size(&rt, &args.get("size", "s2"))?,
+            };
+            let prompt = args.get("prompt", "the farmer carries a ");
+            let n = args.get_parse("tokens", 200)?;
+            let temp = args.get_parse("temp", 0.8f32)?;
+            let seed = args.get_parse("seed", 0u64)?;
+            let text = wandapp::eval::generate(&rt, &w, &prompt, n, temp, seed)?;
+            println!("{prompt}{text}");
+        }
+        "inspect" => {
+            let w = match args.get_opt("weights") {
+                Some(p) => wandapp::model::Weights::load(p)?,
+                None => load_size(&rt, &args.get("size", "s2"))?,
+            };
+            let vb = match args.get("fmt", "fp16").as_str() {
+                "fp16" => 2,
+                "f32" => 4,
+                other => bail!("unknown fmt `{other}`"),
+            };
+            println!(
+                "{} — {:.2}M params, prunable sparsity {:.3}",
+                w.cfg.name,
+                w.param_count() as f64 / 1e6,
+                w.prunable_sparsity()
+            );
+            if w.prunable_sparsity() < 0.49 {
+                println!("(model not 2:4-pruned; run `wandapp prune --save` first)");
+            } else {
+                let rep = wandapp::sparsity::compress::compress_model(&w, vb)?;
+                println!("{:<16} {:>10} {:>12} {:>7}", "tensor", "dense B", "2:4 packed B", "ratio");
+                for (name, dense, packed) in &rep.per_layer {
+                    println!(
+                        "{name:<16} {dense:>10} {packed:>12} {:>6.3}",
+                        *packed as f64 / *dense as f64
+                    );
+                }
+                println!(
+                    "total: {} -> {} bytes ({:.1}% reduction)",
+                    rep.dense_total,
+                    rep.compressed_total,
+                    rep.reduction_pct()
+                );
+            }
+        }
+        "profile" => {
+            let size = args.get("size", "s0");
+            let mut opts =
+                PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
+            opts.n_calib = 16;
+            let mut w = load_size(&rt, &size)?;
+            let coord = wandapp::coordinator::Coordinator::new(&rt);
+            let rep = coord.prune(&mut w, &opts)?;
+            println!("{}", rep.summary());
+            println!("{}", rt.stats.borrow().report());
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,156 @@
+//! Calibration and evaluation data: the synthetic corpus splits written by
+//! `python -m compile.corpus` (byte-level tokens), deterministic window
+//! sampling for calibration (the paper's "128 random C4 samples"), and
+//! contiguous batching for perplexity evaluation.
+
+use std::path::Path;
+
+use anyhow::Result;
+use crate::rng::Rng;
+use crate::tensor::TensorI32;
+
+/// A corpus split held as raw bytes (byte == token id).
+pub struct CorpusData {
+    pub bytes: Vec<u8>,
+}
+
+impl CorpusData {
+    pub fn load<P: AsRef<Path>>(dir: P, split: &str) -> Result<Self> {
+        let path = dir.as_ref().join(format!("corpus_{split}.bin"));
+        Ok(Self { bytes: std::fs::read(path)? })
+    }
+
+    /// Token window starting at `start` of length `len` (i32).
+    pub fn window(&self, start: usize, len: usize) -> Vec<i32> {
+        self.bytes[start..start + len].iter().map(|b| *b as i32).collect()
+    }
+}
+
+/// Sample `count` random windows of `t+1` tokens; returns (inputs, targets)
+/// already shifted for next-token prediction, each shaped `[count, t]`.
+/// Deterministic in `seed` — Fig. 4's 30-run box plots rely on this.
+pub fn sample_windows(
+    corpus: &CorpusData,
+    count: usize,
+    t: usize,
+    seed: u64,
+) -> (TensorI32, TensorI32) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let hi = corpus.bytes.len() - t - 1;
+    let mut inp = Vec::with_capacity(count * t);
+    let mut tgt = Vec::with_capacity(count * t);
+    for _ in 0..count {
+        let s = rng.gen_range(hi);
+        let w = corpus.window(s, t + 1);
+        inp.extend_from_slice(&w[..t]);
+        tgt.extend_from_slice(&w[1..]);
+    }
+    (
+        TensorI32::new(vec![count, t], inp),
+        TensorI32::new(vec![count, t], tgt),
+    )
+}
+
+/// Contiguous, non-overlapping eval batches over a split (the WikiText-style
+/// protocol: sequential windows, every position scored once).
+pub struct EvalBatches<'a> {
+    corpus: &'a CorpusData,
+    batch: usize,
+    t: usize,
+    cursor: usize,
+    limit: usize,
+}
+
+impl<'a> EvalBatches<'a> {
+    pub fn new(
+        corpus: &'a CorpusData,
+        batch: usize,
+        t: usize,
+        max_batches: usize,
+    ) -> Self {
+        let full = (corpus.bytes.len() - 1) / t / batch;
+        Self { corpus, batch, t, cursor: 0, limit: full.min(max_batches) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.limit
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.limit == 0
+    }
+}
+
+impl<'a> Iterator for EvalBatches<'a> {
+    type Item = (TensorI32, TensorI32);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.cursor >= self.limit {
+            return None;
+        }
+        let t = self.t;
+        let base = self.cursor * self.batch * t;
+        let mut inp = Vec::with_capacity(self.batch * t);
+        let mut tgt = Vec::with_capacity(self.batch * t);
+        for b in 0..self.batch {
+            let s = base + b * t;
+            let w = self.corpus.window(s, t + 1);
+            inp.extend_from_slice(&w[..t]);
+            tgt.extend_from_slice(&w[1..]);
+        }
+        self.cursor += 1;
+        Some((
+            TensorI32::new(vec![self.batch, t], inp),
+            TensorI32::new(vec![self.batch, t], tgt),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> CorpusData {
+        CorpusData { bytes: (0..=255u8).cycle().take(4096).collect() }
+    }
+
+    #[test]
+    fn windows_are_shifted() {
+        let c = corpus();
+        let (inp, tgt) = sample_windows(&c, 4, 16, 7);
+        assert_eq!(inp.shape, vec![4, 16]);
+        for r in 0..4 {
+            for j in 0..15 {
+                assert_eq!(inp.data[r * 16 + j + 1], tgt.data[r * 16 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let c = corpus();
+        let (a, _) = sample_windows(&c, 8, 32, 42);
+        let (b, _) = sample_windows(&c, 8, 32, 42);
+        let (d, _) = sample_windows(&c, 8, 32, 43);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, d.data);
+    }
+
+    #[test]
+    fn eval_batches_cover_disjoint_spans() {
+        let c = corpus();
+        let it = EvalBatches::new(&c, 2, 8, 100);
+        let n = it.len();
+        assert!(n > 0);
+        let mut seen = 0;
+        let mut last_first: i64 = -1;
+        for (inp, tgt) in it {
+            assert_eq!(inp.shape, vec![2, 8]);
+            assert_eq!(inp.data[1], tgt.data[0]);
+            assert!(inp.data[0] as i64 != last_first);
+            last_first = inp.data[0] as i64;
+            seen += 1;
+        }
+        assert_eq!(seen, n);
+    }
+}

@@ -1,0 +1,18 @@
+//! Model substrate: configuration, the weight store (the `WPPW` binary
+//! format written by `python -m compile.pretrain`), and calibration / eval
+//! data handling.
+
+mod data;
+mod store;
+
+pub use data::{sample_windows, CorpusData, EvalBatches};
+pub use store::{ModelConfig, Weights};
+
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// Load the weight file for a model size from the artifacts directory.
+pub fn load_size(rt: &Runtime, size: &str) -> Result<Weights> {
+    let path = rt.artifacts_dir().join(format!("weights_{size}.bin"));
+    Weights::load(&path)
+}

@@ -1,0 +1,293 @@
+//! Weight store: parses/writes the `WPPW` format shared with
+//! `python/compile/weights_io.py`:
+//!
+//! `b"WPPW" | u32 LE header_len | JSON header | raw f32 LE data`
+//!
+//! Tensor names: `embed`, `blocks.<i>.<ln1|wq|wk|wv|wo|ln2|wg|wu|wd>`,
+//! `ln_f`, `head`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+use crate::tensor::Tensor;
+use crate::BLOCK_PARAMS;
+
+const MAGIC: &[u8; 4] = b"WPPW";
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl ModelConfig {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            d: j.get("d")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            ffn: j.get("ffn")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+        })
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("d", Json::Num(self.d as f64)),
+            ("n_layers", Json::Num(self.n_layers as f64)),
+            ("n_heads", Json::Num(self.n_heads as f64)),
+            ("ffn", Json::Num(self.ffn as f64)),
+            ("vocab", Json::Num(self.vocab as f64)),
+            ("seq", Json::Num(self.seq as f64)),
+        ])
+    }
+}
+
+#[derive(Debug)]
+struct HeaderEntry {
+    name: String,
+    shape: Vec<usize>,
+    offset: usize, // in f32 elements
+}
+
+/// An in-memory model: config + name-addressed tensors. Cloned per pruning
+/// run so the dense original stays available (the RO target).
+#[derive(Debug, Clone)]
+pub struct Weights {
+    pub cfg: ModelConfig,
+    pub map: HashMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+            anyhow!("open {:?}: {e} — run `make artifacts`", path.as_ref())
+        })?;
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            return Err(anyhow!("bad magic in weight file"));
+        }
+        let mut lenb = [0u8; 4];
+        f.read_exact(&mut lenb)?;
+        let hlen = u32::from_le_bytes(lenb) as usize;
+        let mut hbuf = vec![0u8; hlen];
+        f.read_exact(&mut hbuf)?;
+        let hjson = Json::parse(std::str::from_utf8(&hbuf)?)?;
+        let cfg = ModelConfig::from_json(hjson.get("meta")?)?;
+        let mut tensors = Vec::new();
+        for e in hjson.get("tensors")?.as_arr()? {
+            tensors.push(HeaderEntry {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.usize_vec()?,
+                offset: e.get("offset")?.as_usize()?,
+            });
+        }
+        let mut raw = Vec::new();
+        f.read_to_end(&mut raw)?;
+        if raw.len() % 4 != 0 {
+            return Err(anyhow!("weight payload not f32-aligned"));
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+
+        let mut map = HashMap::new();
+        for e in &tensors {
+            let n: usize = e.shape.iter().product();
+            let data = floats
+                .get(e.offset..e.offset + n)
+                .ok_or_else(|| anyhow!("tensor {} out of bounds", e.name))?
+                .to_vec();
+            map.insert(e.name.clone(), Tensor::new(e.shape.clone(), data));
+        }
+        Ok(Self { cfg, map })
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let mut entries = Vec::new();
+        let mut blobs: Vec<&Tensor> = Vec::new();
+        let mut offset = 0usize;
+        let mut put = |name: String, t: &'_ Tensor| -> HeaderEntry {
+            let e = HeaderEntry { name, shape: t.shape.clone(), offset };
+            offset += t.numel();
+            e
+        };
+        // canonical order: embed, blocks, ln_f, head
+        let order = self.canonical_order();
+        for name in &order {
+            let t = &self.map[name];
+            entries.push(put(name.clone(), t));
+            blobs.push(t);
+        }
+        let header = Json::obj(vec![
+            ("meta", self.cfg.to_json()),
+            (
+                "tensors",
+                Json::Arr(
+                    entries
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("name", Json::str(&e.name)),
+                                ("shape", Json::arr_usize(&e.shape)),
+                                ("offset", Json::Num(e.offset as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]);
+        let hjson = header.write().into_bytes();
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(hjson.len() as u32).to_le_bytes())?;
+        f.write_all(&hjson)?;
+        for t in blobs {
+            let mut bytes = Vec::with_capacity(t.numel() * 4);
+            for v in &t.data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            f.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    fn canonical_order(&self) -> Vec<String> {
+        let mut order = vec!["embed".to_string()];
+        for i in 0..self.cfg.n_layers {
+            for k in BLOCK_PARAMS {
+                order.push(format!("blocks.{i}.{k}"));
+            }
+        }
+        order.push("ln_f".to_string());
+        order.push("head".to_string());
+        order
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.map[name]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        self.map.get_mut(name).expect("unknown tensor")
+    }
+
+    /// The 9 parameters of block `i`, in canonical order.
+    pub fn block(&self, i: usize) -> Vec<&Tensor> {
+        BLOCK_PARAMS
+            .iter()
+            .map(|k| &self.map[&format!("blocks.{i}.{k}")])
+            .collect()
+    }
+
+    pub fn block_name(i: usize, param: &str) -> String {
+        format!("blocks.{i}.{param}")
+    }
+
+    pub fn set_block(&mut self, i: usize, param: &str, t: Tensor) {
+        let key = Self::block_name(i, param);
+        let old = self.map.get(&key).expect("unknown block tensor");
+        assert_eq!(old.shape, t.shape, "shape change for {key}");
+        self.map.insert(key, t);
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Total bytes of the seven prunable matrices across all blocks.
+    pub fn prunable_count(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.cfg.n_layers {
+            for k in crate::PRUNABLE {
+                n += self.map[&Self::block_name(i, k)].numel();
+            }
+        }
+        n
+    }
+
+    /// Overall sparsity of the prunable weights (fraction of exact zeros).
+    pub fn prunable_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for i in 0..self.cfg.n_layers {
+            for k in crate::PRUNABLE {
+                let t = &self.map[&Self::block_name(i, k)];
+                zeros += t.data.iter().filter(|v| **v == 0.0).count();
+                total += t.numel();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Weights {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            d: 4,
+            n_layers: 1,
+            n_heads: 1,
+            ffn: 8,
+            vocab: 16,
+            seq: 8,
+        };
+        let mut map = HashMap::new();
+        map.insert("embed".into(), Tensor::ones(&[16, 4]));
+        for k in BLOCK_PARAMS {
+            let shape: Vec<usize> = match k {
+                "ln1" | "ln2" => vec![4],
+                "wg" | "wu" => vec![8, 4],
+                "wd" => vec![4, 8],
+                _ => vec![4, 4],
+            };
+            map.insert(format!("blocks.0.{k}"), Tensor::ones(&shape));
+        }
+        map.insert("ln_f".into(), Tensor::ones(&[4]));
+        map.insert("head".into(), Tensor::ones(&[16, 4]));
+        Weights { cfg, map }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut w = tiny();
+        w.get_mut("blocks.0.wq").data[3] = 7.5;
+        let tmp = std::env::temp_dir().join("wppw_test.bin");
+        w.save(&tmp).unwrap();
+        let r = Weights::load(&tmp).unwrap();
+        assert_eq!(r.cfg, w.cfg);
+        assert_eq!(r.get("blocks.0.wq").data[3], 7.5);
+        assert_eq!(r.param_count(), w.param_count());
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let mut w = tiny();
+        let t = w.get_mut("blocks.0.wq");
+        for v in t.data.iter_mut().take(8) {
+            *v = 0.0;
+        }
+        // wq contributes 8 zeros of 16; total prunable = 4*16 + 2*32 + 32
+        let total = w.prunable_count() as f64;
+        assert_eq!(w.prunable_sparsity(), 8.0 / total);
+    }
+}

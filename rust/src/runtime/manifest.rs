@@ -1,0 +1,175 @@
+//! Typed view of `artifacts/manifest.json` (written by `python -m
+//! compile.aot`). The manifest is the single source of truth for artifact
+//! I/O signatures and model-size metadata. Parsed with the in-tree JSON
+//! substrate (crate::json) — the offline build has no serde.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+use crate::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SizeInfo {
+    pub d: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub seq_variants: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Consts {
+    pub b_cal: usize,
+    pub b_eval: usize,
+    pub m_ro: usize,
+    pub alpha_default: f32,
+    pub lora_rank: usize,
+    pub lora_scale: f32,
+    pub rmsprop_rho: f32,
+    pub rmsprop_eps: f32,
+    pub primary: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub sizes: HashMap<String, SizeInfo>,
+    pub consts: Consts,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn io_specs(j: &Json) -> Result<Vec<IoSpec>> {
+    j.as_arr()?
+        .iter()
+        .map(|e| {
+            Ok(IoSpec {
+                name: e.get("name")?.as_str()?.to_string(),
+                shape: e.get("shape")?.usize_vec()?,
+                dtype: e.get("dtype")?.as_str()?.to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+
+        let mut sizes = HashMap::new();
+        for (name, s) in j.get("sizes")?.as_obj()? {
+            sizes.insert(
+                name.clone(),
+                SizeInfo {
+                    d: s.get("d")?.as_usize()?,
+                    n_layers: s.get("n_layers")?.as_usize()?,
+                    n_heads: s.get("n_heads")?.as_usize()?,
+                    ffn: s.get("ffn")?.as_usize()?,
+                    vocab: s.get("vocab")?.as_usize()?,
+                    seq: s.get("seq")?.as_usize()?,
+                    seq_variants: s.get("seq_variants")?.usize_vec()?,
+                },
+            );
+        }
+
+        let c = j.get("consts")?;
+        let consts = Consts {
+            b_cal: c.get("B_CAL")?.as_usize()?,
+            b_eval: c.get("B_EVAL")?.as_usize()?,
+            m_ro: c.get("M_RO")?.as_usize()?,
+            alpha_default: c.get("alpha_default")?.as_f64()? as f32,
+            lora_rank: c.get("lora_rank")?.as_usize()?,
+            lora_scale: c.get("lora_scale")?.as_f64()? as f32,
+            rmsprop_rho: c.get("rmsprop_rho")?.as_f64()? as f32,
+            rmsprop_eps: c.get("rmsprop_eps")?.as_f64()? as f32,
+            primary: c.get("primary")?.as_str()?.to_string(),
+        };
+
+        let mut artifacts = HashMap::new();
+        for (key, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                key.clone(),
+                ArtifactSpec {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: io_specs(a.get("inputs")?)?,
+                    outputs: io_specs(a.get("outputs")?)?,
+                },
+            );
+        }
+        Ok(Self { sizes, consts, artifacts })
+    }
+
+    pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(key)
+            .ok_or_else(|| anyhow!("artifact `{key}` not in manifest"))
+    }
+
+    pub fn size(&self, name: &str) -> Result<&SizeInfo> {
+        self.sizes
+            .get(name)
+            .ok_or_else(|| anyhow!("model size `{name}` not in manifest"))
+    }
+
+    /// Shape tag ("sq" | "sf" | "fd") of a prunable weight — selects which
+    /// score/mask kernel artifact applies.
+    pub fn shape_tag(name: &str) -> &'static str {
+        match name {
+            "wq" | "wk" | "wv" | "wo" => "sq",
+            "wg" | "wu" => "sf",
+            "wd" => "fd",
+            _ => panic!("not a prunable weight: {name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "sizes": {"s0": {"d": 64, "n_layers": 2, "n_heads": 2, "ffn": 176,
+                        "vocab": 256, "seq": 64, "seq_variants": [8, 64]}},
+      "consts": {"B_CAL": 8, "B_EVAL": 8, "M_RO": 8, "alpha_default": 100.0,
+                 "lora_rank": 4, "lora_scale": 2.0, "rmsprop_rho": 0.99,
+                 "rmsprop_eps": 1e-08, "primary": "s2"},
+      "artifacts": {"s0_embed_t64": {"file": "s0_embed_t64.hlo.txt",
+        "inputs": [{"name": "tokens", "shape": [8, 64], "dtype": "i32"}],
+        "outputs": [{"name": "h", "shape": [8, 64, 64], "dtype": "f32"}]}}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.sizes["s0"].ffn, 176);
+        assert_eq!(m.consts.b_cal, 8);
+        assert_eq!(m.consts.primary, "s2");
+        assert!((m.consts.rmsprop_eps - 1e-8).abs() < 1e-12);
+        let a = m.artifact("s0_embed_t64").unwrap();
+        assert_eq!(a.inputs[0].dtype, "i32");
+        assert_eq!(a.outputs[0].shape, vec![8, 64, 64]);
+        assert!(m.artifact("nope").is_err());
+        assert_eq!(Manifest::shape_tag("wg"), "sf");
+    }
+}

@@ -1,0 +1,245 @@
+//! PJRT runtime: loads AOT-lowered HLO-text artifacts, compiles them once on
+//! the CPU PJRT client, and executes them from the coordinator's hot path.
+//!
+//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects the
+//! 64-bit instruction ids in jax>=0.5 serialized protos, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md). The manifest
+//! written by `python -m compile.aot` pins every artifact's ordered input /
+//! output names, shapes and dtypes; [`Runtime::exec`] validates against it
+//! on every call so shape bugs surface as errors, not NaNs.
+
+mod manifest;
+mod stats;
+
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, SizeInfo};
+pub use stats::{ExecRecord, ExecStats};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::{Tensor, TensorI32, Value, ValueView};
+
+/// Owns the PJRT client, the compiled-executable cache, and the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    pub stats: RefCell<ExecStats>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("loading manifest.json — run `make artifacts` first")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) the executable for `key`.
+    fn executable(
+        &self,
+        key: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(key)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.stats
+            .borrow_mut()
+            .record_compile(key, t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile an artifact (used by benches to exclude compile time).
+    pub fn warmup(&self, key: &str) -> Result<()> {
+        self.executable(key).map(|_| ())
+    }
+
+    /// Execute artifact `key` with owned inputs (convenience wrapper over
+    /// [`Runtime::exec_v`]).
+    pub fn exec(&self, key: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let views: Vec<ValueView> = inputs.iter().map(ValueView::from).collect();
+        self.exec_v(key, &views)
+    }
+
+    /// Execute artifact `key` with borrowed inputs, returning outputs in
+    /// manifest order. Inputs are validated (arity, shape, dtype) before
+    /// execution; buffers are copied exactly once (into the PJRT literal).
+    pub fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(key)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{key}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                return Err(anyhow!(
+                    "{key}: input `{}` expects {:?} {}, got {:?} {}",
+                    io.name,
+                    io.shape,
+                    io.dtype,
+                    v.shape(),
+                    v.dtype()
+                ));
+            }
+        }
+
+        let exe = self.executable(key)?;
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = exe.execute::<xla::Literal>(&lits)?;
+        let root = result
+            .pop()
+            .and_then(|mut d| d.pop())
+            .ok_or_else(|| anyhow!("{key}: empty execution result"))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{key}: got {} outputs, manifest expects {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, io) in parts.iter().zip(&spec.outputs) {
+            let v = match io.dtype.as_str() {
+                "f32" => Value::F32(Tensor::from_literal(lit, &io.shape)?),
+                "i32" => Value::I32(TensorI32::from_literal(lit, &io.shape)?),
+                other => return Err(anyhow!("{key}: unknown dtype {other}")),
+            };
+            out.push(v);
+        }
+        self.stats
+            .borrow_mut()
+            .record_exec(key, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    /// Convenience: execute and return only f32 outputs.
+    pub fn exec_f32(&self, key: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        self.exec(key, inputs)?
+            .into_iter()
+            .map(|v| v.into_f32())
+            .collect()
+    }
+
+    /// Borrowed-input variant of [`Runtime::exec_f32`] — the hot-path form.
+    pub fn exec_fv(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Tensor>> {
+        self.exec_v(key, inputs)?
+            .into_iter()
+            .map(|v| v.into_f32())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn manifest_loads_and_validates() {
+        let rt = Runtime::new(artifacts_dir()).expect("runtime");
+        assert!(rt.manifest.sizes.contains_key("s0"));
+        let spec = rt.manifest.artifact("s0_block_fwd_t64").unwrap();
+        assert_eq!(spec.inputs.len(), 10);
+        assert_eq!(spec.outputs.len(), 1);
+    }
+
+    #[test]
+    fn exec_rejects_wrong_arity_and_shape() {
+        let rt = Runtime::new(artifacts_dir()).expect("runtime");
+        let err = rt.exec("s0_block_fwd_t64", &[]).unwrap_err();
+        assert!(err.to_string().contains("inputs"));
+        let bad = Value::F32(Tensor::zeros(&[1, 2, 3]));
+        let mut inputs = vec![bad];
+        for io in &rt.manifest.artifact("s0_block_fwd_t64").unwrap().inputs
+            [1..]
+        {
+            inputs.push(Value::F32(Tensor::zeros(&io.shape)));
+        }
+        assert!(rt.exec("s0_block_fwd_t64", &inputs).is_err());
+    }
+
+    #[test]
+    fn score_artifact_matches_cpu_formula() {
+        // |W|*(alpha*G + xnorm) — cross-check the Pallas artifact against a
+        // direct computation (the same identity ref.py pins in pytest).
+        let rt = Runtime::new(artifacts_dir()).expect("runtime");
+        let d = rt.manifest.sizes["s0"].d;
+        let n = d * d;
+        let w = Tensor::new(
+            vec![d, d],
+            (0..n).map(|i| (i as f32 * 0.37).sin()).collect(),
+        );
+        let g = Tensor::new(
+            vec![d, d],
+            (0..n).map(|i| (i as f32 * 0.11).cos().abs()).collect(),
+        );
+        let xn = Tensor::new(
+            vec![d],
+            (0..d).map(|i| 0.5 + (i as f32) * 0.01).collect(),
+        );
+        let alpha = Tensor::new(vec![1], vec![100.0]);
+        let out = rt
+            .exec_f32(
+                "s0_score_sq",
+                &[
+                    w.clone().into(),
+                    g.clone().into(),
+                    xn.clone().into(),
+                    alpha.into(),
+                ],
+            )
+            .unwrap();
+        let s = &out[0];
+        for i in 0..d {
+            for j in 0..d {
+                let want = w.data[i * d + j].abs()
+                    * (100.0 * g.data[i * d + j] + xn.data[j]);
+                let got = s.data[i * d + j];
+                assert!(
+                    (want - got).abs() <= 1e-4 * want.abs().max(1.0),
+                    "mismatch at ({i},{j}): {want} vs {got}"
+                );
+            }
+        }
+    }
+}

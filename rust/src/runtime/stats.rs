@@ -1,0 +1,78 @@
+//! Execution accounting: per-artifact call counts and wall time, plus
+//! compile times. Feeds Table 3 (pruning time) and the §Perf profiles.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecRecord {
+    pub calls: usize,
+    pub total_secs: f64,
+    pub compile_secs: f64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub records: HashMap<String, ExecRecord>,
+}
+
+impl ExecStats {
+    pub fn record_exec(&mut self, key: &str, secs: f64) {
+        let r = self.records.entry(key.to_string()).or_default();
+        r.calls += 1;
+        r.total_secs += secs;
+    }
+
+    pub fn record_compile(&mut self, key: &str, secs: f64) {
+        self.records.entry(key.to_string()).or_default().compile_secs += secs;
+    }
+
+    pub fn total_exec_secs(&self) -> f64 {
+        self.records.values().map(|r| r.total_secs).sum()
+    }
+
+    pub fn total_compile_secs(&self) -> f64 {
+        self.records.values().map(|r| r.compile_secs).sum()
+    }
+
+    pub fn reset(&mut self) {
+        self.records.clear();
+    }
+
+    /// Records sorted by descending total execution time (profiling view).
+    pub fn by_time(&self) -> Vec<(&str, &ExecRecord)> {
+        let mut v: Vec<_> =
+            self.records.iter().map(|(k, r)| (k.as_str(), r)).collect();
+        v.sort_by(|a, b| b.1.total_secs.total_cmp(&a.1.total_secs));
+        v
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::from(
+            "artifact                                calls    exec(s)  compile(s)\n",
+        );
+        for (k, r) in self.by_time() {
+            out.push_str(&format!(
+                "{k:<40} {:>5} {:>9.3} {:>10.3}\n",
+                r.calls, r.total_secs, r.compile_secs
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_sorts() {
+        let mut s = ExecStats::default();
+        s.record_exec("a", 0.5);
+        s.record_exec("a", 0.5);
+        s.record_exec("b", 2.0);
+        s.record_compile("b", 1.0);
+        assert_eq!(s.records["a"].calls, 2);
+        assert!((s.total_exec_secs() - 3.0).abs() < 1e-9);
+        assert_eq!(s.by_time()[0].0, "b");
+    }
+}

@@ -1,0 +1,216 @@
+//! Sparsity-pattern algebra: the mask types the pruners emit and the
+//! native selection routines (unstructured per-row top-k, N:M groups,
+//! structured whole-row). The Pallas `nm_mask` artifact is the production
+//! path for N:M; [`nm_mask_native`] is the bit-identical rust
+//! implementation used for proptest cross-checks and for shapes with no
+//! compiled artifact.
+
+pub mod compress;
+
+use crate::tensor::Tensor;
+
+/// The sparsity patterns evaluated in the paper.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pattern {
+    /// Unstructured with a target sparsity fraction (paper: 0.5-0.8),
+    /// selected per output row (Wanda's comparison group).
+    Unstructured(f64),
+    /// N of every M contiguous input weights kept (2:4, 4:8).
+    NofM(usize, usize),
+    /// Whole output rows removed, `fraction` of rows pruned (paper §6).
+    StructuredRows(f64),
+}
+
+impl Pattern {
+    /// Target fraction of zeroed weights.
+    pub fn sparsity(&self) -> f64 {
+        match *self {
+            Pattern::Unstructured(s) => s,
+            Pattern::NofM(n, m) => 1.0 - n as f64 / m as f64,
+            Pattern::StructuredRows(s) => s,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Pattern::Unstructured(s) => format!("unstructured {s:.1}"),
+            Pattern::NofM(n, m) => format!("{n}:{m}"),
+            Pattern::StructuredRows(s) => format!("rows {s:.1}"),
+        }
+    }
+}
+
+/// Rank of each element within its group: #(strictly greater) + #(equal at
+/// an earlier index) — identical tie-breaking to the Pallas kernel and
+/// `ref.nm_mask_ref`.
+fn group_keep(scores: &[f32], keep: usize, mask: &mut [f32]) {
+    let m = scores.len();
+    for i in 0..m {
+        let mut rank = 0usize;
+        for j in 0..m {
+            if scores[j] > scores[i] || (scores[j] == scores[i] && j < i) {
+                rank += 1;
+            }
+        }
+        mask[i] = if rank < keep { 1.0 } else { 0.0 };
+    }
+}
+
+/// N:M mask, native implementation (bit-identical to the Pallas kernel).
+pub fn nm_mask_native(scores: &Tensor, n: usize, m: usize) -> Tensor {
+    let (rows, cols) = (scores.rows(), scores.cols());
+    assert_eq!(cols % m, 0, "d_in {cols} not divisible by M={m}");
+    let mut mask = Tensor::zeros(&scores.shape);
+    for r in 0..rows {
+        for g in 0..cols / m {
+            let base = r * cols + g * m;
+            group_keep(
+                &scores.data[base..base + m],
+                n,
+                &mut mask.data[base..base + m],
+            );
+        }
+    }
+    mask
+}
+
+/// Unstructured mask: keep the top `(1-sparsity)` fraction of each row.
+pub fn unstructured_mask(scores: &Tensor, sparsity: f64) -> Tensor {
+    let (rows, cols) = (scores.rows(), scores.cols());
+    let keep = ((cols as f64) * (1.0 - sparsity)).round() as usize;
+    let mut mask = Tensor::zeros(&scores.shape);
+    let mut idx: Vec<usize> = Vec::with_capacity(cols);
+    for r in 0..rows {
+        let row = &scores.data[r * cols..(r + 1) * cols];
+        idx.clear();
+        idx.extend(0..cols);
+        idx.sort_by(|&a, &b| {
+            row[b].total_cmp(&row[a]).then(a.cmp(&b))
+        });
+        for &j in idx.iter().take(keep) {
+            mask.data[r * cols + j] = 1.0;
+        }
+    }
+    mask
+}
+
+/// Structured row mask: score each output row by the mean of its element
+/// scores (paper §6's naive row-wise SP), zero the lowest `fraction` rows.
+pub fn structured_row_mask(scores: &Tensor, fraction: f64) -> Tensor {
+    let (rows, cols) = (scores.rows(), scores.cols());
+    let mut row_scores: Vec<(usize, f32)> = (0..rows)
+        .map(|r| {
+            let s: f32 = scores.data[r * cols..(r + 1) * cols].iter().sum();
+            (r, s / cols as f32)
+        })
+        .collect();
+    row_scores.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    let n_prune = ((rows as f64) * fraction).round() as usize;
+    let mut mask = Tensor::ones(&scores.shape);
+    for &(r, _) in row_scores.iter().take(n_prune) {
+        for j in 0..cols {
+            mask.data[r * cols + j] = 0.0;
+        }
+    }
+    mask
+}
+
+/// Dispatch a pattern to its native selection routine.
+pub fn select_mask(scores: &Tensor, pattern: Pattern) -> Tensor {
+    match pattern {
+        Pattern::Unstructured(s) => unstructured_mask(scores, s),
+        Pattern::NofM(n, m) => nm_mask_native(scores, n, m),
+        Pattern::StructuredRows(f) => structured_row_mask(scores, f),
+    }
+}
+
+/// Validate that a mask obeys the N:M invariant exactly.
+pub fn is_nm(mask: &Tensor, n: usize, m: usize) -> bool {
+    let cols = mask.cols();
+    if cols % m != 0 {
+        return false;
+    }
+    mask.data.chunks(m).all(|g| {
+        g.iter().all(|v| *v == 0.0 || *v == 1.0)
+            && g.iter().filter(|v| **v == 1.0).count() == n
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores(rows: usize, cols: usize, seed: u64) -> Tensor {
+        let mut s = seed;
+        let data = (0..rows * cols)
+            .map(|_| {
+                s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((s >> 33) as f32 / 4e9).abs()
+            })
+            .collect();
+        Tensor::new(vec![rows, cols], data)
+    }
+
+    #[test]
+    fn nm_invariant_holds() {
+        let s = scores(16, 32, 7);
+        for (n, m) in [(2usize, 4usize), (4, 8), (1, 4)] {
+            let mask = nm_mask_native(&s, n, m);
+            assert!(is_nm(&mask, n, m));
+            assert!((mask.zero_fraction() - (1.0 - n as f64 / m as f64)).abs()
+                < 1e-9);
+        }
+    }
+
+    #[test]
+    fn nm_keeps_largest_per_group() {
+        let s = Tensor::new(vec![1, 8], vec![0.9, 0.1, 0.5, 0.3, 4.0, 3.0, 2.0, 1.0]);
+        let mask = nm_mask_native(&s, 2, 4);
+        assert_eq!(mask.data, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn nm_tie_break_lower_index() {
+        let s = Tensor::new(vec![1, 4], vec![1.0, 1.0, 1.0, 1.0]);
+        let mask = nm_mask_native(&s, 2, 4);
+        assert_eq!(mask.data, vec![1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn unstructured_fraction() {
+        let s = scores(8, 64, 3);
+        let mask = unstructured_mask(&s, 0.5);
+        assert!((mask.zero_fraction() - 0.5).abs() < 1e-9);
+        // kept entries dominate dropped entries per row
+        for r in 0..8 {
+            let row = &s.data[r * 64..(r + 1) * 64];
+            let mrow = &mask.data[r * 64..(r + 1) * 64];
+            let kept_min = row
+                .iter()
+                .zip(mrow)
+                .filter(|(_, m)| **m == 1.0)
+                .map(|(v, _)| *v)
+                .fold(f32::INFINITY, f32::min);
+            let drop_max = row
+                .iter()
+                .zip(mrow)
+                .filter(|(_, m)| **m == 0.0)
+                .map(|(v, _)| *v)
+                .fold(f32::NEG_INFINITY, f32::max);
+            assert!(kept_min >= drop_max);
+        }
+    }
+
+    #[test]
+    fn structured_rows_zeroed() {
+        let s = scores(10, 16, 5);
+        let mask = structured_row_mask(&s, 0.3);
+        let zero_rows = (0..10)
+            .filter(|r| {
+                mask.data[r * 16..(r + 1) * 16].iter().all(|v| *v == 0.0)
+            })
+            .count();
+        assert_eq!(zero_rows, 3);
+        assert!((mask.zero_fraction() - 0.3).abs() < 1e-9);
+    }
+}

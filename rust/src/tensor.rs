@@ -1,0 +1,282 @@
+//! Minimal host tensor used throughout the coordinator, plus conversions to
+//! and from `xla::Literal` for PJRT execution.
+//!
+//! Everything on the rust side is f32 (weights, scores, masks, hidden
+//! states) or i32 (token ids); shapes are row-major and validated against
+//! the artifact manifest before every execution.
+
+use anyhow::{anyhow, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Dense row-major i32 tensor (token ids / targets).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+/// A runtime value crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Scalar extraction (shape [] or single element).
+    pub fn item(&self) -> f32 {
+        debug_assert_eq!(self.data.len(), 1);
+        self.data[0]
+    }
+
+    /// Number of rows for a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        self.shape[self.shape.len() - 1]
+    }
+
+    /// Element-wise product into a new tensor (used to realize masks).
+    pub fn hadamard(&self, other: &Tensor) -> Tensor {
+        debug_assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .collect();
+        Tensor { shape: self.shape.clone(), data }
+    }
+
+    /// In-place accumulate: self += other.
+    pub fn add_assign(&mut self, other: &Tensor) {
+        debug_assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// Fraction of exactly-zero entries (sparsity check).
+    pub fn zero_fraction(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let z = self.data.iter().filter(|v| **v == 0.0).count();
+        z as f64 / self.data.len() as f64
+    }
+
+    /// Single-copy literal creation (perf: the vec1+reshape path copied
+    /// the buffer twice; see EXPERIMENTS.md §Perf).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != shape.iter().product::<usize>() {
+            return Err(anyhow!(
+                "literal size {} != shape {:?}",
+                data.len(),
+                shape
+            ));
+        }
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Self { shape, data }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes = unsafe {
+            std::slice::from_raw_parts(
+                self.data.as_ptr() as *const u8,
+                self.data.len() * 4,
+            )
+        };
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            &self.shape,
+            bytes,
+        )?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
+        let data = lit.to_vec::<i32>()?;
+        Ok(Self { shape: shape.to_vec(), data })
+    }
+}
+
+impl Value {
+    pub fn f32(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => &t.shape,
+            Value::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "f32",
+            Value::I32(_) => "i32",
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => Err(anyhow!("expected f32 value, got i32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Tensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            Value::I32(_) => Err(anyhow!("expected f32 value, got i32")),
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Value::F32(t) => t.to_literal(),
+            Value::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+impl From<Tensor> for Value {
+    fn from(t: Tensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+impl From<TensorI32> for Value {
+    fn from(t: TensorI32) -> Self {
+        Value::I32(t)
+    }
+}
+
+/// Borrowed view of a runtime value — lets the hot path hand tensors to
+/// [`crate::runtime::Runtime::exec_v`] without cloning their buffers
+/// (EXPERIMENTS.md §Perf: removed one full input copy per dispatch).
+#[derive(Clone, Copy, Debug)]
+pub enum ValueView<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+}
+
+impl<'a> ValueView<'a> {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            ValueView::F32(t) => &t.shape,
+            ValueView::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            ValueView::F32(_) => "f32",
+            ValueView::I32(_) => "i32",
+        }
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ValueView::F32(t) => t.to_literal(),
+            ValueView::I32(t) => t.to_literal(),
+        }
+    }
+}
+
+impl<'a> From<&'a Tensor> for ValueView<'a> {
+    fn from(t: &'a Tensor) -> Self {
+        ValueView::F32(t)
+    }
+}
+
+impl<'a> From<&'a TensorI32> for ValueView<'a> {
+    fn from(t: &'a TensorI32) -> Self {
+        ValueView::I32(t)
+    }
+}
+
+impl<'a> From<&'a Value> for ValueView<'a> {
+    fn from(v: &'a Value) -> Self {
+        match v {
+            Value::F32(t) => ValueView::F32(t),
+            Value::I32(t) => ValueView::I32(t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hadamard_and_sparsity() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = Tensor::new(vec![2, 2], vec![1.0, 0.0, 0.0, 1.0]);
+        let p = a.hadamard(&m);
+        assert_eq!(p.data, vec![1.0, 0.0, 0.0, 4.0]);
+        assert_eq!(p.zero_fraction(), 0.5);
+    }
+
+    #[test]
+    fn add_assign_accumulates() {
+        let mut a = Tensor::zeros(&[3]);
+        a.add_assign(&Tensor::new(vec![3], vec![1.0, 2.0, 3.0]));
+        a.add_assign(&Tensor::new(vec![3], vec![1.0, 1.0, 1.0]));
+        assert_eq!(a.data, vec![2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,276 @@
+//! Property-based tests (in-tree harness; proptest is unavailable in the
+//! offline build): seeded randomized sweeps over the coordinator's
+//! invariants — mask algebra, selection routines, the SparseGPT solver,
+//! JSON round-trips, and the Pallas-kernel/native cross-checks.
+
+use wandapp::json::Json;
+use wandapp::rng::Rng;
+use wandapp::runtime::Runtime;
+use wandapp::sparsity::{
+    is_nm, nm_mask_native, structured_row_mask, unstructured_mask, Pattern,
+    select_mask,
+};
+use wandapp::tensor::Tensor;
+
+const CASES: usize = 60;
+
+fn rand_scores(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+    Tensor::new(
+        vec![rows, cols],
+        (0..rows * cols).map(|_| rng.gen_f32() * 10.0).collect(),
+    )
+}
+
+#[test]
+fn prop_nm_mask_exact_group_counts() {
+    let mut rng = Rng::seed_from_u64(100);
+    for case in 0..CASES {
+        let m = [4usize, 8][rng.gen_range(2)];
+        let n = 1 + rng.gen_range(m - 1);
+        let rows = 1 + rng.gen_range(24);
+        let groups = 1 + rng.gen_range(16);
+        let s = rand_scores(&mut rng, rows, groups * m);
+        let mask = nm_mask_native(&s, n, m);
+        assert!(is_nm(&mask, n, m), "case {case}: n={n} m={m}");
+        // kept scores dominate dropped scores in every group
+        for r in 0..rows {
+            for g in 0..groups {
+                let base = r * groups * m + g * m;
+                let kept_min = (0..m)
+                    .filter(|i| mask.data[base + i] == 1.0)
+                    .map(|i| s.data[base + i])
+                    .fold(f32::INFINITY, f32::min);
+                let drop_max = (0..m)
+                    .filter(|i| mask.data[base + i] == 0.0)
+                    .map(|i| s.data[base + i])
+                    .fold(f32::NEG_INFINITY, f32::max);
+                assert!(kept_min >= drop_max);
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_nm_mask_idempotent_under_masked_rescore() {
+    // Re-scoring with masked weights (zeros rank lowest) must re-select
+    // the same survivors — the stability the RO loop relies on.
+    let mut rng = Rng::seed_from_u64(200);
+    for _ in 0..CASES {
+        let rows = 1 + rng.gen_range(16);
+        let groups = 1 + rng.gen_range(8);
+        let s = rand_scores(&mut rng, rows, groups * 4);
+        let mask = nm_mask_native(&s, 2, 4);
+        let masked_scores = s.hadamard(&mask);
+        let mask2 = nm_mask_native(&masked_scores, 2, 4);
+        assert_eq!(mask.data, mask2.data);
+    }
+}
+
+#[test]
+fn prop_unstructured_row_fraction() {
+    let mut rng = Rng::seed_from_u64(300);
+    for _ in 0..CASES {
+        let rows = 1 + rng.gen_range(16);
+        let cols = 8 * (1 + rng.gen_range(12));
+        let sparsity = [0.25, 0.5, 0.625, 0.75][rng.gen_range(4)];
+        let s = rand_scores(&mut rng, rows, cols);
+        let mask = unstructured_mask(&s, sparsity);
+        let keep = ((cols as f64) * (1.0 - sparsity)).round() as usize;
+        for r in 0..rows {
+            let kept: usize = mask.data[r * cols..(r + 1) * cols]
+                .iter()
+                .filter(|v| **v == 1.0)
+                .count();
+            assert_eq!(kept, keep);
+        }
+    }
+}
+
+#[test]
+fn prop_structured_rows_all_or_nothing() {
+    let mut rng = Rng::seed_from_u64(400);
+    for _ in 0..CASES {
+        let rows = 2 + rng.gen_range(30);
+        let cols = 4 * (1 + rng.gen_range(10));
+        let frac = [0.1, 0.3, 0.5][rng.gen_range(3)];
+        let s = rand_scores(&mut rng, rows, cols);
+        let mask = structured_row_mask(&s, frac);
+        let n_zero_rows = (0..rows)
+            .filter(|r| {
+                mask.data[r * cols..(r + 1) * cols].iter().all(|v| *v == 0.0)
+            })
+            .count();
+        let n_one_rows = (0..rows)
+            .filter(|r| {
+                mask.data[r * cols..(r + 1) * cols].iter().all(|v| *v == 1.0)
+            })
+            .count();
+        assert_eq!(n_zero_rows + n_one_rows, rows, "rows must be all-or-nothing");
+        assert_eq!(n_zero_rows, ((rows as f64) * frac).round() as usize);
+    }
+}
+
+#[test]
+fn prop_select_mask_matches_target_sparsity() {
+    let mut rng = Rng::seed_from_u64(500);
+    for _ in 0..CASES {
+        let rows = 8 * (1 + rng.gen_range(4));
+        let cols = 8 * (1 + rng.gen_range(8));
+        let s = rand_scores(&mut rng, rows, cols);
+        for pattern in [
+            Pattern::NofM(2, 4),
+            Pattern::NofM(4, 8),
+            Pattern::Unstructured(0.5),
+            Pattern::StructuredRows(0.5),
+        ] {
+            let mask = select_mask(&s, pattern);
+            let got = mask.zero_fraction();
+            assert!(
+                (got - pattern.sparsity()).abs() < 0.08,
+                "{pattern:?}: {got}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_sparsegpt_preserves_pattern_and_zeros() {
+    use wandapp::pruner::sparsegpt::sparsegpt_prune;
+    let mut rng = Rng::seed_from_u64(600);
+    for _ in 0..20 {
+        let d_in = 4 * (2 + rng.gen_range(6));
+        let d_out = 2 + rng.gen_range(12);
+        // SPD Hessian from random activations
+        let n = d_in * 3;
+        let x: Vec<f32> = (0..n * d_in).map(|_| rng.gen_normal()).collect();
+        let mut h = Tensor::zeros(&[d_in, d_in]);
+        for r in 0..n {
+            for i in 0..d_in {
+                for j in 0..d_in {
+                    h.data[i * d_in + j] +=
+                        x[r * d_in + i] * x[r * d_in + j];
+                }
+            }
+        }
+        let mut w = Tensor::new(
+            vec![d_out, d_in],
+            (0..d_out * d_in).map(|_| rng.gen_normal()).collect(),
+        );
+        let mask = sparsegpt_prune(&mut w, &h, Pattern::NofM(2, 4));
+        assert!(is_nm(&mask, 2, 4));
+        for (wv, mv) in w.data.iter().zip(&mask.data) {
+            if *mv == 0.0 {
+                assert_eq!(*wv, 0.0);
+            } else {
+                assert!(wv.is_finite());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_numeric_roundtrip() {
+    let mut rng = Rng::seed_from_u64(700);
+    for _ in 0..CASES {
+        let vals: Vec<usize> =
+            (0..1 + rng.gen_range(12)).map(|_| rng.gen_range(1 << 20)).collect();
+        let j = Json::obj(vec![
+            ("shape", Json::arr_usize(&vals)),
+            ("name", Json::str("blocks.3.wq")),
+        ]);
+        let text = j.write();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("shape").unwrap().usize_vec().unwrap(), vals);
+    }
+}
+
+#[test]
+fn prop_json_string_fuzz() {
+    let mut rng = Rng::seed_from_u64(800);
+    let alphabet: Vec<char> =
+        "ab\"\\\n\té→ 日1{}[]:,".chars().collect();
+    for _ in 0..CASES {
+        let len = rng.gen_range(24);
+        let s: String =
+            (0..len).map(|_| alphabet[rng.gen_range(alphabet.len())]).collect();
+        let text = Json::Str(s.clone()).write();
+        assert_eq!(Json::parse(&text).unwrap().as_str().unwrap(), s);
+    }
+}
+
+#[test]
+fn prop_pallas_nm_kernel_matches_native() {
+    // Cross-check the production Pallas mask artifact against the native
+    // implementation on random scores, for both shipped patterns.
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first");
+    let d = rt.manifest.sizes["s0"].d;
+    let mut rng = Rng::seed_from_u64(900);
+    for case in 0..10 {
+        let s = Tensor::new(
+            vec![d, d],
+            (0..d * d).map(|_| rng.gen_f32() * 5.0).collect(),
+        );
+        for (n, m) in [(2usize, 4usize), (4, 8)] {
+            let kernel = rt
+                .exec_f32(&format!("s0_mask{n}{m}_sq"), &[s.clone().into()])
+                .unwrap()
+                .remove(0);
+            let native = nm_mask_native(&s, n, m);
+            assert_eq!(kernel.data, native.data, "case {case} {n}:{m}");
+        }
+    }
+}
+
+#[test]
+fn prop_pallas_score_kernel_matches_native() {
+    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` first");
+    let d = rt.manifest.sizes["s0"].d;
+    let ffn = rt.manifest.sizes["s0"].ffn;
+    let mut rng = Rng::seed_from_u64(1000);
+    for (key, rows, cols) in [
+        ("s0_score_sq", d, d),
+        ("s0_score_sf", ffn, d),
+        ("s0_score_fd", d, ffn),
+    ] {
+        for _ in 0..4 {
+            let w = Tensor::new(
+                vec![rows, cols],
+                (0..rows * cols).map(|_| rng.gen_normal()).collect(),
+            );
+            let g = Tensor::new(
+                vec![rows, cols],
+                (0..rows * cols).map(|_| rng.gen_f32()).collect(),
+            );
+            let xn = Tensor::new(
+                vec![cols],
+                (0..cols).map(|_| rng.gen_f32() * 3.0).collect(),
+            );
+            let alpha = 0.5 + rng.gen_f32() * 100.0;
+            let out = rt
+                .exec_f32(
+                    key,
+                    &[
+                        w.clone().into(),
+                        g.clone().into(),
+                        xn.clone().into(),
+                        Tensor::new(vec![1], vec![alpha]).into(),
+                    ],
+                )
+                .unwrap()
+                .remove(0);
+            for i in 0..rows {
+                for j in 0..cols {
+                    let want = w.data[i * cols + j].abs()
+                        * (alpha * g.data[i * cols + j] + xn.data[j]);
+                    let got = out.data[i * cols + j];
+                    assert!(
+                        (want - got).abs() <= 1e-3 * want.abs().max(1e-3),
+                        "{key} ({i},{j}): want {want} got {got}"
+                    );
+                }
+            }
+        }
+    }
+}
