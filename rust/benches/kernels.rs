@@ -1,13 +1,14 @@
 //! Kernel-level benches (in-tree harness; criterion is unavailable in the
-//! offline build): the Pallas score and N:M mask artifacts vs their native
-//! rust counterparts, the block forward, the regional-gradient pass and
-//! the RO step — the building blocks every paper table exercises.
+//! offline build): the native backend's score / N:M-mask / block kernels,
+//! benchmarked head-to-head against the PJRT artifacts when a `pjrt`
+//! build with compiled artifacts is available (pjrt-vs-native parity +
+//! speed; DESIGN.md §6).
 //!
 //! Run with `cargo bench --bench kernels`.
 
 use wandapp::bench::Group;
 use wandapp::model::load_size;
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::tensor::{Tensor, Value};
 
 fn block_inputs(w: &wandapp::model::Weights, x: &Tensor) -> Vec<Value> {
@@ -18,13 +19,12 @@ fn block_inputs(w: &wandapp::model::Weights, x: &Tensor) -> Vec<Value> {
     v
 }
 
-fn main() {
-    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first");
-    let w = load_size(&rt, "s2").unwrap();
+fn bench_backend(rt: &dyn Backend) {
+    let label = rt.name();
+    let w = load_size(rt, "s2").unwrap();
     let d = w.cfg.d;
 
-    // --- Pallas score kernel vs native formula --------------------------
+    // --- score kernel ----------------------------------------------------
     let wt = Tensor::new(
         vec![d, d],
         (0..d * d).map(|i| (i as f32 * 0.37).sin()).collect(),
@@ -37,8 +37,8 @@ fn main() {
     let alpha = Tensor::new(vec![1], vec![100.0]);
     rt.warmup("s2_score_sq").unwrap();
 
-    let mut grp = Group::new("score kernel (s2, d x d)");
-    grp.bench("pallas_score_sq", || {
+    let mut grp = Group::new(&format!("score kernel [{label}] (s2, d x d)"));
+    grp.bench(&format!("{label}_score_sq"), || {
         rt.exec_f32(
             "s2_score_sq",
             &[
@@ -50,32 +50,19 @@ fn main() {
         )
         .unwrap();
     });
-    grp.bench("native_score_sq", || {
-        let mut out = vec![0.0f32; d * d];
-        for i in 0..d {
-            for j in 0..d {
-                out[i * d + j] = wt.data[i * d + j].abs()
-                    * (100.0 * g.data[i * d + j] + xn.data[j]);
-            }
-        }
-        std::hint::black_box(&out);
-    });
 
-    // --- N:M mask: Pallas kernel vs native ------------------------------
+    // --- N:M mask selection ----------------------------------------------
     rt.warmup("s2_mask24_sq").unwrap();
     let scores = Tensor::new(
         vec![d, d],
         (0..d * d).map(|i| (i as f32 * 0.7).sin().abs()).collect(),
     );
-    let mut grp = Group::new("2:4 mask selection (s2, d x d)");
-    grp.bench("pallas_mask24_sq", || {
+    let mut grp = Group::new(&format!("2:4 mask [{label}] (s2, d x d)"));
+    grp.bench(&format!("{label}_mask24_sq"), || {
         rt.exec_f32("s2_mask24_sq", &[scores.clone().into()]).unwrap();
     });
-    grp.bench("native_mask24_sq", || {
-        std::hint::black_box(wandapp::sparsity::nm_mask_native(&scores, 2, 4));
-    });
 
-    // --- block forward / stats / rgs grad / ro step ----------------------
+    // --- block forward / stats / rgs grad / hessian ----------------------
     let x = Tensor::filled(&[8, 64, d], 0.05);
     for key in [
         "s2_block_fwd_t64",
@@ -85,7 +72,8 @@ fn main() {
     ] {
         rt.warmup(key).unwrap();
     }
-    let mut grp = Group::new("block passes (s2, B=8, T=64)").budget(2.0);
+    let mut grp =
+        Group::new(&format!("block passes [{label}] (s2, B=8, T=64)")).budget(2.0);
     grp.bench("block_fwd", || {
         rt.exec_f32("s2_block_fwd_t64", &block_inputs(&w, &x)).unwrap();
     });
@@ -101,7 +89,7 @@ fn main() {
 
     // --- ro_step ---------------------------------------------------------
     rt.warmup("s2_ro_step_t64").unwrap();
-    let m_ro = rt.manifest.consts.m_ro;
+    let m_ro = rt.manifest().consts.m_ro;
     let xr = Tensor::filled(&[m_ro, 64, d], 0.05);
     let yr = Tensor::filled(&[m_ro, 64, d], 0.05);
     let mut inputs: Vec<Value> = vec![xr.into(), yr.into()];
@@ -116,10 +104,59 @@ fn main() {
         inputs.push(Tensor::zeros(&p.shape).into());
     }
     inputs.push(Tensor::new(vec![1], vec![1e-4]).into());
-    let mut grp = Group::new("RO step (s2, M=8, T=64)").budget(3.0);
+    let mut grp = Group::new(&format!("RO step [{label}] (s2, M=8, T=64)")).budget(3.0);
     grp.bench("ro_step", || {
         rt.exec_f32("s2_ro_step_t64", &inputs).unwrap();
     });
+}
 
-    println!("\n(see EXPERIMENTS.md §Perf for tracked before/after numbers)");
+/// Cross-backend parity: identical inputs through both backends must agree
+/// within the DESIGN.md §6 tolerances.
+fn parity(native: &dyn Backend, pjrt: &dyn Backend) {
+    let d = native.manifest().sizes["s2"].d;
+    let wt = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.37).sin()).collect(),
+    );
+    let g = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|i| (i as f32 * 0.11).cos().abs()).collect(),
+    );
+    let xn = Tensor::ones(&[d]);
+    let alpha = Tensor::new(vec![1], vec![100.0]);
+    let inputs: Vec<Value> =
+        vec![wt.into(), g.into(), xn.into(), alpha.into()];
+    let a = native.exec_f32("s2_score_sq", &inputs).unwrap().remove(0);
+    let b = pjrt.exec_f32("s2_score_sq", &inputs).unwrap().remove(0);
+    // element-wise check (not a max-fold): NaN anywhere must FAIL, and
+    // f32::max would silently discard it.
+    let worst = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs() / x.abs().max(1e-3))
+        .enumerate()
+        .max_by(|l, r| l.1.total_cmp(&r.1));
+    let (idx, max_rel) = worst.expect("non-empty score output");
+    println!("\nscore parity native-vs-pjrt: max rel err {max_rel:.2e} at {idx}");
+    assert!(
+        max_rel.is_finite() && max_rel < 1e-3,
+        "backends disagree on the score kernel (elem {idx}: rel {max_rel})"
+    );
+}
+
+fn main() {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let native = wandapp::runtime::open(dir, "native").unwrap();
+    bench_backend(native.as_ref());
+
+    match wandapp::runtime::open(dir, "pjrt") {
+        Ok(pjrt) => {
+            bench_backend(pjrt.as_ref());
+            parity(native.as_ref(), pjrt.as_ref());
+        }
+        Err(e) => {
+            println!("\n(pjrt backend unavailable — native numbers only: {e})");
+        }
+    }
 }

@@ -14,13 +14,18 @@ use wandapp::latency::{
 };
 use wandapp::model::load_size;
 use wandapp::pruner::{sparsegpt::sparsegpt_prune, Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 use wandapp::tensor::Tensor;
 
 fn main() {
-    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first");
+    let rt_box = wandapp::runtime::open(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "auto",
+    )
+    .expect("backend");
+    let rt: &dyn Backend = rt_box.as_ref();
+    println!("backend: {}", rt.name());
 
     // --- per-method block pruning on s0 (Table 1/3 cost shape) ----------
     let mut grp = Group::new("prune s0, 2:4 (16 calib samples)").budget(5.0);

@@ -7,7 +7,7 @@
 use anyhow::Result;
 use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
 use wandapp::pruner::{Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
 fn main() -> Result<()> {
@@ -19,7 +19,8 @@ fn main() -> Result<()> {
         _ => Pattern::NofM(2, 4),
     };
 
-    let rt = Runtime::new("artifacts")?;
+    let rt_box = wandapp::runtime::open("artifacts", "auto")?;
+    let rt: &dyn Backend = rt_box.as_ref();
     let (dense, _) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
     println!("{size} {} — dense ppl {dense:.3}", pattern.label());
     println!("{:<12} {:>9} {:>8} {:>10}", "method", "ppl", "time(s)", "mem(MiB)");

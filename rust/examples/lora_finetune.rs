@@ -10,7 +10,7 @@ use wandapp::eval::perplexity_split;
 use wandapp::lora::{finetune, perplexity_with_lora, LoraState};
 use wandapp::model::load_size;
 use wandapp::pruner::{Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
 fn main() -> Result<()> {
@@ -18,8 +18,9 @@ fn main() -> Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(200);
-    let rt = Runtime::new("artifacts")?;
-    let size = rt.manifest.consts.primary.clone();
+    let rt_box = wandapp::runtime::open("artifacts", "auto")?;
+    let rt: &dyn Backend = rt_box.as_ref();
+    let size = rt.manifest().consts.primary.clone();
 
     let mut w = load_size(&rt, &size)?;
     let dense = perplexity_split(&rt, &w, "test", 24)?;
@@ -32,7 +33,7 @@ fn main() -> Result<()> {
     let pruned = perplexity_split(&rt, &w, "test", 24)?;
     println!("pruned ppl: {pruned:.3}");
 
-    let rank = rt.manifest.consts.lora_rank;
+    let rank = rt.manifest().consts.lora_rank;
     let mut lora = LoraState::init(&w, rank, 7);
     let rep = finetune(&rt, &w, &mut lora, steps, 1e-3, 11)?;
     println!(

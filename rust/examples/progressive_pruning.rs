@@ -6,13 +6,14 @@
 use anyhow::Result;
 use wandapp::harness::{prune_and_eval, EVAL_BATCHES};
 use wandapp::pruner::{Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
 fn main() -> Result<()> {
     let size = std::env::args().nth(1).unwrap_or_else(|| "s2".into());
-    let rt = Runtime::new("artifacts")?;
-    let n_layers = rt.manifest.size(&size)?.n_layers;
+    let rt_box = wandapp::runtime::open("artifacts", "auto")?;
+    let rt: &dyn Backend = rt_box.as_ref();
+    let n_layers = rt.manifest().size(&size)?.n_layers;
 
     println!("progressive pruning on {size} ({n_layers} blocks)");
     println!(

@@ -1,9 +1,10 @@
 //! Quickstart — the end-to-end driver (DESIGN.md §9).
 //!
-//! Loads the pretrained primary model, prunes it to 2:4 with Wanda++
-//! (RGS + regional optimization) and with plain Wanda, and reports
-//! held-out perplexity for both against the dense baseline — the paper's
-//! headline comparison, on a real (small) workload.
+//! Loads the primary model (pretrained weights when `artifacts/` exists,
+//! synthetic weights otherwise), prunes it to 2:4 with Wanda++ (RGS +
+//! regional optimization) and with plain Wanda, and reports held-out
+//! perplexity for both against the dense baseline — the paper's headline
+//! comparison, on a real (small) workload.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
@@ -11,13 +12,18 @@ use anyhow::Result;
 use wandapp::eval::perplexity_split;
 use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
 use wandapp::pruner::{Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
 fn main() -> Result<()> {
-    let rt = Runtime::new("artifacts")?;
-    let size = rt.manifest.consts.primary.clone();
-    println!("model: {size} ({} blocks)", rt.manifest.size(&size)?.n_layers);
+    let rt_box = wandapp::runtime::open("artifacts", "auto")?;
+    let rt: &dyn Backend = rt_box.as_ref();
+    let size = rt.manifest().consts.primary.clone();
+    println!(
+        "model: {size} ({} blocks, {} backend)",
+        rt.manifest().size(&size)?.n_layers,
+        rt.name()
+    );
 
     let (dense_test, dense_val) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
     println!("dense        ppl  test {dense_test:.3}  val {dense_val:.3}");

@@ -14,12 +14,12 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 use crate::rng::Rng;
 
-use crate::model::{sample_windows, CorpusData, Weights};
+use crate::model::{load_corpus, sample_windows, Weights};
 use crate::pruner::{
     method_score, sparsegpt::sparsegpt_prune, BlockGrads, BlockStats,
     Method, PruneOptions,
 };
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::sparsity::Pattern;
 use crate::tensor::{Tensor, TensorI32, ValueView};
 use crate::{BLOCK_PARAMS, PRUNABLE};
@@ -35,7 +35,7 @@ pub struct BlockReport {
 }
 
 pub struct Coordinator<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
 }
 
 /// Calibration stream: hidden-state chunks of shape [B_CAL, t, d] plus the
@@ -49,7 +49,7 @@ pub struct CalibStream {
 }
 
 impl<'rt> Coordinator<'rt> {
-    pub fn new(rt: &'rt Runtime) -> Self {
+    pub fn new(rt: &'rt dyn Backend) -> Self {
         Self { rt }
     }
 
@@ -74,23 +74,23 @@ impl<'rt> Coordinator<'rt> {
         w: &Weights,
         opts: &PruneOptions,
     ) -> Result<CalibStream> {
-        let b = self.rt.manifest.consts.b_cal;
+        let b = self.rt.manifest().consts.b_cal;
         if opts.n_calib % b != 0 {
             return Err(anyhow!(
                 "n_calib={} must be a multiple of B_CAL={b}",
                 opts.n_calib
             ));
         }
-        let size_info = self.rt.manifest.size(&w.cfg.name)?;
+        let size_info = self.rt.manifest().size(&w.cfg.name)?;
         if !size_info.seq_variants.contains(&opts.ctx) {
             return Err(anyhow!(
-                "ctx={} has no compiled artifacts for {} (variants: {:?})",
+                "ctx={} has no compiled kernels for {} (variants: {:?})",
                 opts.ctx,
                 w.cfg.name,
                 size_info.seq_variants
             ));
         }
-        let corpus = CorpusData::load(self.rt.artifacts_dir(), "train")?;
+        let corpus = load_corpus(self.rt, "train")?;
         let (inp, tgt) = sample_windows(&corpus, opts.n_calib, opts.ctx, opts.seed);
         let mut xs = Vec::new();
         let mut tokens = Vec::new();
@@ -226,10 +226,10 @@ impl<'rt> Coordinator<'rt> {
     ) -> Result<Vec<BlockGrads>> {
         let size = &w.cfg.name;
         let key = format!("{size}_full_grad");
-        if self.rt.manifest.artifact(&key).is_err() {
+        if !self.rt.supports(&key) {
             return Err(anyhow!(
-                "GBLM needs the full-model gradient artifact, which is only \
-                 compiled for the primary size (full-model BP at scale is \
+                "GBLM needs the full-model gradient kernel, which is only \
+                 available for the primary size (full-model BP at scale is \
                  exactly what the paper avoids)"
             ));
         }
@@ -310,8 +310,8 @@ impl<'rt> Coordinator<'rt> {
         lr: f32,
         rng: &mut Rng,
     ) -> Result<f32> {
-        let m_ro = self.rt.manifest.consts.m_ro;
-        let b = self.rt.manifest.consts.b_cal;
+        let m_ro = self.rt.manifest().consts.m_ro;
+        let b = self.rt.manifest().consts.b_cal;
         let idx = rng.sample_indices(calib.n, m_ro);
 
         let row = t * d;

@@ -12,19 +12,19 @@ use anyhow::Result;
 use crate::eval::forward_hidden;
 use crate::model::Weights;
 use crate::rng::Rng;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::TensorI32;
 
 /// Sample `n_tokens` continuation bytes after `prompt`.
 pub fn generate(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     prompt: &str,
     n_tokens: usize,
     temperature: f32,
     seed: u64,
 ) -> Result<String> {
-    let b = rt.manifest.consts.b_eval;
+    let b = rt.manifest().consts.b_eval;
     let t = w.cfg.seq;
     let v = w.cfg.vocab;
     let size = &w.cfg.name;

@@ -1,15 +1,15 @@
-//! Perplexity evaluation through the AOT artifacts: embed -> N x block_fwd
-//! -> head_loss, accumulated over contiguous eval batches.
+//! Perplexity evaluation through the backend kernels: embed ->
+//! N x block_fwd -> head_loss, accumulated over contiguous eval batches.
 
 use anyhow::Result;
 
-use crate::model::{CorpusData, EvalBatches, Weights};
-use crate::runtime::Runtime;
+use crate::model::{load_corpus, CorpusData, EvalBatches, Weights};
+use crate::runtime::Backend;
 use crate::tensor::{Tensor, TensorI32, ValueView};
 
 /// Run embedding + all decoder blocks, returning the final hidden states.
 pub fn forward_hidden(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     tokens: &TensorI32,
 ) -> Result<Tensor> {
@@ -36,12 +36,12 @@ pub fn forward_hidden(
 
 /// Perplexity over up to `max_batches` contiguous eval batches.
 pub fn perplexity(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     corpus: &CorpusData,
     max_batches: usize,
 ) -> Result<f64> {
-    let b = rt.manifest.consts.b_eval;
+    let b = rt.manifest().consts.b_eval;
     let t = w.cfg.seq;
     let size = &w.cfg.name;
     let head_key = format!("{size}_head_loss_t{t}");
@@ -64,13 +64,14 @@ pub fn perplexity(
     Ok((total_nll / total_cnt.max(1.0)).exp())
 }
 
-/// Convenience: perplexity on a named corpus split from the artifacts dir.
+/// Convenience: perplexity on a named corpus split from the artifacts dir
+/// (synthetic fallback when the split file is absent).
 pub fn perplexity_split(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     split: &str,
     max_batches: usize,
 ) -> Result<f64> {
-    let corpus = CorpusData::load(rt.artifacts_dir(), split)?;
+    let corpus = load_corpus(rt, split)?;
     perplexity(rt, w, &corpus, max_batches)
 }

@@ -9,7 +9,7 @@ use anyhow::Result;
 use crate::eval::forward_hidden;
 use crate::json::Json;
 use crate::model::Weights;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::{Tensor, TensorI32};
 
 #[derive(Debug, Clone)]
@@ -32,9 +32,17 @@ pub struct TaskResult {
     pub n: usize,
 }
 
-pub fn load_tasks(rt: &Runtime) -> Result<Vec<Task>> {
-    let text =
-        std::fs::read_to_string(rt.artifacts_dir().join("tasks.json"))?;
+/// Load `tasks.json` from the artifacts dir, falling back to the nine
+/// synthetic tasks only on a bare checkout (no built artifacts at all)
+/// — the same substitution policy as `model::load_size` (DESIGN.md §3).
+/// `max_examples` sizes the synthetic fallback so a larger
+/// `--max-examples` request is honored rather than silently capped.
+pub fn load_tasks(rt: &dyn Backend, max_examples: usize) -> Result<Vec<Task>> {
+    let path = rt.artifacts_dir().join("tasks.json");
+    if !path.exists() && !rt.artifacts_dir().join("manifest.json").exists() {
+        return Ok(crate::model::synth::synthetic_tasks(max_examples));
+    }
+    let text = std::fs::read_to_string(path)?;
     let j = Json::parse(&text)?;
     j.as_arr()?
         .iter()
@@ -107,12 +115,12 @@ fn span_loglik(
 
 /// Evaluate all tasks; `max_examples` caps per-task cost.
 pub fn run_tasks(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     max_examples: usize,
 ) -> Result<Vec<TaskResult>> {
-    let tasks = load_tasks(rt)?;
-    let b = rt.manifest.consts.b_eval;
+    let tasks = load_tasks(rt, max_examples)?;
+    let b = rt.manifest().consts.b_eval;
     let t = w.cfg.seq;
     let vocab = w.cfg.vocab;
     let size = &w.cfg.name;

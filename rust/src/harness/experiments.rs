@@ -5,12 +5,12 @@ use anyhow::Result;
 
 use crate::harness::runs::{dense_ppl, prune_and_eval, EVAL_BATCHES};
 use crate::pruner::{Method, PruneOptions};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::sparsity::Pattern;
 
 /// Figure 1: relative ppl improvement of Wanda++ over Wanda, 2:4, across
 /// the model-size ladder.
-pub fn fig1(rt: &Runtime, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
+pub fn fig1(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
     println!("== Figure 1: relative ppl improvement over Wanda (2:4) ==");
     let mut rows = Vec::new();
     for size in sizes {
@@ -39,9 +39,9 @@ pub fn fig1(rt: &Runtime, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
 
 /// Figure 3: perplexity as progressively more decoder blocks are pruned
 /// (2 at a time), 2:4 and 4:8, on both eval splits.
-pub fn fig3(rt: &Runtime, size: &str) -> Result<Vec<Fig3Row>> {
+pub fn fig3(rt: &dyn Backend, size: &str) -> Result<Vec<Fig3Row>> {
     println!("== Figure 3: progressive block pruning ({size}) ==");
-    let n_layers = rt.manifest.size(size)?.n_layers;
+    let n_layers = rt.manifest().size(size)?.n_layers;
     let mut rows = Vec::new();
     for method in [Method::Wanda, Method::WandaPP] {
         for (n, m) in [(2usize, 4usize), (4, 8)] {
@@ -80,7 +80,7 @@ pub struct Fig3Row {
 
 /// Table 1: the full method x pattern x size perplexity grid.
 pub fn table1(
-    rt: &Runtime,
+    rt: &dyn Backend,
     sizes: &[&str],
     methods: &[Method],
 ) -> Result<Vec<Table1Row>> {
@@ -141,7 +141,7 @@ pub struct Table1Row {
 }
 
 /// Table 2: zero-shot accuracy across the nine synthetic tasks, 2:4.
-pub fn table2(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+pub fn table2(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     use crate::eval::run_tasks;
     use crate::model::load_size;
 
@@ -193,7 +193,7 @@ pub fn table2(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
 }
 
 /// Table 3: pruning time and memory per method.
-pub fn table3(rt: &Runtime, sizes: &[&str]) -> Result<Vec<Table3Row>> {
+pub fn table3(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<Table3Row>> {
     println!("== Table 3: pruning time (s) and peak memory (MiB) ==");
     let mut rows = Vec::new();
     for &method in &[
@@ -239,11 +239,11 @@ pub struct Table3Row {
 }
 
 /// Table 4: LoRA fine-tuning after pruning (Wanda vs Wanda++).
-pub fn table4(rt: &Runtime, steps: usize) -> Result<Vec<Table4Row>> {
+pub fn table4(rt: &dyn Backend, steps: usize) -> Result<Vec<Table4Row>> {
     use crate::lora::{finetune, perplexity_with_lora, LoraState};
     use crate::model::load_size;
 
-    let size = rt.manifest.consts.primary.clone();
+    let size = rt.manifest().consts.primary.clone();
     println!("== Table 4: perplexity with LoRA ({size}, 2:4, {steps} steps) ==");
     let (dense_test, _) = dense_ppl(rt, &size, EVAL_BATCHES)?;
     let mut rows = Vec::new();
@@ -253,7 +253,7 @@ pub fn table4(rt: &Runtime, steps: usize) -> Result<Vec<Table4Row>> {
         let coord = crate::coordinator::Coordinator::new(rt);
         coord.prune(&mut w, &opts)?;
         let pruned = crate::eval::perplexity_split(rt, &w, "test", EVAL_BATCHES)?;
-        let rank = rt.manifest.consts.lora_rank;
+        let rank = rt.manifest().consts.lora_rank;
         let mut lora = LoraState::init(&w, rank, 7);
         finetune(rt, &w, &mut lora, steps, 1e-3, 11)?;
         let tuned = perplexity_with_lora(rt, &w, &lora, "test", EVAL_BATCHES)?;
@@ -281,7 +281,7 @@ pub struct Table4Row {
 }
 
 /// Table 5: higher unstructured sparsity (0.6 / 0.7 / 0.8).
-pub fn table5(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+pub fn table5(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     println!("== Table 5: high unstructured sparsity ({size}) ==");
     let mut rows = Vec::new();
     for method in [Method::Gblm, Method::Wanda, Method::WandaPP] {
@@ -306,7 +306,7 @@ pub fn table5(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
 }
 
 /// Table 6: structured row pruning (Wanda-SP vs Wanda++-SP).
-pub fn table6(rt: &Runtime, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
+pub fn table6(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     println!("== Table 6: structured row pruning ({size}) ==");
     let mut rows = Vec::new();
     for (label, method) in
@@ -349,7 +349,7 @@ pub fn table7_table9() {
 }
 
 /// Table 8: the RGS alpha ablation.
-pub fn table8(rt: &Runtime, size: &str) -> Result<Vec<(f32, f64)>> {
+pub fn table8(rt: &dyn Backend, size: &str) -> Result<Vec<(f32, f64)>> {
     println!("== Table 8: alpha ablation (RGS, 2:4, {size}) ==");
     let mut rows = Vec::new();
     for alpha in [1.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0, 1e4, 1e6] {
@@ -365,12 +365,12 @@ pub fn table8(rt: &Runtime, size: &str) -> Result<Vec<(f32, f64)>> {
 /// Figure 4: calibration-size sensitivity box plot data. Returns, per
 /// (method, n, ctx) setting, the perplexities across `runs` seeds.
 pub fn fig4(
-    rt: &Runtime,
+    rt: &dyn Backend,
     size: &str,
     runs: usize,
 ) -> Result<Vec<Fig4Row>> {
     println!("== Figure 4: calibration sensitivity ({size}, {runs} runs) ==");
-    let variants = rt.manifest.size(size)?.seq_variants.clone();
+    let variants = rt.manifest().size(size)?.seq_variants.clone();
     let settings: Vec<(usize, usize)> = [
         (8usize, 8usize),
         (8, 16),
@@ -445,7 +445,7 @@ pub struct Fig4Row {
 /// Ablation (extension beyond the paper's tables): how many RO rounds K
 /// are needed — the paper fixes K=5 and calls RO "only 5 iterations";
 /// this sweep shows the marginal value of each round.
-pub fn ablation_k(rt: &Runtime, size: &str) -> Result<Vec<(usize, f64)>> {
+pub fn ablation_k(rt: &dyn Backend, size: &str) -> Result<Vec<(usize, f64)>> {
     println!("== Ablation: RO rounds K (2:4, {size}) ==");
     let mut rows = Vec::new();
     for k in [0usize, 1, 2, 3, 5, 8] {
@@ -467,7 +467,7 @@ pub fn ablation_k(rt: &Runtime, size: &str) -> Result<Vec<(usize, f64)>> {
 /// Ablation (extension): RO minibatch source — does re-sampling the M RO
 /// inputs each round (the paper's design) beat a fixed set? Approximated
 /// by comparing seeds, since sampling is seed-driven.
-pub fn ablation_seeds(rt: &Runtime, size: &str, n: usize) -> Result<Vec<f64>> {
+pub fn ablation_seeds(rt: &dyn Backend, size: &str, n: usize) -> Result<Vec<f64>> {
     println!("== Ablation: seed variance of wanda++ (2:4, {size}) ==");
     let mut ppls = Vec::new();
     for seed in 0..n as u64 {
@@ -485,7 +485,7 @@ pub fn ablation_seeds(rt: &Runtime, size: &str, n: usize) -> Result<Vec<f64>> {
 
 /// Dispatcher used by the CLI `repro` subcommand.
 pub fn run_experiment(
-    rt: &Runtime,
+    rt: &dyn Backend,
     name: &str,
     sizes: Option<&str>,
     runs: usize,
@@ -496,7 +496,7 @@ pub fn run_experiment(
         .map(|s| s.to_string())
         .collect();
     let size_refs: Vec<&str> = size_vec.iter().map(|s| s.as_str()).collect();
-    let primary = rt.manifest.consts.primary.clone();
+    let primary = rt.manifest().consts.primary.clone();
 
     match name {
         "fig1" => {

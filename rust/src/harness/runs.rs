@@ -7,7 +7,7 @@ use crate::coordinator::{Coordinator, PruneReport};
 use crate::eval::perplexity_split;
 use crate::model::load_size;
 use crate::pruner::PruneOptions;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// Default number of eval batches (covers the full test split at 8x64).
 pub const EVAL_BATCHES: usize = 24;
@@ -23,7 +23,7 @@ pub struct PruneEval {
 
 /// Prune a fresh copy of `size` under `opts` and evaluate it.
 pub fn prune_and_eval(
-    rt: &Runtime,
+    rt: &dyn Backend,
     size: &str,
     opts: &PruneOptions,
     eval_batches: usize,
@@ -37,7 +37,7 @@ pub fn prune_and_eval(
 }
 
 /// Dense (unpruned) perplexities of a size.
-pub fn dense_ppl(rt: &Runtime, size: &str, eval_batches: usize) -> Result<(f64, f64)> {
+pub fn dense_ppl(rt: &dyn Backend, size: &str, eval_batches: usize) -> Result<(f64, f64)> {
     let w = load_size(rt, size)?;
     Ok((
         perplexity_split(rt, &w, "test", eval_batches)?,

@@ -5,24 +5,27 @@
 //! Optimization (RO, paper Eq. 5) that tunes each decoder block against its
 //! dense output — never materializing full-model gradients.
 //!
-//! Architecture (DESIGN.md): a rust coordinator (this crate) drives
-//! AOT-compiled JAX/Pallas compute graphs through the PJRT C API. Python is
-//! build-time only; this crate is self-contained once `make artifacts` has
-//! produced `artifacts/*.hlo.txt`, the pretrained weight files, and the
-//! manifest.
+//! Architecture (DESIGN.md §1): a rust coordinator drives every kernel
+//! through the [`runtime::Backend`] trait. The default
+//! [`runtime::NativeBackend`] implements all kernels in pure Rust and runs
+//! on a bare checkout — no artifacts, Python step, or external libraries.
+//! With the `pjrt` cargo feature, the same keys execute AOT-compiled
+//! JAX/Pallas compute graphs through the PJRT C API (`make artifacts`).
 //!
 //! Quick tour:
-//! - [`runtime`] — PJRT client + artifact registry (HLO text -> executable).
-//! - [`model`] — model config, weight store, calibration/eval data.
+//! - [`runtime`] — the [`runtime::Backend`] trait, the native kernel
+//!   implementations, and (feature `pjrt`) the HLO-artifact executor.
+//! - [`model`] — model config, weight store, calibration/eval data, and
+//!   deterministic synthetic fallbacks for artifact-free runs.
 //! - [`sparsity`] — mask algebra: unstructured, 2:4, 4:8, structured rows.
 //! - [`pruner`] — scoring methods: magnitude, Wanda, SparseGPT, GBLM,
-//!   Wanda++ (RGS / RO / full), all behind one [`pruner::PruneMethod`] enum.
+//!   Wanda++ (RGS / RO / full), all behind one [`pruner::Method`] enum.
 //! - [`coordinator`] — the block-streaming pipeline (the paper's Alg. 1)
 //!   with time/memory accounting.
 //! - [`eval`] — perplexity + the zero-shot likelihood-ranking task suite.
 //! - [`latency`] — roofline latency simulator for the 2:4 deployment tables.
 //! - [`lora`] — sparsity-aware LoRA fine-tuning (paper §5.6).
-//! - [`harness`] — one driver per paper table/figure.
+//! - [`harness`] — one driver per paper table/figure (DESIGN.md §7).
 
 pub mod bench;
 pub mod coordinator;

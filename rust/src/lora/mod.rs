@@ -6,9 +6,9 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::model::{sample_windows, CorpusData, Weights};
+use crate::model::{load_corpus, sample_windows, Weights};
 use crate::rng::Rng;
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::tensor::{Tensor, ValueView};
 
 /// LoRA adapter state: a/b per (module, layer), plus optimizer state.
@@ -65,7 +65,7 @@ fn all_weight_inputs<'a>(w: &'a Weights, inputs: &mut Vec<ValueView<'a>>) {
 
 /// Fine-tune adapters on `w` (typically a pruned model) for `steps` steps.
 pub fn finetune(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     lora: &mut LoraState,
     steps: usize,
@@ -74,12 +74,14 @@ pub fn finetune(
 ) -> Result<LoraReport> {
     let size = &w.cfg.name;
     let key = format!("{size}_lora_step");
-    if rt.manifest.artifact(&key).is_err() {
-        return Err(anyhow!("lora_step artifact only compiled for the primary size"));
+    if !rt.supports(&key) {
+        return Err(anyhow!(
+            "lora_step kernel only available for the primary size"
+        ));
     }
-    let b = rt.manifest.consts.b_cal;
+    let b = rt.manifest().consts.b_cal;
     let t = w.cfg.seq;
-    let corpus = CorpusData::load(rt.artifacts_dir(), "train")?;
+    let corpus = load_corpus(rt, "train")?;
     let t0 = std::time::Instant::now();
     let mut losses = Vec::with_capacity(steps);
     for step in 0..steps {
@@ -108,7 +110,7 @@ pub fn finetune(
 
 /// Perplexity of the model *with adapters applied*, on a corpus split.
 pub fn perplexity_with_lora(
-    rt: &Runtime,
+    rt: &dyn Backend,
     w: &Weights,
     lora: &LoraState,
     split: &str,
@@ -116,9 +118,9 @@ pub fn perplexity_with_lora(
 ) -> Result<f64> {
     let size = &w.cfg.name;
     let key = format!("{size}_lora_eval");
-    let b = rt.manifest.consts.b_cal;
+    let b = rt.manifest().consts.b_cal;
     let t = w.cfg.seq;
-    let corpus = CorpusData::load(rt.artifacts_dir(), split)?;
+    let corpus = load_corpus(rt, split)?;
     let mut nll = 0.0f64;
     let mut cnt = 0.0f64;
     for (tok, tgt) in crate::model::EvalBatches::new(&corpus, b, t, max_batches)

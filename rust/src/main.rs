@@ -1,9 +1,11 @@
 //! wandapp CLI: prune / eval / tasks / repro / latency / profile.
 //!
 //! The leader entrypoint for the Wanda++ reproduction. All compute goes
-//! through AOT-compiled HLO artifacts (build them once with
-//! `make artifacts`); this binary never touches python. Argument parsing
-//! is hand-rolled (the offline build vendors no CLI crate).
+//! through a [`wandapp::runtime::Backend`]: the pure-Rust native backend
+//! (default — no artifacts or Python step needed) or the PJRT backend
+//! (`--backend pjrt`, requires the `pjrt` build and `make artifacts`).
+//! Argument parsing is hand-rolled (the offline build vendors no CLI
+//! crate).
 
 use anyhow::{anyhow, bail, Result};
 
@@ -11,13 +13,19 @@ use wandapp::eval::{perplexity_split, run_tasks};
 use wandapp::harness;
 use wandapp::model::load_size;
 use wandapp::pruner::{Method, PruneOptions};
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
 const USAGE: &str = "\
 wandapp — Wanda++ pruning framework (ACL 2025 reproduction)
 
-USAGE: wandapp [--artifacts DIR] <command> [options]
+USAGE: wandapp [--artifacts DIR] [--backend native|pjrt|auto] <command> [options]
+
+BACKENDS
+  native   pure-Rust kernels; runs on a bare checkout (default via auto)
+  pjrt     AOT HLO artifacts through PJRT (needs `make artifacts` and a
+           build with --features pjrt)
+  auto     pjrt when available, else native
 
 COMMANDS
   prune    --size s2 --method wanda++ --pattern 2:4 [--calib 32]
@@ -110,7 +118,8 @@ fn main() -> Result<()> {
         .first()
         .ok_or_else(|| anyhow!("no command\n{USAGE}"))?
         .clone();
-    let rt = Runtime::new(&artifacts)?;
+    let rt_box = wandapp::runtime::open(&artifacts, &args.get("backend", "auto"))?;
+    let rt: &dyn Backend = rt_box.as_ref();
 
     match cmd.as_str() {
         "prune" => {
@@ -127,12 +136,12 @@ fn main() -> Result<()> {
             opts.ro_lr = args.get_parse("ro-lr", opts.ro_lr)?;
 
             let (dense_test, _) =
-                harness::dense_ppl(&rt, &size, harness::EVAL_BATCHES)?;
-            let mut w = load_size(&rt, &size)?;
-            let coord = wandapp::coordinator::Coordinator::new(&rt);
+                harness::dense_ppl(rt, &size, harness::EVAL_BATCHES)?;
+            let mut w = load_size(rt, &size)?;
+            let coord = wandapp::coordinator::Coordinator::new(rt);
             let report = coord.prune(&mut w, &opts)?;
-            let ppl_test = perplexity_split(&rt, &w, "test", harness::EVAL_BATCHES)?;
-            let ppl_val = perplexity_split(&rt, &w, "val", harness::EVAL_BATCHES)?;
+            let ppl_test = perplexity_split(rt, &w, "test", harness::EVAL_BATCHES)?;
+            let ppl_val = perplexity_split(rt, &w, "val", harness::EVAL_BATCHES)?;
             println!("{}", report.summary());
             println!("ppl(test): dense {dense_test:.3} -> pruned {ppl_test:.3}");
             println!("ppl(val):  pruned {ppl_val:.3}");
@@ -144,10 +153,10 @@ fn main() -> Result<()> {
         "eval" => {
             let w = match args.get_opt("weights") {
                 Some(p) => wandapp::model::Weights::load(p)?,
-                None => load_size(&rt, &args.get("size", "s2"))?,
+                None => load_size(rt, &args.get("size", "s2"))?,
             };
-            let test = perplexity_split(&rt, &w, "test", harness::EVAL_BATCHES)?;
-            let val = perplexity_split(&rt, &w, "val", harness::EVAL_BATCHES)?;
+            let test = perplexity_split(rt, &w, "test", harness::EVAL_BATCHES)?;
+            let val = perplexity_split(rt, &w, "val", harness::EVAL_BATCHES)?;
             println!(
                 "{} ({:.2}M params, sparsity {:.3}): test {test:.3}  val {val:.3}",
                 w.cfg.name,
@@ -158,10 +167,10 @@ fn main() -> Result<()> {
         "tasks" => {
             let w = match args.get_opt("weights") {
                 Some(p) => wandapp::model::Weights::load(p)?,
-                None => load_size(&rt, &args.get("size", "s2"))?,
+                None => load_size(rt, &args.get("size", "s2"))?,
             };
             let max = args.get_parse("max-examples", 50)?;
-            let results = run_tasks(&rt, &w, max)?;
+            let results = run_tasks(rt, &w, max)?;
             let mut mean = 0.0;
             for r in &results {
                 println!("{:<12} {:.1}% (n={})", r.name, 100.0 * r.accuracy, r.n);
@@ -176,25 +185,25 @@ fn main() -> Result<()> {
                 .ok_or_else(|| anyhow!("repro needs an experiment name"))?;
             let sizes = args.get_opt("sizes");
             let runs = args.get_parse("runs", 10)?;
-            harness::run_experiment(&rt, exp, sizes.as_deref(), runs)?;
+            harness::run_experiment(rt, exp, sizes.as_deref(), runs)?;
         }
         "latency" => harness::table7_table9(),
         "generate" => {
             let w = match args.get_opt("weights") {
                 Some(p) => wandapp::model::Weights::load(p)?,
-                None => load_size(&rt, &args.get("size", "s2"))?,
+                None => load_size(rt, &args.get("size", "s2"))?,
             };
             let prompt = args.get("prompt", "the farmer carries a ");
             let n = args.get_parse("tokens", 200)?;
             let temp = args.get_parse("temp", 0.8f32)?;
             let seed = args.get_parse("seed", 0u64)?;
-            let text = wandapp::eval::generate(&rt, &w, &prompt, n, temp, seed)?;
+            let text = wandapp::eval::generate(rt, &w, &prompt, n, temp, seed)?;
             println!("{prompt}{text}");
         }
         "inspect" => {
             let w = match args.get_opt("weights") {
                 Some(p) => wandapp::model::Weights::load(p)?,
-                None => load_size(&rt, &args.get("size", "s2"))?,
+                None => load_size(rt, &args.get("size", "s2"))?,
             };
             let vb = match args.get("fmt", "fp16").as_str() {
                 "fp16" => 2,
@@ -231,11 +240,11 @@ fn main() -> Result<()> {
             let mut opts =
                 PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
             opts.n_calib = 16;
-            let mut w = load_size(&rt, &size)?;
-            let coord = wandapp::coordinator::Coordinator::new(&rt);
+            let mut w = load_size(rt, &size)?;
+            let coord = wandapp::coordinator::Coordinator::new(rt);
             let rep = coord.prune(&mut w, &opts)?;
             println!("{}", rep.summary());
-            println!("{}", rt.stats.borrow().report());
+            println!("{}", rt.stats().report());
         }
         other => bail!("unknown command `{other}`\n{USAGE}"),
     }

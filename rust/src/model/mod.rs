@@ -1,18 +1,70 @@
 //! Model substrate: configuration, the weight store (the `WPPW` binary
-//! format written by `python -m compile.pretrain`), and calibration / eval
-//! data handling.
+//! format written by `python -m compile.pretrain`), calibration / eval
+//! data handling, and deterministic synthetic fallbacks for artifact-free
+//! runs (DESIGN.md §3).
 
 mod data;
 mod store;
+pub mod synth;
 
 pub use data::{sample_windows, CorpusData, EvalBatches};
 pub use store::{ModelConfig, Weights};
 
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 use crate::Result;
 
 /// Load the weight file for a model size from the artifacts directory.
-pub fn load_size(rt: &Runtime, size: &str) -> Result<Weights> {
+///
+/// On a bare checkout (no `artifacts/manifest.json`, i.e. no build step
+/// has run at all), falls back to deterministic synthetic weights shaped
+/// by the backend's manifest — so `prune` / `eval` run end-to-end
+/// anywhere. A *partially built* artifacts dir (manifest present but
+/// this size's weights missing) is a real error: silently substituting
+/// random weights would produce plausible-looking but meaningless
+/// measurements next to trained ones.
+pub fn load_size(rt: &dyn Backend, size: &str) -> Result<Weights> {
     let path = rt.artifacts_dir().join(format!("weights_{size}.bin"));
-    Weights::load(&path)
+    if path.exists() {
+        return Weights::load(&path);
+    }
+    if rt.artifacts_dir().join("manifest.json").exists() {
+        return Err(crate::anyhow!(
+            "{:?} not found but the artifacts dir is built — run \
+             `python -m compile.pretrain` for size {size} (synthetic \
+             fallback applies only to bare checkouts)",
+            path
+        ));
+    }
+    eprintln!(
+        "note: no artifacts found — using deterministic SYNTHETIC weights \
+         for {size}; metrics are structural only (DESIGN.md §3)"
+    );
+    let info = rt.manifest().size(size)?;
+    let cfg = ModelConfig {
+        name: size.to_string(),
+        d: info.d,
+        n_layers: info.n_layers,
+        n_heads: info.n_heads,
+        ffn: info.ffn,
+        vocab: info.vocab,
+        seq: info.seq,
+    };
+    // Seed derived from the size name: stable across runs and sessions.
+    let seed = size.bytes().fold(0u64, |a, b| a.wrapping_mul(131).wrapping_add(b as u64));
+    Ok(Weights::synthetic(&cfg, seed))
+}
+
+/// Load a corpus split, falling back to the deterministic synthetic
+/// corpus only on a bare checkout — same policy as [`load_size`]
+/// (DESIGN.md §3). A present-but-unreadable file, or a built artifacts
+/// dir with the split missing, is a real error and propagates: silently
+/// substituting synthetic data for a trained corpus would corrupt every
+/// downstream measurement.
+pub fn load_corpus(rt: &dyn Backend, split: &str) -> Result<CorpusData> {
+    let path = rt.artifacts_dir().join(format!("corpus_{split}.bin"));
+    if path.exists() || rt.artifacts_dir().join("manifest.json").exists() {
+        CorpusData::load(rt.artifacts_dir(), split)
+    } else {
+        Ok(synth::synthetic_corpus(split, 1 << 15))
+    }
 }

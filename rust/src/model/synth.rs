@@ -1,0 +1,191 @@
+//! Deterministic synthetic fallbacks for a bare checkout (DESIGN.md §3):
+//! when `artifacts/` is missing (no Python build step has run), the native
+//! backend still needs weights, corpora, and a task suite. Everything here
+//! is seeded and reproducible, mirroring the shapes and init scales of
+//! `python/compile/model.py` / `compile.corpus` without the training step
+//! — numbers are not comparable to the pretrained artifacts, but every
+//! pipeline invariant (sparsity, determinism, RO loss descent, memory
+//! asymmetry) holds and is what the artifact-free tests assert.
+
+use std::collections::HashMap;
+
+use crate::model::{CorpusData, ModelConfig, Weights};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+use crate::BLOCK_PARAMS;
+
+fn normal_tensor(rng: &mut Rng, shape: &[usize], scale: f32) -> Tensor {
+    Tensor::new(
+        shape.to_vec(),
+        (0..shape.iter().product::<usize>())
+            .map(|_| rng.gen_normal() * scale)
+            .collect(),
+    )
+}
+
+impl Weights {
+    /// Random-init weights mirroring `init_params` in
+    /// `python/compile/model.py`: normal draws scaled by `d^-1/2`
+    /// (`ffn^-1/2` for the down projection, extra `(2L)^-1/2` damping on
+    /// the residual-writing projections), unit norms, 0.02-scaled
+    /// embeddings. Deterministic in `seed`.
+    pub fn synthetic(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::seed_from_u64(seed ^ 0x5ee1_c0de);
+        let (d, f, l) = (cfg.d, cfg.ffn, cfg.n_layers);
+        let s_d = (d as f32).powf(-0.5);
+        let s_f = (f as f32).powf(-0.5);
+        let damp = (2.0 * l as f32).powf(-0.5);
+        let mut map = HashMap::new();
+        map.insert(
+            "embed".to_string(),
+            normal_tensor(&mut rng, &[cfg.vocab, d], 0.02),
+        );
+        for li in 0..l {
+            for name in BLOCK_PARAMS {
+                let t = match name {
+                    "ln1" | "ln2" => Tensor::ones(&[d]),
+                    "wq" | "wk" | "wv" => {
+                        normal_tensor(&mut rng, &[d, d], s_d)
+                    }
+                    "wo" => normal_tensor(&mut rng, &[d, d], s_d * damp),
+                    "wg" | "wu" => normal_tensor(&mut rng, &[f, d], s_d),
+                    "wd" => normal_tensor(&mut rng, &[d, f], s_f * damp),
+                    other => panic!("unknown block param {other}"),
+                };
+                map.insert(format!("blocks.{li}.{name}"), t);
+            }
+        }
+        map.insert("ln_f".to_string(), Tensor::ones(&[d]));
+        map.insert(
+            "head".to_string(),
+            normal_tensor(&mut rng, &[cfg.vocab, d], s_d),
+        );
+        Weights { cfg: cfg.clone(), map }
+    }
+}
+
+/// Word list for the synthetic corpus: enough lexical structure that
+/// byte-level statistics are non-uniform, fully deterministic.
+const WORDS: [&str; 24] = [
+    "the", "cat", "dog", "farmer", "teacher", "sailor", "chases", "sees",
+    "helps", "follows", "kind", "brave", "gentle", "calm", "village",
+    "forest", "market", "river", "lantern", "basket", "letter", "coin",
+    "morning", "evening",
+];
+
+/// Deterministic synthetic corpus split (raw utf-8 bytes, byte == token).
+/// Each split uses a distinct seed so train/val/test are disjoint streams.
+pub fn synthetic_corpus(split: &str, len: usize) -> CorpusData {
+    let seed = match split {
+        "train" => 0x7261_696e,
+        "val" => 0x0076_616c,
+        _ => 0x7465_7374,
+    };
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut text = String::with_capacity(len + 64);
+    while text.len() < len {
+        // simple S-V-O sentence templates over the fixed lexicon
+        let n1 = WORDS[1 + rng.gen_range(5)];
+        let v = WORDS[6 + rng.gen_range(4)];
+        let adj = WORDS[10 + rng.gen_range(4)];
+        let n2 = WORDS[14 + rng.gen_range(4)];
+        let obj = WORDS[18 + rng.gen_range(4)];
+        let time = WORDS[22 + rng.gen_range(2)];
+        text.push_str(&format!(
+            "the {adj} {n1} {v} the {obj} near the {n2} in the {time}. "
+        ));
+    }
+    text.truncate(len);
+    CorpusData { bytes: text.into_bytes() }
+}
+
+/// Nine synthetic zero-shot tasks (Table 2 substitute) generated without
+/// `tasks.json`: two-choice likelihood-ranking examples whose correct
+/// continuation follows the corpus grammar and whose distractor does not.
+pub fn synthetic_tasks(n_per_task: usize) -> Vec<crate::eval::Task> {
+    use crate::eval::tasks::Example;
+    let names = [
+        "agree", "select", "place", "color", "number", "order", "time",
+        "object", "copula",
+    ];
+    let mut out = Vec::with_capacity(names.len());
+    for (ti, name) in names.iter().enumerate() {
+        let mut rng = Rng::seed_from_u64(0xbead + ti as u64);
+        let mut examples = Vec::with_capacity(n_per_task);
+        for _ in 0..n_per_task {
+            let n1 = WORDS[1 + rng.gen_range(5)];
+            let v = WORDS[6 + rng.gen_range(4)];
+            let obj = WORDS[18 + rng.gen_range(4)];
+            let good = format!("{v} the {obj}");
+            let bad = format!("{obj} the {v}");
+            let answer = rng.gen_range(2);
+            let choices = if answer == 0 {
+                vec![good, bad]
+            } else {
+                vec![bad, good]
+            };
+            examples.push(Example {
+                prompt: format!("the {n1} "),
+                choices,
+                answer,
+            });
+        }
+        out.push(crate::eval::Task { name: name.to_string(), examples });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_weights_are_deterministic_and_shaped() {
+        let cfg = ModelConfig {
+            name: "s0".into(),
+            d: 64,
+            n_layers: 2,
+            n_heads: 2,
+            ffn: 176,
+            vocab: 256,
+            seq: 64,
+        };
+        let a = Weights::synthetic(&cfg, 1);
+        let b = Weights::synthetic(&cfg, 1);
+        let c = Weights::synthetic(&cfg, 2);
+        assert_eq!(a.get("blocks.0.wq").data, b.get("blocks.0.wq").data);
+        assert_ne!(a.get("blocks.0.wq").data, c.get("blocks.0.wq").data);
+        assert_eq!(a.get("blocks.1.wg").shape, vec![176, 64]);
+        assert_eq!(a.get("blocks.1.wd").shape, vec![64, 176]);
+        assert_eq!(a.get("ln_f").data, vec![1.0; 64]);
+        assert_eq!(a.param_count(), {
+            let block = 4 * 64 * 64 + 3 * 64 * 176 + 2 * 64;
+            256 * 64 + 2 * block + 64 + 256 * 64
+        });
+    }
+
+    #[test]
+    fn synthetic_corpus_split_properties() {
+        let train = synthetic_corpus("train", 4096);
+        let train2 = synthetic_corpus("train", 4096);
+        let test = synthetic_corpus("test", 4096);
+        assert_eq!(train.bytes, train2.bytes);
+        assert_ne!(train.bytes, test.bytes);
+        assert_eq!(train.bytes.len(), 4096);
+        // corpus is ascii text (byte-level vocab 256 holds trivially)
+        assert!(train.bytes.iter().all(|b| b.is_ascii()));
+    }
+
+    #[test]
+    fn synthetic_tasks_are_well_formed() {
+        let tasks = synthetic_tasks(10);
+        assert_eq!(tasks.len(), 9);
+        for t in &tasks {
+            assert_eq!(t.examples.len(), 10);
+            for e in &t.examples {
+                assert_eq!(e.choices.len(), 2);
+                assert!(e.answer < 2);
+            }
+        }
+    }
+}

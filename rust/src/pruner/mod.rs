@@ -7,11 +7,23 @@ pub mod sparsegpt;
 
 use anyhow::Result;
 
-use crate::runtime::{Manifest, Runtime};
+use crate::runtime::{Backend, Manifest};
 use crate::sparsity::{select_mask, Pattern};
 use crate::tensor::Tensor;
 
 /// Every method evaluated in the paper's tables.
+///
+/// ```
+/// use wandapp::pruner::Method;
+/// // `parse` accepts every canonical label and the short aliases:
+/// assert_eq!(Method::parse("wanda++"), Some(Method::WandaPP));
+/// assert_eq!(Method::parse("rgs"), Some(Method::WandaPPRgs));
+/// assert_eq!(Method::parse("unknown"), None);
+/// // and `label` round-trips through `parse` for every method:
+/// for m in Method::all() {
+///     assert_eq!(Method::parse(m.label()), Some(m));
+/// }
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Method {
     /// |W| (Han et al.) — the classical baseline.
@@ -31,6 +43,14 @@ pub enum Method {
 }
 
 impl Method {
+    /// Canonical lowercase label, as printed in every table and accepted
+    /// back by [`Method::parse`].
+    ///
+    /// ```
+    /// use wandapp::pruner::Method;
+    /// assert_eq!(Method::WandaPP.label(), "wanda++");
+    /// assert_eq!(Method::SparseGpt.label(), "sparsegpt");
+    /// ```
     pub fn label(&self) -> &'static str {
         match self {
             Method::Magnitude => "magnitude",
@@ -176,7 +196,7 @@ impl BlockGrads {
 /// for gradient-free methods, which reduces the kernel to Wanda's Eq. 1;
 /// magnitude pruning passes xnorm = 1, alpha = 0.
 pub fn score_weight(
-    rt: &Runtime,
+    rt: &dyn Backend,
     size: &str,
     weight_name: &str,
     w: &Tensor,
@@ -202,7 +222,7 @@ pub fn score_weight(
 /// mask artifact (the production kernel); other patterns use the native
 /// selection routines.
 pub fn mask_from_scores(
-    rt: &Runtime,
+    rt: &dyn Backend,
     size: &str,
     weight_name: &str,
     scores: &Tensor,
@@ -221,7 +241,7 @@ pub fn mask_from_scores(
 
 /// Score per method. `stats`/`grads` may be unused depending on method.
 pub fn method_score(
-    rt: &Runtime,
+    rt: &dyn Backend,
     size: &str,
     method: Method,
     weight_name: &str,

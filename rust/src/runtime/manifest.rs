@@ -120,6 +120,52 @@ impl Manifest {
         Ok(Self { sizes, consts, artifacts })
     }
 
+    /// The built-in manifest the native backend uses when
+    /// `artifacts/manifest.json` is absent: the same four-size ladder,
+    /// batch constants and context variants `python/compile/configs.py`
+    /// emits (DESIGN.md §3, §8), with an empty artifact table — the native
+    /// backend derives kernel signatures from keys instead of specs.
+    pub fn builtin() -> Self {
+        let mut sizes = HashMap::new();
+        // (name, d, n_layers, n_heads, ffn); vocab=256, seq=64 everywhere.
+        for (name, d, n_layers, n_heads, ffn) in [
+            ("s0", 64usize, 2usize, 2usize, 176usize),
+            ("s1", 96, 3, 3, 264),
+            ("s2", 128, 4, 4, 352),
+            ("s3", 192, 5, 6, 528),
+        ] {
+            let seq_variants = if name == "s0" {
+                vec![8, 16, 32, 64]
+            } else {
+                vec![64]
+            };
+            sizes.insert(
+                name.to_string(),
+                SizeInfo {
+                    d,
+                    n_layers,
+                    n_heads,
+                    ffn,
+                    vocab: 256,
+                    seq: 64,
+                    seq_variants,
+                },
+            );
+        }
+        let consts = Consts {
+            b_cal: 8,
+            b_eval: 8,
+            m_ro: 8,
+            alpha_default: 100.0,
+            lora_rank: 4,
+            lora_scale: 2.0,
+            rmsprop_rho: 0.99,
+            rmsprop_eps: 1e-8,
+            primary: "s2".to_string(),
+        };
+        Self { sizes, consts, artifacts: HashMap::new() }
+    }
+
     pub fn artifact(&self, key: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(key)
@@ -171,5 +217,21 @@ mod tests {
         assert_eq!(a.outputs[0].shape, vec![8, 64, 64]);
         assert!(m.artifact("nope").is_err());
         assert_eq!(Manifest::shape_tag("wg"), "sf");
+    }
+
+    #[test]
+    fn builtin_matches_python_ladder() {
+        let m = Manifest::builtin();
+        assert_eq!(m.sizes.len(), 4);
+        assert_eq!(m.sizes["s2"].d, 128);
+        assert_eq!(m.sizes["s2"].ffn, 352);
+        assert_eq!(m.sizes["s0"].seq_variants, vec![8, 16, 32, 64]);
+        assert_eq!(m.sizes["s3"].seq_variants, vec![64]);
+        assert_eq!(m.consts.primary, "s2");
+        assert_eq!(m.consts.b_cal, 8);
+        // head_dim is 32 across the ladder (d / n_heads)
+        for s in m.sizes.values() {
+            assert_eq!(s.d / s.n_heads, 32);
+        }
     }
 }

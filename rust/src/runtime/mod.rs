@@ -1,164 +1,94 @@
-//! PJRT runtime: loads AOT-lowered HLO-text artifacts, compiles them once on
-//! the CPU PJRT client, and executes them from the coordinator's hot path.
+//! Execution backends: the [`Backend`] trait plus its two implementations.
 //!
-//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects the
-//! 64-bit instruction ids in jax>=0.5 serialized protos, while the text
-//! parser reassigns ids (see /opt/xla-example/README.md). The manifest
-//! written by `python -m compile.aot` pins every artifact's ordered input /
-//! output names, shapes and dtypes; [`Runtime::exec`] validates against it
-//! on every call so shape bugs surface as errors, not NaNs.
+//! Every kernel the coordinator runs — decoder-block forward, calibration
+//! statistics, regional gradients (paper Eq. 3), the RGS score (Eq. 4),
+//! the RMSProp regional-optimization step (Eq. 5), N:M mask selection,
+//! perplexity heads — is addressed by a **manifest key** such as
+//! `s0_block_fwd_t64` or `s2_score_sq`. A backend maps keys to typed
+//! executions:
+//!
+//! - [`NativeBackend`] (default): every kernel implemented in pure Rust,
+//!   parallelized across rows/samples with the in-tree thread-pool helpers.
+//!   Needs **no** artifacts, Python step, or external libraries; when
+//!   `artifacts/` is absent it synthesizes the manifest, weights and
+//!   corpus deterministically (DESIGN.md §2, §6).
+//! - `PjrtRuntime` (behind the `pjrt` cargo feature): loads AOT-lowered
+//!   HLO-text artifacts produced by `python -m compile.aot` and executes
+//!   them through the PJRT C API (DESIGN.md §2). The offline build links
+//!   an API stub; production builds swap in the real `xla` crate.
+//!
+//! The trait contract (also DESIGN.md §2): `exec_v` validates arity and
+//! shapes against the manifest key before executing, returns outputs in
+//! manifest order, and records per-key wall time retrievable via
+//! [`Backend::stats`]. Backends are deterministic: identical inputs give
+//! identical outputs across calls and across `--backend` choices up to
+//! documented float tolerances (DESIGN.md §6).
 
 mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 mod stats;
 
-pub use manifest::{ArtifactSpec, IoSpec, Manifest, SizeInfo};
+pub use manifest::{ArtifactSpec, Consts, IoSpec, Manifest, SizeInfo};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtRuntime;
 pub use stats::{ExecRecord, ExecStats};
 
-use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::time::Instant;
+use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
-use crate::tensor::{Tensor, TensorI32, Value, ValueView};
+use crate::tensor::{Tensor, Value, ValueView};
 
-/// Owns the PJRT client, the compiled-executable cache, and the manifest.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
-    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
-    pub stats: RefCell<ExecStats>,
-}
+/// A compute backend: maps manifest keys to typed kernel executions.
+///
+/// Object-safe so the coordinator, pruner, harness and CLI can hold a
+/// `&dyn Backend` and switch implementations with `--backend`.
+pub trait Backend {
+    /// Short identifier ("native" or "pjrt") used in logs and reports.
+    fn name(&self) -> &'static str;
 
-impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
-    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
-        let dir = artifacts_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .context("loading manifest.json — run `make artifacts` first")?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self {
-            client,
-            manifest,
-            dir,
-            cache: RefCell::new(HashMap::new()),
-            stats: RefCell::new(ExecStats::default()),
-        })
-    }
+    /// The manifest: model-size ladder, batch constants, artifact specs.
+    fn manifest(&self) -> &Manifest;
 
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
+    /// Directory artifacts / weights / corpora are loaded from (files may
+    /// be absent for the native backend, which then synthesizes inputs).
+    fn artifacts_dir(&self) -> &Path;
 
-    /// Compile (or fetch from cache) the executable for `key`.
-    fn executable(
-        &self,
-        key: &str,
-    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(key) {
-            return Ok(exe.clone());
-        }
-        let spec = self.manifest.artifact(key)?;
-        let path = self.dir.join(&spec.file);
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
-        )
-        .with_context(|| format!("parsing HLO text for {key}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
-        self.stats
-            .borrow_mut()
-            .record_compile(key, t0.elapsed().as_secs_f64());
-        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
-        Ok(exe)
-    }
+    /// Whether this backend can execute `key`.
+    fn supports(&self, key: &str) -> bool;
 
-    /// Pre-compile an artifact (used by benches to exclude compile time).
-    pub fn warmup(&self, key: &str) -> Result<()> {
-        self.executable(key).map(|_| ())
-    }
+    /// Pre-compile / pre-touch a kernel (benches exclude compile time).
+    fn warmup(&self, key: &str) -> Result<()>;
 
-    /// Execute artifact `key` with owned inputs (convenience wrapper over
-    /// [`Runtime::exec_v`]).
-    pub fn exec(&self, key: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+    /// Execute `key` with borrowed inputs, returning outputs in manifest
+    /// order. Inputs are validated (arity, shape, dtype) first.
+    fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>>;
+
+    /// Snapshot of the per-key execution accounting.
+    fn stats(&self) -> ExecStats;
+
+    /// Clear the execution accounting.
+    fn reset_stats(&self);
+
+    /// Execute with owned inputs (convenience over [`Backend::exec_v`]).
+    fn exec(&self, key: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let views: Vec<ValueView> = inputs.iter().map(ValueView::from).collect();
         self.exec_v(key, &views)
     }
 
-    /// Execute artifact `key` with borrowed inputs, returning outputs in
-    /// manifest order. Inputs are validated (arity, shape, dtype) before
-    /// execution; buffers are copied exactly once (into the PJRT literal).
-    pub fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>> {
-        let spec = self.manifest.artifact(key)?.clone();
-        if inputs.len() != spec.inputs.len() {
-            return Err(anyhow!(
-                "{key}: got {} inputs, manifest expects {}",
-                inputs.len(),
-                spec.inputs.len()
-            ));
-        }
-        for (v, io) in inputs.iter().zip(&spec.inputs) {
-            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
-                return Err(anyhow!(
-                    "{key}: input `{}` expects {:?} {}, got {:?} {}",
-                    io.name,
-                    io.shape,
-                    io.dtype,
-                    v.shape(),
-                    v.dtype()
-                ));
-            }
-        }
-
-        let exe = self.executable(key)?;
-        let t0 = Instant::now();
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|v| v.to_literal())
-            .collect::<Result<_>>()?;
-        let mut result = exe.execute::<xla::Literal>(&lits)?;
-        let root = result
-            .pop()
-            .and_then(|mut d| d.pop())
-            .ok_or_else(|| anyhow!("{key}: empty execution result"))?
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: the root is always a tuple.
-        let parts = root.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
-            return Err(anyhow!(
-                "{key}: got {} outputs, manifest expects {}",
-                parts.len(),
-                spec.outputs.len()
-            ));
-        }
-        let mut out = Vec::with_capacity(parts.len());
-        for (lit, io) in parts.iter().zip(&spec.outputs) {
-            let v = match io.dtype.as_str() {
-                "f32" => Value::F32(Tensor::from_literal(lit, &io.shape)?),
-                "i32" => Value::I32(TensorI32::from_literal(lit, &io.shape)?),
-                other => return Err(anyhow!("{key}: unknown dtype {other}")),
-            };
-            out.push(v);
-        }
-        self.stats
-            .borrow_mut()
-            .record_exec(key, t0.elapsed().as_secs_f64());
-        Ok(out)
-    }
-
-    /// Convenience: execute and return only f32 outputs.
-    pub fn exec_f32(&self, key: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
+    /// Execute and return only f32 outputs.
+    fn exec_f32(&self, key: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         self.exec(key, inputs)?
             .into_iter()
             .map(|v| v.into_f32())
             .collect()
     }
 
-    /// Borrowed-input variant of [`Runtime::exec_f32`] — the hot-path form.
-    pub fn exec_fv(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Tensor>> {
+    /// Borrowed-input variant of [`Backend::exec_f32`] — the hot-path form.
+    fn exec_fv(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Tensor>> {
         self.exec_v(key, inputs)?
             .into_iter()
             .map(|v| v.into_f32())
@@ -166,80 +96,60 @@ impl Runtime {
     }
 }
 
+/// Open a backend by name: `"native"`, `"pjrt"`, or `"auto"`.
+///
+/// `"auto"` picks PJRT when the crate is built with the `pjrt` feature
+/// **and** `artifacts/manifest.json` exists, otherwise the native backend —
+/// so a bare checkout runs end-to-end with no Python build step.
+pub fn open<P: AsRef<Path>>(artifacts_dir: P, backend: &str) -> Result<Box<dyn Backend>> {
+    let dir = artifacts_dir.as_ref();
+    match backend {
+        "native" => Ok(Box::new(NativeBackend::new(dir)?)),
+        "pjrt" => open_pjrt(dir),
+        "auto" => {
+            if cfg!(feature = "pjrt") && dir.join("manifest.json").exists() {
+                // Prefer PJRT when it can actually start (artifacts exist
+                // AND the client initializes); otherwise fall back — loudly,
+                // so a user who built artifacts for PJRT numbers notices.
+                match open_pjrt(dir) {
+                    Ok(rt) => return Ok(rt),
+                    Err(e) => eprintln!(
+                        "note: PJRT backend unavailable ({e}); falling back \
+                         to the native backend"
+                    ),
+                }
+            }
+            Ok(Box::new(NativeBackend::new(dir)?))
+        }
+        other => Err(anyhow!("unknown backend `{other}` (native|pjrt|auto)")),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn open_pjrt(dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(PjrtRuntime::new(dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn open_pjrt(_dir: &Path) -> Result<Box<dyn Backend>> {
+    Err(anyhow!(
+        "this build has no PJRT support; rebuild with `--features pjrt` \
+         or use --backend native"
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
     #[test]
-    fn manifest_loads_and_validates() {
-        let rt = Runtime::new(artifacts_dir()).expect("runtime");
-        assert!(rt.manifest.sizes.contains_key("s0"));
-        let spec = rt.manifest.artifact("s0_block_fwd_t64").unwrap();
-        assert_eq!(spec.inputs.len(), 10);
-        assert_eq!(spec.outputs.len(), 1);
-    }
-
-    #[test]
-    fn exec_rejects_wrong_arity_and_shape() {
-        let rt = Runtime::new(artifacts_dir()).expect("runtime");
-        let err = rt.exec("s0_block_fwd_t64", &[]).unwrap_err();
-        assert!(err.to_string().contains("inputs"));
-        let bad = Value::F32(Tensor::zeros(&[1, 2, 3]));
-        let mut inputs = vec![bad];
-        for io in &rt.manifest.artifact("s0_block_fwd_t64").unwrap().inputs
-            [1..]
-        {
-            inputs.push(Value::F32(Tensor::zeros(&io.shape)));
-        }
-        assert!(rt.exec("s0_block_fwd_t64", &inputs).is_err());
-    }
-
-    #[test]
-    fn score_artifact_matches_cpu_formula() {
-        // |W|*(alpha*G + xnorm) — cross-check the Pallas artifact against a
-        // direct computation (the same identity ref.py pins in pytest).
-        let rt = Runtime::new(artifacts_dir()).expect("runtime");
-        let d = rt.manifest.sizes["s0"].d;
-        let n = d * d;
-        let w = Tensor::new(
-            vec![d, d],
-            (0..n).map(|i| (i as f32 * 0.37).sin()).collect(),
-        );
-        let g = Tensor::new(
-            vec![d, d],
-            (0..n).map(|i| (i as f32 * 0.11).cos().abs()).collect(),
-        );
-        let xn = Tensor::new(
-            vec![d],
-            (0..d).map(|i| 0.5 + (i as f32) * 0.01).collect(),
-        );
-        let alpha = Tensor::new(vec![1], vec![100.0]);
-        let out = rt
-            .exec_f32(
-                "s0_score_sq",
-                &[
-                    w.clone().into(),
-                    g.clone().into(),
-                    xn.clone().into(),
-                    alpha.into(),
-                ],
-            )
-            .unwrap();
-        let s = &out[0];
-        for i in 0..d {
-            for j in 0..d {
-                let want = w.data[i * d + j].abs()
-                    * (100.0 * g.data[i * d + j] + xn.data[j]);
-                let got = s.data[i * d + j];
-                assert!(
-                    (want - got).abs() <= 1e-4 * want.abs().max(1.0),
-                    "mismatch at ({i},{j}): {want} vs {got}"
-                );
-            }
-        }
+    fn open_native_and_auto_work_without_artifacts() {
+        let dir = std::env::temp_dir().join("wandapp_no_artifacts");
+        let rt = open(&dir, "native").unwrap();
+        assert_eq!(rt.name(), "native");
+        assert!(rt.manifest().sizes.contains_key("s0"));
+        let auto = open(&dir, "auto").unwrap();
+        assert_eq!(auto.name(), "native");
+        assert!(open(&dir, "bogus").is_err());
     }
 }

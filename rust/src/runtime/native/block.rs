@@ -1,0 +1,595 @@
+//! Native decoder block: forward, calibration statistics, Hessian
+//! accumulation and a hand-derived backward pass — the pure-Rust mirror of
+//! `python/compile/model.py` (`block_fwd`, `block_stats`, `block_hessian`)
+//! and the reverse-mode differentiation JAX performs for `rgs_sqgrad` and
+//! `ro_step` (DESIGN.md §6).
+//!
+//! The block is byte-level LLaMA-shaped: RMSNorm → RoPE attention (causal,
+//! softmax over `j <= i`, scale `1/sqrt(head_dim)`) → residual → RMSNorm →
+//! SwiGLU MLP → residual. All buffers are flat row-major `f32`.
+
+use super::math::{
+    matmul_nn, matmul_nt, matmul_tn, rmsnorm, rmsnorm_backward, silu,
+    silu_grad, softmax_inplace,
+};
+
+/// Shape bundle for one block invocation.
+#[derive(Debug, Clone, Copy)]
+pub struct Dims {
+    /// Batch (samples in the chunk).
+    pub b: usize,
+    /// Sequence length.
+    pub t: usize,
+    /// Hidden size.
+    pub d: usize,
+    /// Attention heads.
+    pub h: usize,
+    /// SwiGLU intermediate size.
+    pub ffn: usize,
+}
+
+impl Dims {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.h
+    }
+
+    pub fn positions(&self) -> usize {
+        self.b * self.t
+    }
+}
+
+/// Borrowed views of the nine block parameters, canonical order.
+#[derive(Clone, Copy)]
+pub struct BlockWeights<'a> {
+    pub ln1: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub ln2: &'a [f32],
+    pub wg: &'a [f32],
+    pub wu: &'a [f32],
+    pub wd: &'a [f32],
+}
+
+impl<'a> BlockWeights<'a> {
+    /// Build from nine flat buffers in `BLOCK_PARAMS` order.
+    pub fn from_slices(bp: &[&'a [f32]]) -> Self {
+        assert_eq!(bp.len(), 9, "a block has 9 parameters");
+        Self {
+            ln1: bp[0],
+            wq: bp[1],
+            wk: bp[2],
+            wv: bp[3],
+            wo: bp[4],
+            ln2: bp[5],
+            wg: bp[6],
+            wu: bp[7],
+            wd: bp[8],
+        }
+    }
+}
+
+/// RoPE cos/sin tables of shape `(t, head_dim/2)`, base 10000 —
+/// identical to `_rope_tables` in `python/compile/model.py`.
+pub fn rope_tables(t: usize, head_dim: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = head_dim / 2;
+    let mut cos = vec![0.0f32; t * half];
+    let mut sin = vec![0.0f32; t * half];
+    for p in 0..t {
+        for i in 0..half {
+            let freq = (10000.0f32).powf(-(i as f32) / half as f32);
+            let ang = p as f32 * freq;
+            cos[p * half + i] = ang.cos();
+            sin[p * half + i] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Rotate-half RoPE applied in place over `(b*t, d)` viewed as
+/// `(b, t, h, hd)`. `transpose` applies the inverse rotation (the
+/// backward pass).
+fn apply_rope(x: &mut [f32], dims: Dims, cos: &[f32], sin: &[f32], transpose: bool) {
+    let (t, d, h) = (dims.t, dims.d, dims.h);
+    let hd = dims.head_dim();
+    let half = hd / 2;
+    for p in 0..dims.positions() {
+        let time = p % t;
+        let row = &mut x[p * d..(p + 1) * d];
+        for head in 0..h {
+            let base = head * hd;
+            for i in 0..half {
+                let c = cos[time * half + i];
+                let s = if transpose {
+                    -sin[time * half + i]
+                } else {
+                    sin[time * half + i]
+                };
+                let x1 = row[base + i];
+                let x2 = row[base + half + i];
+                row[base + i] = x1 * c - x2 * s;
+                row[base + half + i] = x1 * s + x2 * c;
+            }
+        }
+    }
+}
+
+/// Intermediates cached by [`block_forward`] for reuse by the stats /
+/// Hessian readouts and the backward pass.
+pub struct BlockCache {
+    pub r1: Vec<f32>,
+    pub xn: Vec<f32>,
+    /// q, k after RoPE; v as projected. Layout `(b, t, h, hd)`.
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Attention probabilities, `(b, h, t, t)`, zero where `j > i`.
+    pub probs: Vec<f32>,
+    /// Concatenated head outputs, `(b, t, d)`.
+    pub attn: Vec<f32>,
+    pub x2: Vec<f32>,
+    pub r2: Vec<f32>,
+    pub xm: Vec<f32>,
+    pub gpre: Vec<f32>,
+    pub up: Vec<f32>,
+}
+
+impl BlockCache {
+    /// SwiGLU activations `silu(gpre) * up` (recomputed on demand).
+    pub fn act(&self) -> Vec<f32> {
+        self.gpre
+            .iter()
+            .zip(&self.up)
+            .map(|(g, u)| silu(*g) * u)
+            .collect()
+    }
+}
+
+/// Forward one decoder block over `x` of shape `(b, t, d)`; returns the
+/// output and the cache of intermediates.
+pub fn block_forward(x: &[f32], w: BlockWeights, dims: Dims) -> (Vec<f32>, BlockCache) {
+    let n = dims.positions();
+    let (t, d, h, f) = (dims.t, dims.d, dims.h, dims.ffn);
+    let hd = dims.head_dim();
+    let (cos, sin) = rope_tables(t, hd);
+
+    let (xn, r1) = rmsnorm(x, w.ln1, d);
+    let mut q = matmul_nt(&xn, w.wq, n, d, d);
+    let mut k = matmul_nt(&xn, w.wk, n, d, d);
+    let v = matmul_nt(&xn, w.wv, n, d, d);
+    apply_rope(&mut q, dims, &cos, &sin, false);
+    apply_rope(&mut k, dims, &cos, &sin, false);
+
+    // Causal attention per (batch, head).
+    let inv_s = 1.0 / (hd as f32).sqrt();
+    let mut probs = vec![0.0f32; dims.b * h * t * t];
+    let mut attn = vec![0.0f32; n * d];
+    for bi in 0..dims.b {
+        for head in 0..h {
+            let pbase = (bi * h + head) * t * t;
+            for i in 0..t {
+                let qi = &q[((bi * t + i) * d + head * hd)..][..hd];
+                let row = &mut probs[pbase + i * t..pbase + i * t + t];
+                for (j, rv) in row.iter_mut().enumerate().take(i + 1) {
+                    let kj = &k[((bi * t + j) * d + head * hd)..][..hd];
+                    let mut dot = 0.0f32;
+                    for c in 0..hd {
+                        dot += qi[c] * kj[c];
+                    }
+                    *rv = dot * inv_s;
+                }
+                softmax_inplace(&mut row[..i + 1]);
+                let out_base = (bi * t + i) * d + head * hd;
+                for j in 0..=i {
+                    let p = probs[pbase + i * t + j];
+                    let vj = &v[((bi * t + j) * d + head * hd)..][..hd];
+                    for c in 0..hd {
+                        attn[out_base + c] += p * vj[c];
+                    }
+                }
+            }
+        }
+    }
+
+    let o = matmul_nt(&attn, w.wo, n, d, d);
+    let mut x2 = x.to_vec();
+    for (a, b) in x2.iter_mut().zip(&o) {
+        *a += b;
+    }
+
+    let (xm, r2) = rmsnorm(&x2, w.ln2, d);
+    let gpre = matmul_nt(&xm, w.wg, n, d, f);
+    let up = matmul_nt(&xm, w.wu, n, d, f);
+    let act: Vec<f32> = gpre
+        .iter()
+        .zip(&up)
+        .map(|(g, u)| silu(*g) * u)
+        .collect();
+    let down = matmul_nt(&act, w.wd, n, f, d);
+    let mut y = x2.clone();
+    for (a, b) in y.iter_mut().zip(&down) {
+        *a += b;
+    }
+
+    (
+        y,
+        BlockCache { r1, xn, q, k, v, probs, attn, x2, r2, xm, gpre, up },
+    )
+}
+
+/// Gradients of a scalar loss w.r.t. the nine block parameters (canonical
+/// order) plus, when requested, the block input.
+pub struct BlockBackward {
+    pub d_ln1: Vec<f32>,
+    pub d_wq: Vec<f32>,
+    pub d_wk: Vec<f32>,
+    pub d_wv: Vec<f32>,
+    pub d_wo: Vec<f32>,
+    pub d_ln2: Vec<f32>,
+    pub d_wg: Vec<f32>,
+    pub d_wu: Vec<f32>,
+    pub d_wd: Vec<f32>,
+    pub dx: Option<Vec<f32>>,
+}
+
+impl BlockBackward {
+    /// Gradients in `BLOCK_PARAMS` order.
+    pub fn into_params(self) -> [Vec<f32>; 9] {
+        [
+            self.d_ln1, self.d_wq, self.d_wk, self.d_wv, self.d_wo,
+            self.d_ln2, self.d_wg, self.d_wu, self.d_wd,
+        ]
+    }
+}
+
+/// Reverse-mode pass through one block: given upstream `dy` at the block
+/// output, the forward `cache`, the block input `x` and the (effective)
+/// weights used in the forward, produce parameter gradients and optionally
+/// the input gradient (`need_dx` — required when chaining blocks).
+pub fn block_backward(
+    dy: &[f32],
+    x: &[f32],
+    w: BlockWeights,
+    cache: &BlockCache,
+    dims: Dims,
+    need_dx: bool,
+) -> BlockBackward {
+    let n = dims.positions();
+    let (t, d, h, f) = (dims.t, dims.d, dims.h, dims.ffn);
+    let hd = dims.head_dim();
+    let (cos, sin) = rope_tables(t, hd);
+
+    // --- MLP path -------------------------------------------------------
+    let act = cache.act();
+    let d_wd = matmul_tn(dy, &act, n, d, f);
+    let d_act = matmul_nn(dy, w.wd, n, d, f);
+    let mut d_gpre = vec![0.0f32; n * f];
+    let mut d_up = vec![0.0f32; n * f];
+    for i in 0..n * f {
+        let g = cache.gpre[i];
+        d_gpre[i] = d_act[i] * cache.up[i] * silu_grad(g);
+        d_up[i] = d_act[i] * silu(g);
+    }
+    let d_wg = matmul_tn(&d_gpre, &cache.xm, n, f, d);
+    let d_wu = matmul_tn(&d_up, &cache.xm, n, f, d);
+    let mut dxm = matmul_nn(&d_gpre, w.wg, n, f, d);
+    let dxm_u = matmul_nn(&d_up, w.wu, n, f, d);
+    for (a, b) in dxm.iter_mut().zip(&dxm_u) {
+        *a += b;
+    }
+
+    // --- second residual + norm ----------------------------------------
+    let mut dx2 = dy.to_vec();
+    let d_ln2 =
+        rmsnorm_backward(&dxm, &cache.x2, w.ln2, &cache.r2, d, &mut dx2);
+
+    // --- attention output projection ------------------------------------
+    let d_wo = matmul_tn(&dx2, &cache.attn, n, d, d);
+    let d_attn = matmul_nn(&dx2, w.wo, n, d, d);
+
+    // --- attention core backward ----------------------------------------
+    let inv_s = 1.0 / (hd as f32).sqrt();
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    for bi in 0..dims.b {
+        for head in 0..h {
+            let pbase = (bi * h + head) * t * t;
+            for i in 0..t {
+                let da = &d_attn[((bi * t + i) * d + head * hd)..][..hd];
+                // dP_ij and the softmax-jacobian row dot product
+                let mut dp = vec![0.0f32; i + 1];
+                let mut row_dot = 0.0f32;
+                for (j, dpj) in dp.iter_mut().enumerate() {
+                    let vj = &cache.v[((bi * t + j) * d + head * hd)..][..hd];
+                    let mut acc = 0.0f32;
+                    for c in 0..hd {
+                        acc += da[c] * vj[c];
+                    }
+                    *dpj = acc;
+                    row_dot += cache.probs[pbase + i * t + j] * acc;
+                }
+                for (j, dpj) in dp.iter().enumerate() {
+                    let p = cache.probs[pbase + i * t + j];
+                    let dlogit = p * (dpj - row_dot) * inv_s;
+                    let kj = &cache.k[((bi * t + j) * d + head * hd)..][..hd];
+                    let qi = &cache.q[((bi * t + i) * d + head * hd)..][..hd];
+                    let dqi = &mut dq[((bi * t + i) * d + head * hd)..][..hd];
+                    for c in 0..hd {
+                        dqi[c] += dlogit * kj[c];
+                    }
+                    let dkj = &mut dk[((bi * t + j) * d + head * hd)..][..hd];
+                    for c in 0..hd {
+                        dkj[c] += dlogit * qi[c];
+                    }
+                    let dvj = &mut dv[((bi * t + j) * d + head * hd)..][..hd];
+                    for c in 0..hd {
+                        dvj[c] += p * da[c];
+                    }
+                }
+            }
+        }
+    }
+
+    // RoPE is a rotation; its backward is the transposed rotation.
+    apply_rope(&mut dq, dims, &cos, &sin, true);
+    apply_rope(&mut dk, dims, &cos, &sin, true);
+
+    let d_wq = matmul_tn(&dq, &cache.xn, n, d, d);
+    let d_wk = matmul_tn(&dk, &cache.xn, n, d, d);
+    let d_wv = matmul_tn(&dv, &cache.xn, n, d, d);
+
+    let mut dxn = matmul_nn(&dq, w.wq, n, d, d);
+    for (a, b) in dxn.iter_mut().zip(matmul_nn(&dk, w.wk, n, d, d)) {
+        *a += b;
+    }
+    for (a, b) in dxn.iter_mut().zip(matmul_nn(&dv, w.wv, n, d, d)) {
+        *a += b;
+    }
+
+    // --- first residual + norm ------------------------------------------
+    let mut dx_total = dx2;
+    let d_ln1 = rmsnorm_backward(&dxn, x, w.ln1, &cache.r1, d, &mut dx_total);
+
+    BlockBackward {
+        d_ln1,
+        d_wq,
+        d_wk,
+        d_wv,
+        d_wo,
+        d_ln2,
+        d_wg,
+        d_wu,
+        d_wd,
+        dx: if need_dx { Some(dx_total) } else { None },
+    }
+}
+
+/// The four calibration-site squared-norm sums of `block_stats`:
+/// `(sq_qkv, sq_o, sq_mlp, sq_down)` accumulated over all positions.
+pub fn site_squares(cache: &BlockCache, dims: Dims) -> [Vec<f32>; 4] {
+    let (d, f) = (dims.d, dims.ffn);
+    let n = dims.positions();
+    let mut sq = [
+        vec![0.0f32; d],
+        vec![0.0f32; d],
+        vec![0.0f32; d],
+        vec![0.0f32; f],
+    ];
+    let act = cache.act();
+    for p in 0..n {
+        for j in 0..d {
+            sq[0][j] += cache.xn[p * d + j] * cache.xn[p * d + j];
+            sq[1][j] += cache.attn[p * d + j] * cache.attn[p * d + j];
+            sq[2][j] += cache.xm[p * d + j] * cache.xm[p * d + j];
+        }
+        for j in 0..f {
+            sq[3][j] += act[p * f + j] * act[p * f + j];
+        }
+    }
+    sq
+}
+
+/// The four Gram matrices of `block_hessian`:
+/// `(h_qkv, h_o, h_mlp, h_down)` — `X^T X` at each linear input site.
+pub fn site_grams(cache: &BlockCache, dims: Dims) -> [Vec<f32>; 4] {
+    let (d, f) = (dims.d, dims.ffn);
+    let n = dims.positions();
+    let act = cache.act();
+    [
+        matmul_tn(&cache.xn, &cache.xn, n, d, d),
+        matmul_tn(&cache.attn, &cache.attn, n, d, d),
+        matmul_tn(&cache.xm, &cache.xm, n, d, d),
+        matmul_tn(&act, &act, n, f, f),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn dims() -> Dims {
+        Dims { b: 2, t: 4, d: 8, h: 2, ffn: 12 }
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.gen_normal() * scale).collect()
+    }
+
+    struct Params {
+        ln1: Vec<f32>,
+        wq: Vec<f32>,
+        wk: Vec<f32>,
+        wv: Vec<f32>,
+        wo: Vec<f32>,
+        ln2: Vec<f32>,
+        wg: Vec<f32>,
+        wu: Vec<f32>,
+        wd: Vec<f32>,
+    }
+
+    impl Params {
+        fn random(seed: u64, dm: Dims) -> Self {
+            let mut rng = Rng::seed_from_u64(seed);
+            let (d, f) = (dm.d, dm.ffn);
+            let s = (d as f32).powf(-0.5);
+            Params {
+                ln1: vec![1.0; d],
+                wq: rand_vec(&mut rng, d * d, s),
+                wk: rand_vec(&mut rng, d * d, s),
+                wv: rand_vec(&mut rng, d * d, s),
+                wo: rand_vec(&mut rng, d * d, s),
+                ln2: vec![1.0; d],
+                wg: rand_vec(&mut rng, f * d, s),
+                wu: rand_vec(&mut rng, f * d, s),
+                wd: rand_vec(&mut rng, d * f, (f as f32).powf(-0.5)),
+            }
+        }
+
+        fn weights(&self) -> BlockWeights<'_> {
+            BlockWeights {
+                ln1: &self.ln1,
+                wq: &self.wq,
+                wk: &self.wk,
+                wv: &self.wv,
+                wo: &self.wo,
+                ln2: &self.ln2,
+                wg: &self.wg,
+                wu: &self.wu,
+                wd: &self.wd,
+            }
+        }
+    }
+
+    /// Scalar probe loss: weighted sum of the block output.
+    fn probe_loss(y: &[f32], probe: &[f32]) -> f32 {
+        y.iter().zip(probe).map(|(a, b)| a * b).sum()
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_finite() {
+        let dm = dims();
+        let p = Params::random(1, dm);
+        let mut rng = Rng::seed_from_u64(2);
+        let x = rand_vec(&mut rng, dm.positions() * dm.d, 0.5);
+        let (y1, _) = block_forward(&x, p.weights(), dm);
+        let (y2, _) = block_forward(&x, p.weights(), dm);
+        assert_eq!(y1, y2);
+        assert!(y1.iter().all(|v| v.is_finite()));
+        assert_eq!(y1.len(), x.len());
+    }
+
+    #[test]
+    fn causality_holds() {
+        // Changing a later token must not change earlier outputs.
+        let dm = Dims { b: 1, t: 4, d: 8, h: 2, ffn: 12 };
+        let p = Params::random(3, dm);
+        let mut rng = Rng::seed_from_u64(4);
+        let x = rand_vec(&mut rng, dm.positions() * dm.d, 0.5);
+        let (y, _) = block_forward(&x, p.weights(), dm);
+        let mut x2 = x.clone();
+        for v in &mut x2[3 * dm.d..4 * dm.d] {
+            *v += 1.0;
+        }
+        let (y2, _) = block_forward(&x2, p.weights(), dm);
+        assert_eq!(&y[..3 * dm.d], &y2[..3 * dm.d], "earlier positions moved");
+        assert_ne!(&y[3 * dm.d..], &y2[3 * dm.d..]);
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let dm = Dims { b: 1, t: 3, d: 8, h: 2, ffn: 10 };
+        let mut p = Params::random(5, dm);
+        let mut rng = Rng::seed_from_u64(6);
+        let x = rand_vec(&mut rng, dm.positions() * dm.d, 0.4);
+        let probe = rand_vec(&mut rng, dm.positions() * dm.d, 0.3);
+
+        let (_, cache) = block_forward(&x, p.weights(), dm);
+        let g = block_backward(&probe, &x, p.weights(), &cache, dm, true);
+
+        let eps = 2e-3;
+        // spot-check a handful of coordinates in several parameter mats
+        let checks: Vec<(&str, usize)> = vec![
+            ("wq", 3),
+            ("wk", 17),
+            ("wv", 40),
+            ("wo", 9),
+            ("wg", 25),
+            ("wu", 61),
+            ("wd", 13),
+            ("ln1", 2),
+            ("ln2", 5),
+        ];
+        for (name, idx) in checks {
+            let analytic = match name {
+                "wq" => g.d_wq[idx],
+                "wk" => g.d_wk[idx],
+                "wv" => g.d_wv[idx],
+                "wo" => g.d_wo[idx],
+                "wg" => g.d_wg[idx],
+                "wu" => g.d_wu[idx],
+                "wd" => g.d_wd[idx],
+                "ln1" => g.d_ln1[idx],
+                _ => g.d_ln2[idx],
+            };
+            fn pmut<'a>(p: &'a mut Params, name: &str) -> &'a mut Vec<f32> {
+                match name {
+                    "wq" => &mut p.wq,
+                    "wk" => &mut p.wk,
+                    "wv" => &mut p.wv,
+                    "wo" => &mut p.wo,
+                    "wg" => &mut p.wg,
+                    "wu" => &mut p.wu,
+                    "wd" => &mut p.wd,
+                    "ln1" => &mut p.ln1,
+                    _ => &mut p.ln2,
+                }
+            }
+            pmut(&mut p, name)[idx] += eps;
+            let (yp, _) = block_forward(&x, p.weights(), dm);
+            pmut(&mut p, name)[idx] -= 2.0 * eps;
+            let (ym, _) = block_forward(&x, p.weights(), dm);
+            pmut(&mut p, name)[idx] += eps;
+            let fd = (probe_loss(&yp, &probe) - probe_loss(&ym, &probe))
+                / (2.0 * eps);
+            assert!(
+                (fd - analytic).abs() < 2e-2 * analytic.abs().max(1.0),
+                "{name}[{idx}]: fd {fd} vs analytic {analytic}"
+            );
+        }
+
+        // input gradient
+        let dx = g.dx.unwrap();
+        for idx in [0usize, 7, 11, 23] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let (yp, _) = block_forward(&xp, p.weights(), dm);
+            let (ym, _) = block_forward(&xm, p.weights(), dm);
+            let fd = (probe_loss(&yp, &probe) - probe_loss(&ym, &probe))
+                / (2.0 * eps);
+            assert!(
+                (fd - dx[idx]).abs() < 2e-2 * dx[idx].abs().max(1.0),
+                "dx[{idx}]: fd {fd} vs analytic {}",
+                dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn site_squares_match_cache() {
+        let dm = dims();
+        let p = Params::random(7, dm);
+        let mut rng = Rng::seed_from_u64(8);
+        let x = rand_vec(&mut rng, dm.positions() * dm.d, 0.5);
+        let (_, cache) = block_forward(&x, p.weights(), dm);
+        let sq = site_squares(&cache, dm);
+        let manual: f32 = cache.xn.iter().map(|v| v * v).sum();
+        let total: f32 = sq[0].iter().sum();
+        assert!((manual - total).abs() < 1e-3);
+        assert_eq!(sq[3].len(), dm.ffn);
+    }
+}

@@ -1,0 +1,379 @@
+//! Dense math primitives for the native backend: row-parallel matmuls,
+//! RMSNorm (forward + backward), softmax helpers and the activation
+//! functions of the SwiGLU block — the pure-Rust mirrors of the JAX
+//! graphs in `python/compile/model.py` (DESIGN.md §6).
+//!
+//! Parallelism uses `std::thread::scope` over contiguous row ranges (the
+//! offline build vendors no rayon); accumulation order inside a row is
+//! fixed, so results are bit-deterministic regardless of thread count.
+
+/// Number of worker threads for row-parallel loops.
+fn n_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+}
+
+/// Apply `f(row_index, row_slice)` to every `row_len`-sized row of `out`,
+/// splitting contiguous row ranges across threads. Rows are disjoint, so
+/// each is written by exactly one thread; per-row work is sequential and
+/// the result is independent of the thread count.
+pub fn par_rows<F>(out: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let threads = n_threads().min(rows.max(1));
+    // Small problems are faster single-threaded than spawn + join; the
+    // cutoff also keeps per-sample matmuls serial when an outer par_map
+    // already saturates the cores (rgs_grad / full_grad).
+    if threads <= 1 || rows * row_len < 16_384 {
+        for (r, chunk) in out.chunks_mut(row_len).enumerate() {
+            f(r, chunk);
+        }
+        return;
+    }
+    let rows_per = (rows + threads - 1) / threads;
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (ti, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
+            s.spawn(move || {
+                for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                    fref(ti * rows_per + i, row);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, preserving index order in the result.
+pub fn par_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = n_threads().min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let per = (n + threads - 1) / threads;
+    let fref = &f;
+    let mut parts: Vec<Vec<T>> = Vec::new();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for t in 0..threads {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            if lo >= hi {
+                break;
+            }
+            handles.push(s.spawn(move || (lo..hi).map(fref).collect::<Vec<T>>()));
+        }
+        for h in handles {
+            parts.push(h.join().expect("worker panicked"));
+        }
+    });
+    parts.into_iter().flatten().collect()
+}
+
+/// `y = x @ w^T`: x is `(n, k)`, w is `(m, k)`, y is `(n, m)`.
+pub fn matmul_nt(x: &[f32], w: &[f32], n: usize, k: usize, m: usize) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), m * k);
+    let mut y = vec![0.0f32; n * m];
+    par_rows(&mut y, m, |i, row| {
+        let xi = &x[i * k..(i + 1) * k];
+        for (o, out) in row.iter_mut().enumerate() {
+            let wo = &w[o * k..(o + 1) * k];
+            let mut acc = 0.0f32;
+            for j in 0..k {
+                acc += xi[j] * wo[j];
+            }
+            *out = acc;
+        }
+    });
+    y
+}
+
+/// `y = dy @ w`: dy is `(n, m)`, w is `(m, k)`, y is `(n, k)`.
+/// (The input-gradient of `x @ w^T`.)
+pub fn matmul_nn(dy: &[f32], w: &[f32], n: usize, m: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * m);
+    debug_assert_eq!(w.len(), m * k);
+    let mut y = vec![0.0f32; n * k];
+    par_rows(&mut y, k, |i, row| {
+        let di = &dy[i * m..(i + 1) * m];
+        for (o, d) in di.iter().enumerate() {
+            if *d == 0.0 {
+                continue;
+            }
+            let wo = &w[o * k..(o + 1) * k];
+            for j in 0..k {
+                row[j] += d * wo[j];
+            }
+        }
+    });
+    y
+}
+
+/// `dw = dy^T @ x`: dy is `(n, m)`, x is `(n, k)`, dw is `(m, k)`.
+/// (The weight-gradient of `x @ w^T`.)
+pub fn matmul_tn(dy: &[f32], x: &[f32], n: usize, m: usize, k: usize) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), n * m);
+    debug_assert_eq!(x.len(), n * k);
+    let mut dw = vec![0.0f32; m * k];
+    par_rows(&mut dw, k, |o, row| {
+        for i in 0..n {
+            let d = dy[i * m + o];
+            if d == 0.0 {
+                continue;
+            }
+            let xi = &x[i * k..(i + 1) * k];
+            for j in 0..k {
+                row[j] += d * xi[j];
+            }
+        }
+    });
+    dw
+}
+
+/// RMSNorm epsilon, shared with `python/compile/model.py` (EPS_NORM).
+pub const EPS_NORM: f32 = 1e-5;
+
+/// RMSNorm forward over `(positions, d)`: returns the normalized output
+/// and the per-position reciprocal RMS `r = (mean(x^2)+eps)^-1/2` the
+/// backward pass reuses.
+pub fn rmsnorm(x: &[f32], w: &[f32], d: usize) -> (Vec<f32>, Vec<f32>) {
+    let n = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    let mut r = vec![0.0f32; n];
+    for p in 0..n {
+        let xi = &x[p * d..(p + 1) * d];
+        let mut ss = 0.0f32;
+        for v in xi {
+            ss += v * v;
+        }
+        let rp = 1.0 / (ss / d as f32 + EPS_NORM).sqrt();
+        r[p] = rp;
+        let o = &mut out[p * d..(p + 1) * d];
+        for j in 0..d {
+            o[j] = xi[j] * rp * w[j];
+        }
+    }
+    (out, r)
+}
+
+/// RMSNorm backward: given upstream `dn` at the normalized output, the
+/// forward input `x`, weight `w` and cached `r`, accumulate `dx` (added
+/// into `dx_out`) and return the weight gradient.
+pub fn rmsnorm_backward(
+    dn: &[f32],
+    x: &[f32],
+    w: &[f32],
+    r: &[f32],
+    d: usize,
+    dx_out: &mut [f32],
+) -> Vec<f32> {
+    let n = x.len() / d;
+    let mut dw = vec![0.0f32; d];
+    for p in 0..n {
+        let xi = &x[p * d..(p + 1) * d];
+        let di = &dn[p * d..(p + 1) * d];
+        let rp = r[p];
+        // inner = sum_i dn_i * w_i * x_i
+        let mut inner = 0.0f32;
+        for j in 0..d {
+            inner += di[j] * w[j] * xi[j];
+            dw[j] += di[j] * xi[j] * rp;
+        }
+        let scale = rp * rp * rp / d as f32 * inner;
+        let dxp = &mut dx_out[p * d..(p + 1) * d];
+        for j in 0..d {
+            dxp[j] += di[j] * w[j] * rp - xi[j] * scale;
+        }
+    }
+    dw
+}
+
+/// Numerically stable in-place softmax over a slice.
+pub fn softmax_inplace(row: &mut [f32]) {
+    let maxv = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+    let mut z = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - maxv).exp();
+        z += *v;
+    }
+    let inv = 1.0 / z;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Logistic sigmoid.
+pub fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// SiLU (swish) activation: `z * sigmoid(z)`.
+pub fn silu(z: f32) -> f32 {
+    z * sigmoid(z)
+}
+
+/// Derivative of SiLU: `sigmoid(z) * (1 + z * (1 - sigmoid(z)))`.
+pub fn silu_grad(z: f32) -> f32 {
+    let s = sigmoid(z);
+    s * (1.0 + z * (1.0 - s))
+}
+
+/// Fused masked RMSProp step, mirroring `rmsprop_update_ref` in
+/// `python/compile/kernels/ref.py`:
+/// `v' = rho*v + (1-rho)*g²; w' = w - lr*g/(sqrt(v') + eps) * mask`.
+/// `mask == None` is an all-ones mask (dense update).
+pub fn rmsprop_update(
+    w: &[f32],
+    g: &[f32],
+    v: &[f32],
+    mask: Option<&[f32]>,
+    lr: f32,
+    rho: f32,
+    eps: f32,
+) -> (Vec<f32>, Vec<f32>) {
+    let mut w2 = vec![0.0f32; w.len()];
+    let mut v2 = vec![0.0f32; v.len()];
+    for i in 0..w.len() {
+        let gv = g[i];
+        let nv = rho * v[i] + (1.0 - rho) * gv * gv;
+        v2[i] = nv;
+        let m = mask.map(|m| m[i]).unwrap_or(1.0);
+        w2[i] = w[i] - lr * gv / (nv.sqrt() + eps) * m;
+    }
+    (w2, v2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmsprop_matches_reference_formula() {
+        let w = vec![1.0f32, -2.0, 0.0, 3.0];
+        let g = vec![0.5f32, -0.5, 0.1, 0.0];
+        let v = vec![0.04f32, 0.0, 0.01, 0.09];
+        let mask = vec![1.0f32, 1.0, 0.0, 1.0];
+        let (rho, eps, lr) = (0.99f32, 1e-8f32, 0.01f32);
+        let (w2, v2) = rmsprop_update(&w, &g, &v, Some(&mask), lr, rho, eps);
+        for i in 0..4 {
+            let nv = rho * v[i] + (1.0 - rho) * g[i] * g[i];
+            assert!((v2[i] - nv).abs() < 1e-9);
+            let want = w[i] - lr * g[i] / (nv.sqrt() + eps) * mask[i];
+            assert!((w2[i] - want).abs() < 1e-7, "i={i}");
+        }
+        // masked-out weight is untouched
+        assert_eq!(w2[2], 0.0);
+    }
+
+    #[test]
+    fn matmul_shapes_and_values() {
+        // x: 2x3, w: 2x3 -> y = x w^T: 2x2
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let w = vec![1.0, 0.0, 0.0, 0.0, 1.0, 0.0];
+        let y = matmul_nt(&x, &w, 2, 3, 2);
+        assert_eq!(y, vec![1.0, 2.0, 4.0, 5.0]);
+        // dx = dy @ w
+        let dx = matmul_nn(&y, &w, 2, 2, 3);
+        assert_eq!(dx, vec![1.0, 2.0, 0.0, 4.0, 5.0, 0.0]);
+        // dw = dy^T @ x
+        let dw = matmul_tn(&y, &x, 2, 2, 3);
+        assert_eq!(dw, vec![1.0 + 16.0, 2.0 + 20.0, 3.0 + 24.0,
+                            2.0 + 20.0, 4.0 + 25.0, 6.0 + 30.0]);
+    }
+
+    #[test]
+    fn par_rows_matches_serial() {
+        let n = 160;
+        let k = 110; // output is big enough to trigger the threaded path
+        let x: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.1).sin()).collect();
+        let w: Vec<f32> = (0..n * k).map(|i| (i as f32 * 0.2).cos()).collect();
+        let y = matmul_nt(&x, &w, n, k, n);
+        // serial reference
+        let mut want = vec![0.0f32; n * n];
+        for i in 0..n {
+            for o in 0..n {
+                let mut acc = 0.0f32;
+                for j in 0..k {
+                    acc += x[i * k + j] * w[o * k + j];
+                }
+                want[i * n + o] = acc;
+            }
+        }
+        assert_eq!(y, want, "threaded matmul must be bit-identical");
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let v = par_map(37, |i| i * i);
+        assert_eq!(v, (0..37).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rmsnorm_matches_definition() {
+        let d = 4;
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let w = vec![0.5, 1.0, 1.5, 2.0];
+        let (out, r) = rmsnorm(&x, &w, d);
+        let ms = (1.0 + 4.0 + 9.0 + 16.0) / 4.0 + EPS_NORM;
+        let rr = 1.0 / ms.sqrt();
+        assert!((r[0] - rr).abs() < 1e-7);
+        for j in 0..d {
+            assert!((out[j] - x[j] * rr * w[j]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rmsnorm_backward_finite_difference() {
+        let d = 6;
+        let x: Vec<f32> = (0..d).map(|i| 0.3 + 0.1 * i as f32).collect();
+        let w: Vec<f32> = (0..d).map(|i| 1.0 - 0.05 * i as f32).collect();
+        let dn: Vec<f32> = (0..d).map(|i| 0.2 * (i as f32 - 2.0)).collect();
+        let loss = |x_: &[f32]| -> f32 {
+            let (o, _) = rmsnorm(x_, &w, d);
+            o.iter().zip(&dn).map(|(a, b)| a * b).sum()
+        };
+        let (_, r) = rmsnorm(&x, &w, d);
+        let mut dx = vec![0.0f32; d];
+        rmsnorm_backward(&dn, &x, &w, &r, d, &mut dx);
+        let eps = 1e-3;
+        for j in 0..d {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (loss(&xp) - loss(&xm)) / (2.0 * eps);
+            assert!(
+                (fd - dx[j]).abs() < 1e-3,
+                "dx[{j}]: fd {fd} vs analytic {}",
+                dx[j]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut row = vec![1.0, 2.0, 3.0, 1000.0];
+        softmax_inplace(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[3] > 0.999);
+    }
+
+    #[test]
+    fn silu_grad_finite_difference() {
+        for z in [-3.0f32, -0.5, 0.0, 0.7, 2.5] {
+            let eps = 1e-3;
+            let fd = (silu(z + eps) - silu(z - eps)) / (2.0 * eps);
+            assert!((fd - silu_grad(z)).abs() < 1e-3, "z={z}");
+        }
+    }
+}

@@ -1,0 +1,952 @@
+//! The native compute backend: every manifest kernel implemented in pure
+//! Rust (DESIGN.md §2, §6). No artifacts, Python step or external
+//! libraries are needed — when `artifacts/manifest.json` is absent the
+//! backend falls back to the built-in manifest ([`Manifest::builtin`]),
+//! and the model/data layer synthesizes weights and corpora.
+//!
+//! Kernel keys match the AOT artifact registry exactly
+//! (`{size}_block_fwd_t{t}`, `{size}_score_{tag}`, `{size}_mask24_{tag}`,
+//! `{size}_ro_step_t{t}`, `{size}_full_grad`, …; full list in DESIGN.md
+//! §8), so the coordinator, pruner, eval and harness run unchanged on
+//! either backend.
+
+pub mod block;
+pub mod math;
+pub mod model;
+
+use std::cell::RefCell;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::{Backend, ExecStats, Manifest, SizeInfo};
+use crate::sparsity::nm_mask_native;
+use crate::tensor::{Tensor, TensorI32, Value, ValueView};
+
+use block::{
+    block_backward, block_forward, site_grams, site_squares, BlockWeights,
+    Dims,
+};
+use math::{par_map, rmsprop_update};
+
+/// Indices of the seven prunable weights within the 9-parameter canonical
+/// block order (`crate::BLOCK_PARAMS`): wq wk wv wo wg wu wd.
+const PRUNABLE_IDX: [usize; 7] = [1, 2, 3, 4, 6, 7, 8];
+
+/// Pure-Rust implementation of every manifest kernel.
+pub struct NativeBackend {
+    manifest: Manifest,
+    dir: PathBuf,
+    stats: RefCell<ExecStats>,
+}
+
+/// A parsed kernel key.
+enum Kernel {
+    BlockFwd(usize),
+    BlockStats(usize),
+    BlockHessian(usize),
+    RgsGrad(usize),
+    RoStep(usize),
+    Embed(usize),
+    HeadLoss(usize),
+    Logits(usize),
+    Score,
+    NmMask(usize, usize),
+    FullGrad,
+    LoraStep,
+    LoraEval,
+}
+
+impl NativeBackend {
+    /// Open the native backend on `artifacts_dir`. If
+    /// `artifacts_dir/manifest.json` exists it is loaded (so native runs
+    /// bind to the same shapes as the artifacts); otherwise the built-in
+    /// manifest is used and the backend is fully self-contained.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let mpath = dir.join("manifest.json");
+        let manifest = if mpath.exists() {
+            Manifest::load(&mpath)?
+        } else {
+            Manifest::builtin()
+        };
+        Ok(Self {
+            manifest,
+            dir,
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    /// Split `key` into its size entry and kernel suffix.
+    fn split_key<'k>(&self, key: &'k str) -> Option<(&str, &SizeInfo, &'k str)> {
+        for (name, info) in &self.manifest.sizes {
+            if let Some(rest) = key.strip_prefix(name.as_str()) {
+                if let Some(kernel) = rest.strip_prefix('_') {
+                    return Some((name.as_str(), info, kernel));
+                }
+            }
+        }
+        None
+    }
+
+    /// Parse the kernel suffix; `None` when unrecognized.
+    fn parse_kernel(kernel: &str) -> Option<Kernel> {
+        fn seq(rest: &str, prefix: &str) -> Option<usize> {
+            rest.strip_prefix(prefix)?.parse().ok()
+        }
+        if let Some(t) = seq(kernel, "block_fwd_t") {
+            return Some(Kernel::BlockFwd(t));
+        }
+        if let Some(t) = seq(kernel, "block_stats_t") {
+            return Some(Kernel::BlockStats(t));
+        }
+        if let Some(t) = seq(kernel, "block_hessian_t") {
+            return Some(Kernel::BlockHessian(t));
+        }
+        if let Some(t) = seq(kernel, "rgs_grad_t") {
+            return Some(Kernel::RgsGrad(t));
+        }
+        if let Some(t) = seq(kernel, "ro_step_t") {
+            return Some(Kernel::RoStep(t));
+        }
+        if let Some(t) = seq(kernel, "embed_t") {
+            return Some(Kernel::Embed(t));
+        }
+        if let Some(t) = seq(kernel, "head_loss_t") {
+            return Some(Kernel::HeadLoss(t));
+        }
+        if let Some(t) = seq(kernel, "logits_t") {
+            return Some(Kernel::Logits(t));
+        }
+        if matches!(kernel, "score_sq" | "score_sf" | "score_fd") {
+            return Some(Kernel::Score);
+        }
+        if let Some(rest) = kernel.strip_prefix("mask") {
+            // mask{n}{m}_{tag}: single-digit n and m (2:4, 4:8)
+            let bytes = rest.as_bytes();
+            if bytes.len() >= 4 && bytes[2] == b'_' {
+                let n = (bytes[0] as char).to_digit(10)? as usize;
+                let m = (bytes[1] as char).to_digit(10)? as usize;
+                // the registry ships exactly the 2:4 and 4:8 kernels
+                if matches!(&rest[3..], "sq" | "sf" | "fd")
+                    && ((n, m) == (2, 4) || (n, m) == (4, 8))
+                {
+                    return Some(Kernel::NmMask(n, m));
+                }
+            }
+        }
+        match kernel {
+            "full_grad" => Some(Kernel::FullGrad),
+            "lora_step" => Some(Kernel::LoraStep),
+            "lora_eval" => Some(Kernel::LoraEval),
+            _ => None,
+        }
+    }
+
+    fn f32_in<'a>(
+        key: &str,
+        inputs: &[ValueView<'a>],
+        idx: usize,
+    ) -> Result<&'a Tensor> {
+        match inputs.get(idx).copied() {
+            Some(ValueView::F32(t)) => Ok(t),
+            Some(ValueView::I32(_)) => {
+                Err(anyhow!("{key}: input {idx} expects f32, got i32"))
+            }
+            None => Err(anyhow!("{key}: missing input {idx}")),
+        }
+    }
+
+    fn i32_in<'a>(
+        key: &str,
+        inputs: &[ValueView<'a>],
+        idx: usize,
+    ) -> Result<&'a crate::tensor::TensorI32> {
+        match inputs.get(idx).copied() {
+            Some(ValueView::I32(t)) => Ok(t),
+            Some(ValueView::F32(_)) => {
+                Err(anyhow!("{key}: input {idx} expects i32, got f32"))
+            }
+            None => Err(anyhow!("{key}: missing input {idx}")),
+        }
+    }
+
+    /// Unpack `count` consecutive f32 inputs as flat slices.
+    fn f32_slice_range<'a>(
+        key: &str,
+        inputs: &[ValueView<'a>],
+        start: usize,
+        count: usize,
+    ) -> Result<Vec<&'a [f32]>> {
+        (start..start + count)
+            .map(|i| Self::f32_in(key, inputs, i).map(|t| t.data.as_slice()))
+            .collect()
+    }
+
+    /// Dims for a block-level kernel from the leading `(b, t, d)` input.
+    fn block_dims(
+        key: &str,
+        info: &SizeInfo,
+        x: &Tensor,
+        t_expect: usize,
+    ) -> Result<Dims> {
+        if x.shape.len() != 3 || x.shape[1] != t_expect || x.shape[2] != info.d {
+            bail!(
+                "{key}: x expects [b, {t_expect}, {}], got {:?}",
+                info.d,
+                x.shape
+            );
+        }
+        Ok(Dims {
+            b: x.shape[0],
+            t: t_expect,
+            d: info.d,
+            h: info.n_heads,
+            ffn: info.ffn,
+        })
+    }
+
+    fn weight_shape(info: &SizeInfo, prunable_idx: usize) -> Vec<usize> {
+        // PRUNABLE order: wq wk wv wo (d,d); wg wu (ffn,d); wd (d,ffn)
+        match prunable_idx {
+            0..=3 => vec![info.d, info.d],
+            4 | 5 => vec![info.ffn, info.d],
+            _ => vec![info.d, info.ffn],
+        }
+    }
+
+    /// Validate the flat lengths of one block's nine parameters.
+    fn check_block_params(key: &str, info: &SizeInfo, bp: &[&[f32]]) -> Result<()> {
+        let (d, f) = (info.d, info.ffn);
+        let want = [d, d * d, d * d, d * d, d * d, d, f * d, f * d, d * f];
+        for (i, (p, w)) in bp.iter().zip(want).enumerate() {
+            if p.len() != w {
+                bail!(
+                    "{key}: block param {i} ({}) has {} elements, expects {w}",
+                    crate::BLOCK_PARAMS[i],
+                    p.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate a rank-2 i32 id tensor. Token inputs must lie in
+    /// `0..vocab`; target inputs may additionally be negative (ignored
+    /// positions) but never `>= vocab` — out-of-range ids would index
+    /// out of bounds inside the kernels.
+    fn check_ids(
+        key: &str,
+        name: &str,
+        t: &TensorI32,
+        vocab: usize,
+        allow_negative: bool,
+    ) -> Result<()> {
+        if t.shape.len() != 2 {
+            bail!("{key}: {name} expects rank-2 [b, t], got {:?}", t.shape);
+        }
+        for &id in &t.data {
+            if id >= vocab as i32 || (id < 0 && !allow_negative) {
+                bail!("{key}: {name} id {id} outside vocab 0..{vocab}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate the `(h, ln_f, head)` trio shared by the head kernels.
+    fn check_head_inputs(
+        key: &str,
+        info: &SizeInfo,
+        h: Option<&Tensor>,
+        ln_f: &Tensor,
+        head: &Tensor,
+    ) -> Result<()> {
+        if let Some(h) = h {
+            if h.shape.len() != 3 || h.shape[2] != info.d {
+                bail!("{key}: h expects [b, t, {}], got {:?}", info.d, h.shape);
+            }
+        }
+        if ln_f.numel() != info.d {
+            bail!("{key}: ln_f expects {} elements, got {}", info.d, ln_f.numel());
+        }
+        if head.numel() != info.vocab * info.d {
+            bail!(
+                "{key}: head expects {} elements, got {}",
+                info.vocab * info.d,
+                head.numel()
+            );
+        }
+        Ok(())
+    }
+
+    /// Exact input arity for every kernel — mirrors the artifact specs,
+    /// so native and PJRT reject malformed input lists identically.
+    fn expected_arity(&self, info: &SizeInfo, kernel: &Kernel) -> usize {
+        let l = info.n_layers;
+        match kernel {
+            Kernel::BlockFwd(_)
+            | Kernel::BlockStats(_)
+            | Kernel::BlockHessian(_)
+            | Kernel::RgsGrad(_) => 10, // x + 9 params
+            Kernel::RoStep(_) => 28,    // x, dense_y, 9 bp, 7 masks, 9 v, lr
+            Kernel::Embed(_) => 2,
+            Kernel::HeadLoss(_) => 4,
+            Kernel::Logits(_) => 3,
+            Kernel::Score => 4,
+            Kernel::NmMask(..) => 1,
+            Kernel::FullGrad => 5 + 9 * l, // tok, tgt, embed, blocks, ln_f, head
+            Kernel::LoraEval => 5 + 9 * l + 4 * l,
+            Kernel::LoraStep => 5 + 9 * l + 8 * l + 1,
+        }
+    }
+
+    /// A `[1]`-shaped scalar input (alpha / lr), validated before use.
+    fn scalar_in(
+        key: &str,
+        inputs: &[ValueView],
+        idx: usize,
+        name: &str,
+    ) -> Result<f32> {
+        let t = Self::f32_in(key, inputs, idx)?;
+        if t.numel() != 1 {
+            bail!(
+                "{key}: {name} expects a single element, got {} ({:?})",
+                t.numel(),
+                t.shape
+            );
+        }
+        Ok(t.data[0])
+    }
+
+    fn dispatch(
+        &self,
+        key: &str,
+        info: &SizeInfo,
+        size_name: &str,
+        kernel: Kernel,
+        inputs: &[ValueView],
+    ) -> Result<Vec<Value>> {
+        let want = self.expected_arity(info, &kernel);
+        if inputs.len() != want {
+            bail!(
+                "{key}: got {} inputs, kernel expects {want}",
+                inputs.len()
+            );
+        }
+        match kernel {
+            Kernel::BlockFwd(t) => {
+                let x = Self::f32_in(key, inputs, 0)?;
+                let dims = Self::block_dims(key, info, x, t)?;
+                let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                let (y, _) = block_forward(&x.data, w, dims);
+                Ok(vec![Value::F32(Tensor::new(x.shape.clone(), y))])
+            }
+            Kernel::BlockStats(t) => {
+                let x = Self::f32_in(key, inputs, 0)?;
+                let dims = Self::block_dims(key, info, x, t)?;
+                let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                let (y, cache) = block_forward(&x.data, w, dims);
+                let sq = site_squares(&cache, dims);
+                let [s0, s1, s2, s3] = sq;
+                Ok(vec![
+                    Value::F32(Tensor::new(x.shape.clone(), y)),
+                    Value::F32(Tensor::new(vec![info.d], s0)),
+                    Value::F32(Tensor::new(vec![info.d], s1)),
+                    Value::F32(Tensor::new(vec![info.d], s2)),
+                    Value::F32(Tensor::new(vec![info.ffn], s3)),
+                ])
+            }
+            Kernel::BlockHessian(t) => {
+                let x = Self::f32_in(key, inputs, 0)?;
+                let dims = Self::block_dims(key, info, x, t)?;
+                let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                let (y, cache) = block_forward(&x.data, w, dims);
+                let [h0, h1, h2, h3] = site_grams(&cache, dims);
+                Ok(vec![
+                    Value::F32(Tensor::new(x.shape.clone(), y)),
+                    Value::F32(Tensor::new(vec![info.d, info.d], h0)),
+                    Value::F32(Tensor::new(vec![info.d, info.d], h1)),
+                    Value::F32(Tensor::new(vec![info.d, info.d], h2)),
+                    Value::F32(Tensor::new(vec![info.ffn, info.ffn], h3)),
+                ])
+            }
+            Kernel::RgsGrad(t) => {
+                let x = Self::f32_in(key, inputs, 0)?;
+                let dims = Self::block_dims(key, info, x, t)?;
+                let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                let row = dims.t * dims.d;
+                let one = Dims { b: 1, ..dims };
+                // Per-sample grad of L = ||f(x)||_2 (paper Eq. 3), squared
+                // and summed over the chunk; parallel across samples.
+                let per: Vec<[Vec<f32>; 7]> = par_map(dims.b, |s| {
+                    let xs = &x.data[s * row..(s + 1) * row];
+                    let (y, cache) = block_forward(xs, w, one);
+                    let norm = (y.iter().map(|v| v * v).sum::<f32>()
+                        + 1e-12)
+                        .sqrt();
+                    let dy: Vec<f32> = y.iter().map(|v| v / norm).collect();
+                    let bb = block_backward(&dy, xs, w, &cache, one, false);
+                    let [_, wq, wk, wv, wo, _, wg, wu, wd] = bb.into_params();
+                    let mut g = [wq, wk, wv, wo, wg, wu, wd];
+                    for gi in &mut g {
+                        for v in gi.iter_mut() {
+                            *v *= *v;
+                        }
+                    }
+                    g
+                });
+                let mut out = Vec::with_capacity(7);
+                for pi in 0..7 {
+                    let mut acc = per[0][pi].clone();
+                    for sample in per.iter().skip(1) {
+                        for (a, v) in acc.iter_mut().zip(&sample[pi]) {
+                            *a += v;
+                        }
+                    }
+                    out.push(Value::F32(Tensor::new(
+                        Self::weight_shape(info, pi),
+                        acc,
+                    )));
+                }
+                Ok(out)
+            }
+            Kernel::RoStep(t) => {
+                self.ro_step(key, info, inputs, t)
+            }
+            Kernel::Embed(t) => {
+                let tokens = Self::i32_in(key, inputs, 0)?;
+                let emb = Self::f32_in(key, inputs, 1)?;
+                Self::check_ids(key, "tokens", tokens, info.vocab, false)?;
+                if tokens.shape[1] != t {
+                    bail!("{key}: tokens expect [b, {t}], got {:?}", tokens.shape);
+                }
+                if emb.numel() != info.vocab * info.d {
+                    bail!(
+                        "{key}: embed expects {} elements, got {}",
+                        info.vocab * info.d,
+                        emb.numel()
+                    );
+                }
+                let h = model::embed(&tokens.data, &emb.data, info.d);
+                let shape = vec![tokens.shape[0], t, info.d];
+                Ok(vec![Value::F32(Tensor::new(shape, h))])
+            }
+            Kernel::HeadLoss(_) => {
+                let h = Self::f32_in(key, inputs, 0)?;
+                let tgt = Self::i32_in(key, inputs, 1)?;
+                let ln_f = Self::f32_in(key, inputs, 2)?;
+                let head = Self::f32_in(key, inputs, 3)?;
+                Self::check_head_inputs(key, info, Some(h), ln_f, head)?;
+                Self::check_ids(key, "targets", tgt, info.vocab, true)?;
+                if tgt.data.len() * info.d != h.data.len() {
+                    bail!(
+                        "{key}: targets shape {:?} does not match h {:?}",
+                        tgt.shape,
+                        h.shape
+                    );
+                }
+                let (nll, count) = model::head_loss(
+                    &h.data, &tgt.data, &ln_f.data, &head.data, info.d,
+                    info.vocab,
+                );
+                Ok(vec![
+                    Value::F32(Tensor::scalar(nll)),
+                    Value::F32(Tensor::scalar(count)),
+                ])
+            }
+            Kernel::Logits(_) => {
+                let h = Self::f32_in(key, inputs, 0)?;
+                let ln_f = Self::f32_in(key, inputs, 1)?;
+                let head = Self::f32_in(key, inputs, 2)?;
+                Self::check_head_inputs(key, info, Some(h), ln_f, head)?;
+                let logits = model::logits_all(
+                    &h.data, &ln_f.data, &head.data, info.d, info.vocab,
+                );
+                let mut shape = h.shape.clone();
+                let last = shape.len() - 1;
+                shape[last] = info.vocab;
+                Ok(vec![Value::F32(Tensor::new(shape, logits))])
+            }
+            Kernel::Score => {
+                let w = Self::f32_in(key, inputs, 0)?;
+                let g = Self::f32_in(key, inputs, 1)?;
+                let xn = Self::f32_in(key, inputs, 2)?;
+                let alpha = Self::scalar_in(key, inputs, 3, "alpha")?;
+                if w.shape != g.shape || xn.numel() != w.cols() {
+                    bail!("{key}: inconsistent score input shapes");
+                }
+                let cols = w.cols();
+                let data: Vec<f32> = w
+                    .data
+                    .iter()
+                    .zip(&g.data)
+                    .enumerate()
+                    .map(|(i, (wv, gv))| {
+                        wv.abs() * (alpha * gv + xn.data[i % cols])
+                    })
+                    .collect();
+                Ok(vec![Value::F32(Tensor::new(w.shape.clone(), data))])
+            }
+            Kernel::NmMask(n, m) => {
+                let scores = Self::f32_in(key, inputs, 0)?;
+                Ok(vec![Value::F32(nm_mask_native(scores, n, m))])
+            }
+            Kernel::FullGrad => {
+                let l = info.n_layers;
+                let tokens = Self::i32_in(key, inputs, 0)?;
+                let targets = Self::i32_in(key, inputs, 1)?;
+                let emb = Self::f32_in(key, inputs, 2)?;
+                let flat = Self::f32_slice_range(key, inputs, 3, l * 9)?;
+                let ln_f = Self::f32_in(key, inputs, 3 + l * 9)?;
+                let head = Self::f32_in(key, inputs, 4 + l * 9)?;
+                Self::check_ids(key, "tokens", tokens, info.vocab, false)?;
+                Self::check_ids(key, "targets", targets, info.vocab, true)?;
+                if targets.shape != tokens.shape {
+                    bail!("{key}: tokens/targets shape mismatch");
+                }
+                if emb.numel() != info.vocab * info.d {
+                    bail!("{key}: embed has wrong size {}", emb.numel());
+                }
+                Self::check_head_inputs(key, info, None, ln_f, head)?;
+                for chunk in flat.chunks(9) {
+                    Self::check_block_params(key, info, chunk)?;
+                }
+                let blocks: Vec<BlockWeights> = flat
+                    .chunks(9)
+                    .map(BlockWeights::from_slices)
+                    .collect();
+                let dims = Dims {
+                    b: tokens.shape[0],
+                    t: tokens.shape[1],
+                    d: info.d,
+                    h: info.n_heads,
+                    ffn: info.ffn,
+                };
+                let grads = model::full_sqgrad(
+                    &tokens.data,
+                    &targets.data,
+                    &emb.data,
+                    &blocks,
+                    &ln_f.data,
+                    &head.data,
+                    dims,
+                    info.vocab,
+                );
+                Ok(grads
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, g)| {
+                        Value::F32(Tensor::new(
+                            Self::weight_shape(info, i % 7),
+                            g,
+                        ))
+                    })
+                    .collect())
+            }
+            Kernel::LoraStep | Kernel::LoraEval => {
+                self.lora(key, info, size_name, kernel, inputs)
+            }
+        }
+    }
+
+    /// The fused masked-RMSProp regional-optimization step (paper Eq. 5).
+    fn ro_step(
+        &self,
+        key: &str,
+        info: &SizeInfo,
+        inputs: &[ValueView],
+        t: usize,
+    ) -> Result<Vec<Value>> {
+        let consts = &self.manifest.consts;
+        // arity (28) is enforced centrally in dispatch()
+        let x = Self::f32_in(key, inputs, 0)?;
+        let dense_y = Self::f32_in(key, inputs, 1)?;
+        if dense_y.shape != x.shape {
+            bail!(
+                "{key}: dense_y shape {:?} != x shape {:?}",
+                dense_y.shape,
+                x.shape
+            );
+        }
+        let dims = Self::block_dims(key, info, x, t)?;
+        let bp = Self::f32_slice_range(key, inputs, 2, 9)?;
+        Self::check_block_params(key, info, &bp)?;
+        let masks = Self::f32_slice_range(key, inputs, 11, 7)?;
+        let vstate = Self::f32_slice_range(key, inputs, 18, 9)?;
+        let lr = Self::scalar_in(key, inputs, 27, "lr")?;
+        // Masks mirror the prunable weights; v-state mirrors all params.
+        for (pi, mask) in masks.iter().enumerate() {
+            let want = bp[PRUNABLE_IDX[pi]].len();
+            if mask.len() != want {
+                bail!(
+                    "{key}: mask {pi} has {} elements, expects {want}",
+                    mask.len()
+                );
+            }
+        }
+        for (i, v) in vstate.iter().enumerate() {
+            if v.len() != bp[i].len() {
+                bail!(
+                    "{key}: v-state {i} has {} elements, expects {}",
+                    v.len(),
+                    bp[i].len()
+                );
+            }
+        }
+
+        // Effective weights: prunable matrices are masked in the forward
+        // (the Pallas masked-GEMM path in python).
+        let mut eff: Vec<Vec<f32>> = Vec::with_capacity(9);
+        for (i, w) in bp.iter().enumerate() {
+            if let Some(pi) = PRUNABLE_IDX.iter().position(|p| *p == i) {
+                eff.push(
+                    w.iter().zip(masks[pi]).map(|(a, m)| a * m).collect(),
+                );
+            } else {
+                eff.push(w.to_vec());
+            }
+        }
+        let eff_slices: Vec<&[f32]> = eff.iter().map(|v| v.as_slice()).collect();
+        let w_eff = BlockWeights::from_slices(&eff_slices);
+
+        let (y, cache) = block_forward(&x.data, w_eff, dims);
+        let numel = y.len() as f32;
+        let mut loss = 0.0f32;
+        let mut dy = vec![0.0f32; y.len()];
+        for i in 0..y.len() {
+            let diff = y[i] - dense_y.data[i];
+            loss += diff * diff;
+            dy[i] = 2.0 * diff / numel;
+        }
+        loss /= numel;
+
+        let bb = block_backward(&dy, &x.data, w_eff, &cache, dims, false);
+        let grads = bb.into_params();
+
+        let mut new_bp = Vec::with_capacity(9);
+        let mut new_v = Vec::with_capacity(9);
+        for i in 0..9 {
+            let pi = PRUNABLE_IDX.iter().position(|p| *p == i);
+            // d(w*mask)/dw = mask: the weight gradient carries the mask.
+            let g: Vec<f32> = match pi {
+                Some(pi) => grads[i]
+                    .iter()
+                    .zip(masks[pi])
+                    .map(|(g, m)| g * m)
+                    .collect(),
+                None => grads[i].clone(),
+            };
+            let (w2, v2) = rmsprop_update(
+                bp[i],
+                &g,
+                vstate[i],
+                pi.map(|pi| masks[pi]),
+                lr,
+                consts.rmsprop_rho,
+                consts.rmsprop_eps,
+            );
+            let shape = match inputs[2 + i] {
+                ValueView::F32(tensor) => tensor.shape.clone(),
+                _ => unreachable!("validated above"),
+            };
+            new_bp.push(Value::F32(Tensor::new(shape.clone(), w2)));
+            new_v.push(Value::F32(Tensor::new(shape, v2)));
+        }
+        let mut out = new_bp;
+        out.extend(new_v);
+        out.push(Value::F32(Tensor::scalar(loss)));
+        Ok(out)
+    }
+
+    fn lora(
+        &self,
+        key: &str,
+        info: &SizeInfo,
+        _size_name: &str,
+        kernel: Kernel,
+        inputs: &[ValueView],
+    ) -> Result<Vec<Value>> {
+        let consts = &self.manifest.consts;
+        let l = info.n_layers;
+        let n_lora = 4 * l;
+        let tokens = Self::i32_in(key, inputs, 0)?;
+        let targets = Self::i32_in(key, inputs, 1)?;
+        let emb = Self::f32_in(key, inputs, 2)?;
+        let flat = Self::f32_slice_range(key, inputs, 3, l * 9)?;
+        let ln_f = Self::f32_in(key, inputs, 3 + l * 9)?;
+        let head = Self::f32_in(key, inputs, 4 + l * 9)?;
+        let lora_base = 5 + l * 9;
+        let lora = Self::f32_slice_range(key, inputs, lora_base, n_lora)?;
+        Self::check_ids(key, "tokens", tokens, info.vocab, false)?;
+        Self::check_ids(key, "targets", targets, info.vocab, true)?;
+        if targets.shape != tokens.shape {
+            bail!("{key}: tokens/targets shape mismatch");
+        }
+        if emb.numel() != info.vocab * info.d {
+            bail!("{key}: embed has wrong size {}", emb.numel());
+        }
+        Self::check_head_inputs(key, info, None, ln_f, head)?;
+        for chunk in flat.chunks(9) {
+            Self::check_block_params(key, info, chunk)?;
+        }
+        // adapters: a is (rank, d), b is (d, rank) — both rank*d flat
+        let adapter_len = consts.lora_rank * info.d;
+        for (i, buf) in lora.iter().enumerate() {
+            if buf.len() != adapter_len {
+                bail!(
+                    "{key}: adapter {i} has {} elements, expects {adapter_len}",
+                    buf.len()
+                );
+            }
+        }
+        let blocks: Vec<BlockWeights> =
+            flat.chunks(9).map(BlockWeights::from_slices).collect();
+        let dims = Dims {
+            b: tokens.shape[0],
+            t: tokens.shape[1],
+            d: info.d,
+            h: info.n_heads,
+            ffn: info.ffn,
+        };
+        match kernel {
+            Kernel::LoraEval => {
+                let (nll, count) = model::lora_eval(
+                    &tokens.data,
+                    &targets.data,
+                    &emb.data,
+                    &blocks,
+                    &ln_f.data,
+                    &head.data,
+                    &lora,
+                    consts.lora_rank,
+                    consts.lora_scale,
+                    dims,
+                    info.vocab,
+                );
+                Ok(vec![
+                    Value::F32(Tensor::scalar(nll)),
+                    Value::F32(Tensor::scalar(count)),
+                ])
+            }
+            Kernel::LoraStep => {
+                let vstate = Self::f32_slice_range(
+                    key,
+                    inputs,
+                    lora_base + n_lora,
+                    n_lora,
+                )?;
+                for (i, buf) in vstate.iter().enumerate() {
+                    if buf.len() != adapter_len {
+                        bail!(
+                            "{key}: adapter v-state {i} has {} elements, \
+                             expects {adapter_len}",
+                            buf.len()
+                        );
+                    }
+                }
+                let lr =
+                    Self::scalar_in(key, inputs, lora_base + 2 * n_lora, "lr")?;
+                let step = model::lora_step(
+                    &tokens.data,
+                    &targets.data,
+                    &emb.data,
+                    &blocks,
+                    &ln_f.data,
+                    &head.data,
+                    &lora,
+                    &vstate,
+                    lr,
+                    consts.lora_rank,
+                    consts.lora_scale,
+                    consts.rmsprop_rho,
+                    consts.rmsprop_eps,
+                    dims,
+                    info.vocab,
+                );
+                let rank = consts.lora_rank;
+                let shape_for = |i: usize| -> Vec<usize> {
+                    // interleaved (a, b): a is (rank, d), b is (d, rank)
+                    if i % 2 == 0 {
+                        vec![rank, info.d]
+                    } else {
+                        vec![info.d, rank]
+                    }
+                };
+                let mut out: Vec<Value> = step
+                    .new_lora
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, v)| Value::F32(Tensor::new(shape_for(i), v)))
+                    .collect();
+                out.extend(
+                    step.new_v
+                        .into_iter()
+                        .enumerate()
+                        .map(|(i, v)| Value::F32(Tensor::new(shape_for(i), v))),
+                );
+                out.push(Value::F32(Tensor::scalar(step.loss)));
+                Ok(out)
+            }
+            _ => unreachable!("lora() only handles lora kernels"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn supports(&self, key: &str) -> bool {
+        let Some((name, info, kernel)) = self.split_key(key) else {
+            return false;
+        };
+        let Some(kernel) = Self::parse_kernel(kernel) else {
+            return false;
+        };
+        match kernel {
+            Kernel::BlockFwd(t)
+            | Kernel::BlockStats(t)
+            | Kernel::RgsGrad(t)
+            | Kernel::RoStep(t) => info.seq_variants.contains(&t),
+            // Emitted only at the default context, like the artifacts.
+            Kernel::BlockHessian(t)
+            | Kernel::Embed(t)
+            | Kernel::HeadLoss(t)
+            | Kernel::Logits(t) => t == info.seq,
+            Kernel::Score | Kernel::NmMask(..) => true,
+            // Full-model kernels exist only for the primary size (the
+            // paper's "-" cells for GBLM at scale).
+            Kernel::FullGrad | Kernel::LoraStep | Kernel::LoraEval => {
+                name == self.manifest.consts.primary
+            }
+        }
+    }
+
+    fn warmup(&self, key: &str) -> Result<()> {
+        if self.supports(key) {
+            Ok(())
+        } else {
+            Err(anyhow!("native backend does not support `{key}`"))
+        }
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.borrow_mut().reset();
+    }
+
+    fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>> {
+        let (name, info, kernel) = self
+            .split_key(key)
+            .ok_or_else(|| anyhow!("unknown kernel key `{key}`"))?;
+        if !self.supports(key) {
+            return Err(anyhow!("native backend does not support `{key}`"));
+        }
+        let kernel = Self::parse_kernel(kernel)
+            .ok_or_else(|| anyhow!("unknown kernel key `{key}`"))?;
+        let t0 = Instant::now();
+        let out = self.dispatch(key, info, name, kernel, inputs)?;
+        self.stats
+            .borrow_mut()
+            .record_exec(key, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Backend;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::new(std::env::temp_dir().join("wandapp_native_test"))
+            .unwrap()
+    }
+
+    #[test]
+    fn supports_mirrors_artifact_registry() {
+        let rt = backend();
+        assert!(rt.supports("s0_block_fwd_t64"));
+        assert!(rt.supports("s0_block_fwd_t8")); // s0 has ctx variants
+        assert!(!rt.supports("s1_block_fwd_t8")); // others do not
+        assert!(rt.supports("s2_score_sq"));
+        assert!(rt.supports("s2_mask24_fd"));
+        assert!(rt.supports("s2_full_grad")); // primary only
+        assert!(!rt.supports("s0_full_grad"));
+        assert!(!rt.supports("s0_bogus"));
+        assert!(!rt.supports("zz_block_fwd_t64"));
+    }
+
+    #[test]
+    fn score_kernel_matches_formula() {
+        let rt = backend();
+        let d = rt.manifest().sizes["s0"].d;
+        let w = Tensor::new(
+            vec![d, d],
+            (0..d * d).map(|i| (i as f32 * 0.37).sin()).collect(),
+        );
+        let g = Tensor::new(
+            vec![d, d],
+            (0..d * d).map(|i| (i as f32 * 0.11).cos().abs()).collect(),
+        );
+        let xn =
+            Tensor::new(vec![d], (0..d).map(|i| 0.5 + i as f32 * 0.01).collect());
+        let alpha = Tensor::new(vec![1], vec![100.0]);
+        let out = rt
+            .exec_f32(
+                "s0_score_sq",
+                &[w.clone().into(), g.clone().into(), xn.clone().into(), alpha.into()],
+            )
+            .unwrap();
+        let s = &out[0];
+        for i in 0..d {
+            for j in 0..d {
+                let want = w.data[i * d + j].abs()
+                    * (100.0 * g.data[i * d + j] + xn.data[j]);
+                assert!((want - s.data[i * d + j]).abs() <= 1e-4 * want.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn exec_rejects_wrong_arity_and_shape() {
+        let rt = backend();
+        assert!(rt.exec("s0_block_fwd_t64", &[]).is_err());
+        assert!(rt.exec("s0_ro_step_t64", &[]).is_err());
+        let bad = Value::F32(Tensor::zeros(&[1, 2, 3]));
+        assert!(rt.exec("s0_block_fwd_t64", &[bad]).is_err());
+    }
+
+    #[test]
+    fn stats_record_executions() {
+        let rt = backend();
+        let d = rt.manifest().sizes["s0"].d;
+        let s = Tensor::new(vec![d, d], vec![1.0; d * d]);
+        rt.exec_f32("s0_mask24_sq", &[s.into()]).unwrap();
+        let stats = rt.stats();
+        assert_eq!(stats.records["s0_mask24_sq"].calls, 1);
+        rt.reset_stats();
+        assert!(rt.stats().records.is_empty());
+    }
+}

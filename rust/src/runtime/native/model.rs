@@ -1,0 +1,405 @@
+//! Native full-model kernels: embedding, the perplexity head, full-model
+//! cross-entropy backward (the GBLM baseline's `full_grad`), and the LoRA
+//! fine-tuning step — pure-Rust mirrors of the corresponding graphs in
+//! `python/compile/model.py` (DESIGN.md §6).
+
+use super::block::{
+    block_backward, block_forward, BlockCache, BlockWeights, Dims,
+};
+use super::math::{matmul_nn, matmul_nt, matmul_tn, par_map, rmsnorm, rmsnorm_backward};
+
+/// Embedding lookup: `tokens` of shape `(n,)` into `(n, d)`.
+pub fn embed(tokens: &[i32], emb: &[f32], d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(tokens.len() * d);
+    for &tok in tokens {
+        let base = tok as usize * d;
+        out.extend_from_slice(&emb[base..base + d]);
+    }
+    out
+}
+
+/// Final logits: `rmsnorm(h, ln_f) @ head^T` over `n` positions.
+pub fn logits_all(h: &[f32], ln_f: &[f32], head: &[f32], d: usize, vocab: usize) -> Vec<f32> {
+    let n = h.len() / d;
+    let (hn, _) = rmsnorm(h, ln_f, d);
+    matmul_nt(&hn, head, n, d, vocab)
+}
+
+/// `head_loss`: summed NLL and valid-position count over `n` positions
+/// (targets `< 0` are ignored, as in the python graph).
+pub fn head_loss(
+    h: &[f32],
+    targets: &[i32],
+    ln_f: &[f32],
+    head: &[f32],
+    d: usize,
+    vocab: usize,
+) -> (f32, f32) {
+    let n = h.len() / d;
+    let logits = logits_all(h, ln_f, head, d, vocab);
+    let mut nll = 0.0f32;
+    let mut count = 0.0f32;
+    for p in 0..n {
+        if targets[p] < 0 {
+            continue;
+        }
+        let row = &logits[p * vocab..(p + 1) * vocab];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+        let logz = row.iter().map(|v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
+        nll += logz - row[targets[p] as usize];
+        count += 1.0;
+    }
+    (nll, count)
+}
+
+/// Mean cross-entropy over valid positions plus its gradient w.r.t. `h`.
+/// (`ln_f` / `head` stay frozen in every consumer, so their gradients are
+/// not materialized.)
+pub fn ce_backward(
+    h: &[f32],
+    targets: &[i32],
+    ln_f: &[f32],
+    head: &[f32],
+    d: usize,
+    vocab: usize,
+) -> (f32, Vec<f32>) {
+    let n = h.len() / d;
+    let (hn, r) = rmsnorm(h, ln_f, d);
+    let logits = matmul_nt(&hn, head, n, d, vocab);
+    let count = targets.iter().filter(|t| **t >= 0).count().max(1) as f32;
+    let mut nll = 0.0f32;
+    let mut dlogits = vec![0.0f32; n * vocab];
+    for p in 0..n {
+        if targets[p] < 0 {
+            continue;
+        }
+        let row = &logits[p * vocab..(p + 1) * vocab];
+        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
+        let mut z = 0.0f32;
+        let drow = &mut dlogits[p * vocab..(p + 1) * vocab];
+        for (j, v) in row.iter().enumerate() {
+            let e = (v - maxv).exp();
+            drow[j] = e;
+            z += e;
+        }
+        let logz = z.ln() + maxv;
+        let tgt = targets[p] as usize;
+        nll += logz - row[tgt];
+        let inv = 1.0 / (z * count);
+        for dv in drow.iter_mut() {
+            *dv *= inv; // softmax / count
+        }
+        drow[tgt] -= 1.0 / count;
+    }
+    let dhn = matmul_nn(&dlogits, head, n, vocab, d);
+    let mut dh = vec![0.0f32; n * d];
+    rmsnorm_backward(&dhn, h, ln_f, &r, d, &mut dh);
+    (nll / count, dh)
+}
+
+/// Forward `x0` through a stack of blocks, keeping per-block inputs and
+/// caches for the reverse pass.
+pub struct StackForward {
+    /// `inputs[i]` is the input hidden state of block `i`.
+    pub inputs: Vec<Vec<f32>>,
+    pub caches: Vec<BlockCache>,
+    /// Final hidden state.
+    pub h: Vec<f32>,
+}
+
+pub fn forward_blocks(x0: Vec<f32>, blocks: &[BlockWeights], dims: Dims) -> StackForward {
+    let mut inputs = Vec::with_capacity(blocks.len());
+    let mut caches = Vec::with_capacity(blocks.len());
+    let mut h = x0;
+    for w in blocks {
+        let (y, cache) = block_forward(&h, *w, dims);
+        inputs.push(h);
+        caches.push(cache);
+        h = y;
+    }
+    StackForward { inputs, caches, h }
+}
+
+/// GBLM `full_grad`: per-sample squared gradients of the full-model
+/// cross-entropy w.r.t. every block's seven prunable weights, summed over
+/// the batch. Returns `n_layers * 7` flat buffers in (block, PRUNABLE)
+/// order — exactly the artifact's output list.
+#[allow(clippy::too_many_arguments)]
+pub fn full_sqgrad(
+    tokens: &[i32],
+    targets: &[i32],
+    emb: &[f32],
+    blocks: &[BlockWeights],
+    ln_f: &[f32],
+    head: &[f32],
+    dims: Dims,
+    vocab: usize,
+) -> Vec<Vec<f32>> {
+    let (b, t, d) = (dims.b, dims.t, dims.d);
+    let one = Dims { b: 1, ..dims };
+    // Per-sample backward (the paper's per-sample grad² accumulation),
+    // parallel over samples; deterministic reduction in sample order.
+    // Index order: [sample][block][prunable] -> flat gradient buffer.
+    let per_sample: Vec<Vec<Vec<Vec<f32>>>> = par_map(b, |s| {
+        let tok = &tokens[s * t..(s + 1) * t];
+        let tgt = &targets[s * t..(s + 1) * t];
+        let x0 = embed(tok, emb, d);
+        let fwd = forward_blocks(x0, blocks, one);
+        let (_, dh) = ce_backward(&fwd.h, tgt, ln_f, head, d, vocab);
+        let mut dy = dh;
+        let mut rev: Vec<Vec<Vec<f32>>> = Vec::with_capacity(blocks.len());
+        for li in (0..blocks.len()).rev() {
+            let mut bb = block_backward(
+                &dy,
+                &fwd.inputs[li],
+                blocks[li],
+                &fwd.caches[li],
+                one,
+                li > 0,
+            );
+            if let Some(dx) = bb.dx.take() {
+                dy = dx;
+            }
+            let [_, wq, wk, wv, wo, _, wg, wu, wd] = bb.into_params();
+            let mut prunable = vec![wq, wk, wv, wo, wg, wu, wd];
+            for g in &mut prunable {
+                for v in g.iter_mut() {
+                    *v *= *v; // per-sample grad², summed across samples
+                }
+            }
+            rev.push(prunable);
+        }
+        rev.reverse();
+        rev
+    });
+    // Sum the squared per-sample gradients, (block, PRUNABLE) order.
+    let mut out: Vec<Vec<f32>> = Vec::with_capacity(blocks.len() * 7);
+    for li in 0..blocks.len() {
+        for pi in 0..7 {
+            let mut acc = per_sample[0][li][pi].clone();
+            for sample in per_sample.iter().skip(1) {
+                for (a, v) in acc.iter_mut().zip(&sample[li][pi]) {
+                    *a += v;
+                }
+            }
+            out.push(acc);
+        }
+    }
+    out
+}
+
+/// LoRA adapters applied to the q and v projections of every block
+/// (paper §5.6): effective weights `w + scale * (b @ a)`, with `a` of
+/// shape `(rank, d)` and `b` of shape `(d, rank)`.
+///
+/// `lora` holds `4 * n_layers` buffers in `(a_q, b_q, a_v, b_v)` order per
+/// layer — the artifact/`LoraState` order.
+pub fn lora_effective(
+    blocks: &[BlockWeights],
+    lora: &[&[f32]],
+    rank: usize,
+    scale: f32,
+    d: usize,
+) -> Vec<(Vec<f32>, Vec<f32>)> {
+    let mut eff = Vec::with_capacity(blocks.len());
+    for (li, w) in blocks.iter().enumerate() {
+        let a_q = lora[li * 4];
+        let b_q = lora[li * 4 + 1];
+        let a_v = lora[li * 4 + 2];
+        let b_v = lora[li * 4 + 3];
+        // b @ a: (d, rank) x (rank, d) -> (d, d)
+        let dq = matmul_nn(b_q, a_q, d, rank, d);
+        let dv = matmul_nn(b_v, a_v, d, rank, d);
+        let mut wq = w.wq.to_vec();
+        for (x, delta) in wq.iter_mut().zip(&dq) {
+            *x += scale * delta;
+        }
+        let mut wv = w.wv.to_vec();
+        for (x, delta) in wv.iter_mut().zip(&dv) {
+            *x += scale * delta;
+        }
+        eff.push((wq, wv));
+    }
+    eff
+}
+
+/// Outcome of one native LoRA RMSProp step.
+pub struct LoraStepOut {
+    /// Updated adapters, input order.
+    pub new_lora: Vec<Vec<f32>>,
+    /// Updated optimizer state, input order.
+    pub new_v: Vec<Vec<f32>>,
+    pub loss: f32,
+}
+
+/// One RMSProp step on the LoRA adapters only (frozen base weights) —
+/// the native `lora_step` kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_step(
+    tokens: &[i32],
+    targets: &[i32],
+    emb: &[f32],
+    blocks: &[BlockWeights],
+    ln_f: &[f32],
+    head: &[f32],
+    lora: &[&[f32]],
+    vstate: &[&[f32]],
+    lr: f32,
+    rank: usize,
+    scale: f32,
+    rho: f32,
+    eps: f32,
+    dims: Dims,
+    vocab: usize,
+) -> LoraStepOut {
+    use super::math::rmsprop_update;
+    let d = dims.d;
+    let eff = lora_effective(blocks, lora, rank, scale, d);
+    let eff_blocks: Vec<BlockWeights> = blocks
+        .iter()
+        .enumerate()
+        .map(|(li, w)| BlockWeights {
+            wq: &eff[li].0,
+            wv: &eff[li].1,
+            ..*w
+        })
+        .collect();
+
+    let x0 = embed(tokens, emb, d);
+    let fwd = forward_blocks(x0, &eff_blocks, dims);
+    let (loss, dh) = ce_backward(&fwd.h, targets, ln_f, head, d, vocab);
+
+    // Reverse pass: collect d(wq_eff), d(wv_eff) per block.
+    let mut dwq = vec![Vec::new(); blocks.len()];
+    let mut dwv = vec![Vec::new(); blocks.len()];
+    let mut dy = dh;
+    for li in (0..blocks.len()).rev() {
+        let mut bb = block_backward(
+            &dy,
+            &fwd.inputs[li],
+            eff_blocks[li],
+            &fwd.caches[li],
+            dims,
+            li > 0,
+        );
+        if let Some(dx) = bb.dx.take() {
+            dy = dx;
+        }
+        let [_, d_wq, _, d_wv, _, _, _, _, _] = bb.into_params();
+        dwq[li] = d_wq;
+        dwv[li] = d_wv;
+    }
+
+    // Chain into the adapters and apply the RMSProp update (ones mask).
+    let mut new_lora = Vec::with_capacity(lora.len());
+    let mut new_v = Vec::with_capacity(lora.len());
+    for li in 0..blocks.len() {
+        for (mi, dw) in [&dwq[li], &dwv[li]].into_iter().enumerate() {
+            let a = lora[li * 4 + mi * 2];
+            let b = lora[li * 4 + mi * 2 + 1];
+            // da = scale * b^T @ dw : (rank, d)
+            let mut da = matmul_tn(b, dw, d, rank, d);
+            for v in da.iter_mut() {
+                *v *= scale;
+            }
+            // db = scale * dw @ a^T : (d, rank)
+            let mut db = matmul_nt(dw, a, d, d, rank);
+            for v in db.iter_mut() {
+                *v *= scale;
+            }
+            let va = vstate[li * 4 + mi * 2];
+            let vb = vstate[li * 4 + mi * 2 + 1];
+            let (a2, va2) = rmsprop_update(a, &da, va, None, lr, rho, eps);
+            let (b2, vb2) = rmsprop_update(b, &db, vb, None, lr, rho, eps);
+            new_lora.push(a2);
+            new_lora.push(b2);
+            new_v.push(va2);
+            new_v.push(vb2);
+        }
+    }
+    LoraStepOut { new_lora, new_v, loss }
+}
+
+/// Full-model forward with adapters applied, returning `(sum_nll, count)`
+/// — the native `lora_eval` kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn lora_eval(
+    tokens: &[i32],
+    targets: &[i32],
+    emb: &[f32],
+    blocks: &[BlockWeights],
+    ln_f: &[f32],
+    head: &[f32],
+    lora: &[&[f32]],
+    rank: usize,
+    scale: f32,
+    dims: Dims,
+    vocab: usize,
+) -> (f32, f32) {
+    let d = dims.d;
+    let eff = lora_effective(blocks, lora, rank, scale, d);
+    let eff_blocks: Vec<BlockWeights> = blocks
+        .iter()
+        .enumerate()
+        .map(|(li, w)| BlockWeights {
+            wq: &eff[li].0,
+            wv: &eff[li].1,
+            ..*w
+        })
+        .collect();
+    let x0 = embed(tokens, emb, d);
+    let fwd = forward_blocks(x0, &eff_blocks, dims);
+    head_loss(&fwd.h, targets, ln_f, head, d, vocab)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn embed_and_head_loss_shapes() {
+        let d = 4;
+        let vocab = 8;
+        let emb: Vec<f32> = (0..vocab * d).map(|i| i as f32 * 0.1).collect();
+        let h = embed(&[1, 3], &emb, d);
+        assert_eq!(h.len(), 2 * d);
+        assert_eq!(h[0], emb[d]);
+        let ln_f = vec![1.0; d];
+        let head: Vec<f32> = (0..vocab * d).map(|i| (i as f32 * 0.3).sin()).collect();
+        let (nll, count) = head_loss(&h, &[2, -1], &ln_f, &head, d, vocab);
+        assert_eq!(count, 1.0);
+        assert!(nll.is_finite() && nll > 0.0);
+    }
+
+    #[test]
+    fn ce_backward_finite_difference() {
+        let d = 6;
+        let vocab = 10;
+        let n = 3;
+        let mut rng = Rng::seed_from_u64(11);
+        let h: Vec<f32> = (0..n * d).map(|_| rng.gen_normal() * 0.5).collect();
+        let ln_f: Vec<f32> = (0..d).map(|_| 0.8 + rng.gen_f32() * 0.4).collect();
+        let head: Vec<f32> =
+            (0..vocab * d).map(|_| rng.gen_normal() * 0.4).collect();
+        let targets = vec![3, 7, 1];
+        let (_, dh) = ce_backward(&h, &targets, &ln_f, &head, d, vocab);
+        let loss = |h_: &[f32]| -> f32 {
+            let (nll, count) = head_loss(h_, &targets, &ln_f, &head, d, vocab);
+            nll / count
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 5, 11, 17] {
+            let mut hp = h.clone();
+            hp[idx] += eps;
+            let mut hm = h.clone();
+            hm[idx] -= eps;
+            let fd = (loss(&hp) - loss(&hm)) / (2.0 * eps);
+            assert!(
+                (fd - dh[idx]).abs() < 2e-3,
+                "dh[{idx}]: fd {fd} vs analytic {}",
+                dh[idx]
+            );
+        }
+    }
+}

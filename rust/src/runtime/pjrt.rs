@@ -1,0 +1,188 @@
+//! PJRT backend: loads AOT-lowered HLO-text artifacts, compiles them once
+//! on the CPU PJRT client, and executes them from the coordinator's hot
+//! path (DESIGN.md §2).
+//!
+//! Interchange is HLO **text** — the image's xla_extension 0.5.1 rejects
+//! the 64-bit instruction ids in jax>=0.5 serialized protos, while the
+//! text parser reassigns ids. The manifest written by `python -m
+//! compile.aot` pins every artifact's ordered input / output names, shapes
+//! and dtypes; [`PjrtRuntime`] validates against it on every call so shape
+//! bugs surface as errors, not NaNs.
+//!
+//! This module is compiled only with the `pjrt` cargo feature. The default
+//! offline build links an API stub for the `xla` crate; swap in the real
+//! crate to execute artifacts.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::{Backend, ExecStats, Manifest};
+use crate::tensor::{Tensor, TensorI32, Value, ValueView};
+
+/// Owns the PJRT client, the compiled-executable cache, and the manifest.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and load the manifest from `artifacts_dir`.
+    pub fn new<P: AsRef<Path>>(artifacts_dir: P) -> Result<Self> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(dir.join("manifest.json"))
+            .context("loading manifest.json — run `make artifacts` first")?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            client,
+            manifest,
+            dir,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for `key`.
+    fn executable(
+        &self,
+        key: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(key) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.artifact(key)?;
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .with_context(|| format!("parsing HLO text for {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(self.client.compile(&comp)?);
+        self.stats
+            .borrow_mut()
+            .record_compile(key, t0.elapsed().as_secs_f64());
+        self.cache.borrow_mut().insert(key.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn supports(&self, key: &str) -> bool {
+        self.manifest.artifact(key).is_ok()
+    }
+
+    fn warmup(&self, key: &str) -> Result<()> {
+        self.executable(key).map(|_| ())
+    }
+
+    fn stats(&self) -> ExecStats {
+        self.stats.borrow().clone()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.borrow_mut().reset();
+    }
+
+    /// Execute artifact `key` with borrowed inputs, returning outputs in
+    /// manifest order. Inputs are validated (arity, shape, dtype) before
+    /// execution; buffers are copied exactly once (into the PJRT literal).
+    fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>> {
+        let spec = self.manifest.artifact(key)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            return Err(anyhow!(
+                "{key}: got {} inputs, manifest expects {}",
+                inputs.len(),
+                spec.inputs.len()
+            ));
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                return Err(anyhow!(
+                    "{key}: input `{}` expects {:?} {}, got {:?} {}",
+                    io.name,
+                    io.shape,
+                    io.dtype,
+                    v.shape(),
+                    v.dtype()
+                ));
+            }
+        }
+
+        let exe = self.executable(key)?;
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|v| v.to_literal())
+            .collect::<Result<_>>()?;
+        let mut result = exe.execute::<xla::Literal>(&lits)?;
+        let root = result
+            .pop()
+            .and_then(|mut d| d.pop())
+            .ok_or_else(|| anyhow!("{key}: empty execution result"))?
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: the root is always a tuple.
+        let parts = root.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            return Err(anyhow!(
+                "{key}: got {} outputs, manifest expects {}",
+                parts.len(),
+                spec.outputs.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, io) in parts.iter().zip(&spec.outputs) {
+            let v = match io.dtype.as_str() {
+                "f32" => Value::F32(Tensor::from_literal(lit, &io.shape)?),
+                "i32" => Value::I32(TensorI32::from_literal(lit, &io.shape)?),
+                other => return Err(anyhow!("{key}: unknown dtype {other}")),
+            };
+            out.push(v);
+        }
+        self.stats
+            .borrow_mut()
+            .record_exec(key, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_manifest_is_a_clean_error() {
+        let dir = std::env::temp_dir().join("wandapp_pjrt_missing");
+        let err = PjrtRuntime::new(&dir).unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn exec_validates_against_manifest_when_available() {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let Ok(rt) = PjrtRuntime::new(&dir) else {
+            eprintln!("skipping: no PJRT artifacts / client available");
+            return;
+        };
+        let err = rt.exec("s0_block_fwd_t64", &[]).unwrap_err();
+        assert!(err.to_string().contains("inputs"));
+    }
+}

@@ -23,6 +23,14 @@ pub enum Pattern {
 
 impl Pattern {
     /// Target fraction of zeroed weights.
+    ///
+    /// ```
+    /// use wandapp::sparsity::Pattern;
+    /// assert_eq!(Pattern::NofM(2, 4).sparsity(), 0.5);
+    /// assert_eq!(Pattern::NofM(4, 8).sparsity(), 0.5);
+    /// assert_eq!(Pattern::Unstructured(0.7).sparsity(), 0.7);
+    /// assert_eq!(Pattern::StructuredRows(0.3).sparsity(), 0.3);
+    /// ```
     pub fn sparsity(&self) -> f64 {
         match *self {
             Pattern::Unstructured(s) => s,
@@ -57,6 +65,18 @@ fn group_keep(scores: &[f32], keep: usize, mask: &mut [f32]) {
 }
 
 /// N:M mask, native implementation (bit-identical to the Pallas kernel).
+///
+/// Within every contiguous group of `m` columns the `n` highest-scoring
+/// entries are kept; ties break toward the lower index:
+///
+/// ```
+/// use wandapp::sparsity::{is_nm, nm_mask_native};
+/// use wandapp::tensor::Tensor;
+/// let scores = Tensor::new(vec![1, 8], vec![0.9, 0.1, 0.5, 0.3, 4.0, 3.0, 2.0, 1.0]);
+/// let mask = nm_mask_native(&scores, 2, 4);
+/// assert_eq!(mask.data, vec![1.0, 0.0, 1.0, 0.0, 1.0, 1.0, 0.0, 0.0]);
+/// assert!(is_nm(&mask, 2, 4));
+/// ```
 pub fn nm_mask_native(scores: &Tensor, n: usize, m: usize) -> Tensor {
     let (rows, cols) = (scores.rows(), scores.cols());
     assert_eq!(cols % m, 0, "d_in {cols} not divisible by M={m}");
@@ -116,6 +136,17 @@ pub fn structured_row_mask(scores: &Tensor, fraction: f64) -> Tensor {
 }
 
 /// Dispatch a pattern to its native selection routine.
+///
+/// ```
+/// use wandapp::sparsity::{select_mask, Pattern};
+/// use wandapp::tensor::Tensor;
+/// let scores = Tensor::new(vec![2, 4], vec![4.0, 3.0, 2.0, 1.0,
+///                                           1.0, 2.0, 3.0, 4.0]);
+/// let mask = select_mask(&scores, Pattern::Unstructured(0.5));
+/// assert_eq!(mask.zero_fraction(), 0.5);
+/// // the kept entries are each row's top half
+/// assert_eq!(mask.data, vec![1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 1.0]);
+/// ```
 pub fn select_mask(scores: &Tensor, pattern: Pattern) -> Tensor {
     match pattern {
         Pattern::Unstructured(s) => unstructured_mask(scores, s),

@@ -1,9 +1,10 @@
-//! Minimal host tensor used throughout the coordinator, plus conversions to
-//! and from `xla::Literal` for PJRT execution.
+//! Minimal host tensor used throughout the coordinator. With the `pjrt`
+//! feature the types also convert to and from `xla::Literal` for PJRT
+//! execution.
 //!
 //! Everything on the rust side is f32 (weights, scores, masks, hidden
 //! states) or i32 (token ids); shapes are row-major and validated against
-//! the artifact manifest before every execution.
+//! the manifest key before every backend execution.
 
 use anyhow::{anyhow, Result};
 
@@ -29,23 +30,60 @@ pub enum Value {
 }
 
 impl Tensor {
+    /// Build a tensor from a shape and matching row-major data.
+    ///
+    /// ```
+    /// use wandapp::tensor::Tensor;
+    /// let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    /// assert_eq!(t.rows(), 2);
+    /// assert_eq!(t.cols(), 3);
+    /// assert_eq!(t.numel(), 6);
+    /// ```
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape, data }
     }
 
+    /// All-zeros tensor of the given shape.
+    ///
+    /// ```
+    /// use wandapp::tensor::Tensor;
+    /// let z = Tensor::zeros(&[4, 2]);
+    /// assert_eq!(z.numel(), 8);
+    /// assert_eq!(z.zero_fraction(), 1.0);
+    /// ```
     pub fn zeros(shape: &[usize]) -> Self {
         Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
     }
 
+    /// All-ones tensor of the given shape.
+    ///
+    /// ```
+    /// use wandapp::tensor::Tensor;
+    /// assert_eq!(Tensor::ones(&[3]).data, vec![1.0, 1.0, 1.0]);
+    /// ```
     pub fn ones(shape: &[usize]) -> Self {
         Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
     }
 
+    /// Constant-filled tensor of the given shape.
+    ///
+    /// ```
+    /// use wandapp::tensor::Tensor;
+    /// assert_eq!(Tensor::filled(&[2], 0.5).data, vec![0.5, 0.5]);
+    /// ```
     pub fn filled(shape: &[usize], v: f32) -> Self {
         Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
     }
 
+    /// Rank-0 scalar tensor (the shape of artifact loss outputs).
+    ///
+    /// ```
+    /// use wandapp::tensor::Tensor;
+    /// let s = Tensor::scalar(3.5);
+    /// assert!(s.shape.is_empty());
+    /// assert_eq!(s.item(), 3.5);
+    /// ```
     pub fn scalar(v: f32) -> Self {
         Self { shape: vec![], data: vec![v] }
     }
@@ -99,7 +137,8 @@ impl Tensor {
     }
 
     /// Single-copy literal creation (perf: the vec1+reshape path copied
-    /// the buffer twice; see EXPERIMENTS.md §Perf).
+    /// the buffer twice; see DESIGN.md §6).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes = unsafe {
             std::slice::from_raw_parts(
@@ -114,6 +153,7 @@ impl Tensor {
         )?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
         let data = lit.to_vec::<f32>()?;
         if data.len() != shape.iter().product::<usize>() {
@@ -128,11 +168,20 @@ impl Tensor {
 }
 
 impl TensorI32 {
+    /// Build an i32 tensor (token ids / targets) from shape and data.
+    ///
+    /// ```
+    /// use wandapp::tensor::TensorI32;
+    /// let t = TensorI32::new(vec![2, 2], vec![7, 8, 9, 10]);
+    /// assert_eq!(t.shape, vec![2, 2]);
+    /// assert_eq!(t.data[3], 10);
+    /// ```
     pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
         Self { shape, data }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes = unsafe {
             std::slice::from_raw_parts(
@@ -147,6 +196,7 @@ impl TensorI32 {
         )?)
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal, shape: &[usize]) -> Result<Self> {
         let data = lit.to_vec::<i32>()?;
         Ok(Self { shape: shape.to_vec(), data })
@@ -186,6 +236,7 @@ impl Value {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             Value::F32(t) => t.to_literal(),
@@ -207,8 +258,8 @@ impl From<TensorI32> for Value {
 }
 
 /// Borrowed view of a runtime value — lets the hot path hand tensors to
-/// [`crate::runtime::Runtime::exec_v`] without cloning their buffers
-/// (EXPERIMENTS.md §Perf: removed one full input copy per dispatch).
+/// [`crate::runtime::Backend::exec_v`] without cloning their buffers
+/// (one less full input copy per dispatch; DESIGN.md §6).
 #[derive(Clone, Copy, Debug)]
 pub enum ValueView<'a> {
     F32(&'a Tensor),
@@ -230,6 +281,7 @@ impl<'a> ValueView<'a> {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         match self {
             ValueView::F32(t) => t.to_literal(),

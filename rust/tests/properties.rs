@@ -1,11 +1,11 @@
 //! Property-based tests (in-tree harness; proptest is unavailable in the
 //! offline build): seeded randomized sweeps over the coordinator's
 //! invariants — mask algebra, selection routines, the SparseGPT solver,
-//! JSON round-trips, and the Pallas-kernel/native cross-checks.
+//! JSON round-trips, and backend-kernel/native cross-checks.
 
 use wandapp::json::Json;
 use wandapp::rng::Rng;
-use wandapp::runtime::Runtime;
+use wandapp::runtime::Backend;
 use wandapp::sparsity::{
     is_nm, nm_mask_native, structured_row_mask, unstructured_mask, Pattern,
     select_mask,
@@ -198,13 +198,22 @@ fn prop_json_string_fuzz() {
     }
 }
 
+fn backend() -> Box<dyn Backend> {
+    wandapp::runtime::open(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "auto",
+    )
+    .expect("backend")
+}
+
 #[test]
-fn prop_pallas_nm_kernel_matches_native() {
-    // Cross-check the production Pallas mask artifact against the native
-    // implementation on random scores, for both shipped patterns.
-    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first");
-    let d = rt.manifest.sizes["s0"].d;
+fn prop_backend_nm_kernel_matches_native() {
+    // Cross-check the backend's mask kernel (Pallas artifact under pjrt,
+    // dispatch path under native) against the in-process implementation on
+    // random scores, for both shipped patterns.
+    let rt = backend();
+    let rt = rt.as_ref();
+    let d = rt.manifest().sizes["s0"].d;
     let mut rng = Rng::seed_from_u64(900);
     for case in 0..10 {
         let s = Tensor::new(
@@ -223,11 +232,11 @@ fn prop_pallas_nm_kernel_matches_native() {
 }
 
 #[test]
-fn prop_pallas_score_kernel_matches_native() {
-    let rt = Runtime::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
-        .expect("run `make artifacts` first");
-    let d = rt.manifest.sizes["s0"].d;
-    let ffn = rt.manifest.sizes["s0"].ffn;
+fn prop_backend_score_kernel_matches_formula() {
+    let rt = backend();
+    let rt = rt.as_ref();
+    let d = rt.manifest().sizes["s0"].d;
+    let ffn = rt.manifest().sizes["s0"].ffn;
     let mut rng = Rng::seed_from_u64(1000);
     for (key, rows, cols) in [
         ("s0_score_sq", d, d),

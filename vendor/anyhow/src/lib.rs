@@ -1,0 +1,158 @@
+//! Minimal in-tree reimplementation of the `anyhow` error-handling API.
+//!
+//! The offline build environment vendors no external crates, so this crate
+//! provides the small slice of `anyhow` the workspace actually uses: an
+//! opaque [`Error`] with a human-readable context chain, the [`anyhow!`]
+//! and [`bail!`] macros, the [`Context`] extension trait, and the
+//! [`Result`] alias. Semantics follow upstream anyhow closely enough that
+//! swapping the real crate back in is a one-line Cargo change
+//! (DESIGN.md §5).
+//!
+//! ```
+//! use anyhow::{anyhow, Context, Result};
+//!
+//! fn parse(v: &str) -> Result<usize> {
+//!     v.parse::<usize>().context("not a number")
+//! }
+//! assert_eq!(parse("42").unwrap(), 42);
+//! let err = parse("nope").unwrap_err();
+//! assert!(err.to_string().starts_with("not a number"));
+//! let e = anyhow!("bad value {}", 7);
+//! assert_eq!(e.to_string(), "bad value 7");
+//! ```
+
+use std::fmt;
+
+/// Opaque error: a message plus an outer-to-inner context chain.
+///
+/// Like upstream anyhow, `Error` deliberately does **not** implement
+/// `std::error::Error`; that is what makes the blanket
+/// `From<E: std::error::Error>` conversion coherent.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { chain: vec![message.to_string()] }
+    }
+
+    /// Prepend a layer of context (outermost first in display order).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The outer-to-inner chain of messages.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The outermost (most recently added) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> Result<()>` prints through Debug; make it readable.
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, `format!`-style.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    #[test]
+    fn chain_and_display() {
+        let e = Error::msg("inner").context("mid").context("outer");
+        assert_eq!(e.to_string(), "outer: mid: inner");
+        assert_eq!(e.chain().count(), 3);
+        assert_eq!(e.root_cause(), "inner");
+    }
+
+    #[test]
+    fn std_error_converts() {
+        fn io_fail() -> Result<()> {
+            std::fs::read("/definitely/not/a/file/zz")?;
+            Ok(())
+        }
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_and_context_on_results() {
+        let r: Result<()> = Err(anyhow!("value {}", 3));
+        let e = r.context("while testing").unwrap_err();
+        assert_eq!(e.to_string(), "while testing: value 3");
+        let o: Option<u32> = None;
+        assert!(o.context("missing").is_err());
+        fn bails() -> Result<u32> {
+            bail!("stop {}", "here")
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop here");
+    }
+}
