@@ -7,7 +7,7 @@
 //! Run with `cargo bench --bench pipeline`.
 
 use wandapp::bench::Group;
-use wandapp::coordinator::Coordinator;
+use wandapp::coordinator::{Coordinator, PruneSession};
 use wandapp::eval::perplexity_split;
 use wandapp::latency::{
     sparsity_reduction, Format, HwProfile, LlmGeometry, Workload,
@@ -36,19 +36,42 @@ fn main() {
         Method::SparseGpt,
     ] {
         grp.bench(method.label(), || {
-            let mut w = load_size(&rt, "s0").unwrap();
+            let mut w = load_size(rt, "s0").unwrap();
             let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
             opts.n_calib = 16;
-            Coordinator::new(&rt).prune(&mut w, &opts).unwrap();
+            Coordinator::new(rt).prune(&mut w, &opts).unwrap();
         });
     }
     let mut grp = Group::new("wanda++ full (s0, K=2)").budget(8.0);
     grp.bench("wanda++_k2", || {
-        let mut w = load_size(&rt, "s0").unwrap();
+        let mut w = load_size(rt, "s0").unwrap();
         let mut opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
         opts.n_calib = 16;
         opts.k_iters = 2;
-        Coordinator::new(&rt).prune(&mut w, &opts).unwrap();
+        Coordinator::new(rt).prune(&mut w, &opts).unwrap();
+    });
+
+    // --- multi-method sweep: fresh calibration per run vs one shared
+    // CalibCache inside a PruneSession (the O(methods) -> O(1) win) ------
+    let sweep = [Method::Magnitude, Method::Wanda, Method::WandaPPRgs];
+    let mut grp = Group::new("3-method sweep s0 2:4 (32 calib)").budget(8.0);
+    grp.bench("fresh_calib_per_method", || {
+        for method in sweep {
+            let mut w = load_size(rt, "s0").unwrap();
+            let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+            opts.n_calib = 32;
+            Coordinator::new(rt).prune(&mut w, &opts).unwrap();
+        }
+    });
+    grp.bench("shared_calib_session", || {
+        let mut session =
+            PruneSession::builder(rt).size("s0").build().unwrap();
+        for method in sweep {
+            let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+            opts.n_calib = 32;
+            session.run(&opts).unwrap();
+        }
+        assert_eq!(session.calib_builds(), 1);
     });
 
     // --- SparseGPT OBS solve (native linalg) ------------------------------
@@ -70,17 +93,17 @@ fn main() {
     });
 
     // --- perplexity eval ---------------------------------------------------
-    let w = load_size(&rt, "s0").unwrap();
-    perplexity_split(&rt, &w, "val", 1).unwrap(); // compile warmup
+    let w = load_size(rt, "s0").unwrap();
+    perplexity_split(rt, &w, "val", 1).unwrap(); // compile warmup
     let mut grp = Group::new("perplexity eval").budget(3.0);
     grp.bench("ppl_s0_4batches", || {
-        perplexity_split(&rt, &w, "val", 4).unwrap();
+        perplexity_split(rt, &w, "val", 4).unwrap();
     });
 
     // --- zero-shot task scoring -------------------------------------------
     let mut grp = Group::new("zero-shot tasks (s0)").budget(5.0);
     grp.bench("tasks_10ex", || {
-        wandapp::eval::run_tasks(&rt, &w, 10).unwrap();
+        wandapp::eval::run_tasks(rt, &w, 10).unwrap();
     });
 
     // --- latency simulator --------------------------------------------------

@@ -1,12 +1,16 @@
 //! Compare every pruning method on one model and pattern — a compact
-//! Table-1 column. Usage:
+//! Table-1 column — through one [`PruneSession`], so all methods share a
+//! single calibration build. The two post-paper scorers the registry
+//! ships (STADE, RIA) ride along to show the score surface is open.
+//! Usage:
 //!
 //! `cargo run --release --example compare_methods -- [size] [pattern]`
 //! (defaults: s1 2:4)
 
 use anyhow::Result;
-use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
-use wandapp::pruner::{Method, PruneOptions};
+use wandapp::coordinator::PruneSession;
+use wandapp::harness::{dense_ppl, prune_and_eval_in, EVAL_BATCHES};
+use wandapp::pruner::{Method, PruneOptions, Recipe};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
@@ -21,21 +25,35 @@ fn main() -> Result<()> {
 
     let rt_box = wandapp::runtime::open("artifacts", "auto")?;
     let rt: &dyn Backend = rt_box.as_ref();
-    let (dense, _) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
+    let (dense, _) = dense_ppl(rt, &size, EVAL_BATCHES)?;
     println!("{size} {} — dense ppl {dense:.3}", pattern.label());
     println!("{:<12} {:>9} {:>8} {:>10}", "method", "ppl", "time(s)", "mem(MiB)");
-    for method in Method::all() {
-        let opts = PruneOptions::new(method, pattern);
-        match prune_and_eval(&rt, &size, &opts, EVAL_BATCHES) {
+
+    let mut session = PruneSession::builder(rt).size(&size).build()?;
+    let mut recipes: Vec<Recipe> =
+        Method::all().iter().map(|m| m.recipe()).collect();
+    recipes.push(Recipe::score_only("stade"));
+    recipes.push(Recipe::score_only("ria"));
+
+    for recipe in recipes {
+        let label = recipe.label.clone();
+        let opts = PruneOptions::for_recipe(recipe, pattern);
+        // One failing method (or its eval) prints "-" and never aborts
+        // the rest of the table.
+        match prune_and_eval_in(&mut session, &opts, EVAL_BATCHES) {
             Ok(r) => println!(
-                "{:<12} {:>9.3} {:>8.1} {:>10.1}",
-                method.label(),
+                "{label:<12} {:>9.3} {:>8.1} {:>10.1}",
                 r.ppl_test,
                 r.report.secs,
                 r.report.memory.peak() as f64 / (1 << 20) as f64
             ),
-            Err(e) => println!("{:<12} {:>9} ({e})", method.label(), "-"),
+            Err(e) => println!("{label:<12} {:>9} ({e})", "-"),
         }
     }
+    println!(
+        "(one shared calibration build served all methods: {} build{})",
+        session.calib_builds(),
+        if session.calib_builds() == 1 { "" } else { "s" }
+    );
     Ok(())
 }

@@ -5,10 +5,9 @@
 //! `cargo run --release --example lora_finetune -- [steps]`
 
 use anyhow::Result;
-use wandapp::coordinator::Coordinator;
+use wandapp::coordinator::PruneSession;
 use wandapp::eval::perplexity_split;
 use wandapp::lora::{finetune, perplexity_with_lora, LoraState};
-use wandapp::model::load_size;
 use wandapp::pruner::{Method, PruneOptions};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
@@ -22,20 +21,20 @@ fn main() -> Result<()> {
     let rt: &dyn Backend = rt_box.as_ref();
     let size = rt.manifest().consts.primary.clone();
 
-    let mut w = load_size(&rt, &size)?;
-    let dense = perplexity_split(&rt, &w, "test", 24)?;
+    let mut session = PruneSession::builder(rt).size(&size).build()?;
+    let dense = perplexity_split(rt, session.weights(), "test", 24)?;
     println!("dense ppl: {dense:.3}");
 
-    let coord = Coordinator::new(&rt);
     let opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
-    let report = coord.prune(&mut w, &opts)?;
-    println!("{}", report.summary());
-    let pruned = perplexity_split(&rt, &w, "test", 24)?;
+    let out = session.run(&opts)?;
+    let w = out.weights;
+    println!("{}", out.report.summary());
+    let pruned = perplexity_split(rt, &w, "test", 24)?;
     println!("pruned ppl: {pruned:.3}");
 
     let rank = rt.manifest().consts.lora_rank;
     let mut lora = LoraState::init(&w, rank, 7);
-    let rep = finetune(&rt, &w, &mut lora, steps, 1e-3, 11)?;
+    let rep = finetune(rt, &w, &mut lora, steps, 1e-3, 11)?;
     println!(
         "lora: {} steps in {:.1}s, loss {:.4} -> {:.4}",
         rep.steps,
@@ -43,7 +42,7 @@ fn main() -> Result<()> {
         rep.losses.first().unwrap_or(&f32::NAN),
         rep.losses.last().unwrap_or(&f32::NAN)
     );
-    let tuned = perplexity_with_lora(&rt, &w, &lora, "test", 24)?;
+    let tuned = perplexity_with_lora(rt, &w, &lora, "test", 24)?;
     println!(
         "lora-tuned ppl: {tuned:.3} ({:+.1}% vs pruned)",
         100.0 * (tuned - pruned) / pruned

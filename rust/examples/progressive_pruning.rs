@@ -1,10 +1,14 @@
 //! Figure-3-style progressive pruning: prune two more decoder blocks at a
-//! time and watch perplexity climb — Wanda vs Wanda++, 2:4 vs 4:8.
+//! time and watch perplexity climb — Wanda vs Wanda++, 2:4 vs 4:8. The
+//! whole sweep runs inside one `PruneSession`: every point reuses the
+//! same calibration build (`max_blocks` is not part of the calibration
+//! key).
 //!
 //! `cargo run --release --example progressive_pruning -- [size]`
 
 use anyhow::Result;
-use wandapp::harness::{prune_and_eval, EVAL_BATCHES};
+use wandapp::coordinator::PruneSession;
+use wandapp::harness::{prune_and_eval_in, EVAL_BATCHES};
 use wandapp::pruner::{Method, PruneOptions};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
@@ -20,12 +24,13 @@ fn main() -> Result<()> {
         "{:<10} {:<6} {:>7} {:>10} {:>10}",
         "method", "patt", "blocks", "ppl(test)", "ppl(val)"
     );
+    let mut session = PruneSession::builder(rt).size(&size).build()?;
     for method in [Method::Wanda, Method::WandaPP] {
         for (n, m) in [(2usize, 4usize), (4, 8)] {
             for upto in (0..=n_layers).step_by(2) {
                 let mut opts = PruneOptions::new(method, Pattern::NofM(n, m));
                 opts.max_blocks = Some(upto);
-                let r = prune_and_eval(&rt, &size, &opts, EVAL_BATCHES)?;
+                let r = prune_and_eval_in(&mut session, &opts, EVAL_BATCHES)?;
                 println!(
                     "{:<10} {:<6} {:>7} {:>10.3} {:>10.3}",
                     method.label(),
@@ -37,5 +42,6 @@ fn main() -> Result<()> {
             }
         }
     }
+    println!("calibration builds for the whole sweep: {}", session.calib_builds());
     Ok(())
 }

@@ -1,16 +1,18 @@
 //! Quickstart — the end-to-end driver (DESIGN.md §9).
 //!
 //! Loads the primary model (pretrained weights when `artifacts/` exists,
-//! synthetic weights otherwise), prunes it to 2:4 with Wanda++ (RGS +
-//! regional optimization) and with plain Wanda, and reports held-out
-//! perplexity for both against the dense baseline — the paper's headline
+//! synthetic weights otherwise) into a `PruneSession`, prunes it to 2:4
+//! with Wanda++ (RGS + regional optimization) and with plain Wanda —
+//! both runs sharing one calibration build — and reports held-out
+//! perplexity for both against the dense baseline: the paper's headline
 //! comparison, on a real (small) workload.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
 use anyhow::Result;
+use wandapp::coordinator::PruneSession;
 use wandapp::eval::perplexity_split;
-use wandapp::harness::{dense_ppl, prune_and_eval, EVAL_BATCHES};
+use wandapp::harness::{dense_ppl, prune_and_eval_in, EVAL_BATCHES};
 use wandapp::pruner::{Method, PruneOptions};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
@@ -25,12 +27,12 @@ fn main() -> Result<()> {
         rt.name()
     );
 
-    let (dense_test, dense_val) = dense_ppl(&rt, &size, EVAL_BATCHES)?;
+    let (dense_test, dense_val) = dense_ppl(rt, &size, EVAL_BATCHES)?;
     println!("dense        ppl  test {dense_test:.3}  val {dense_val:.3}");
 
-    let wanda = prune_and_eval(
-        &rt,
-        &size,
+    let mut session = PruneSession::builder(rt).size(&size).build()?;
+    let wanda = prune_and_eval_in(
+        &mut session,
         &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
         EVAL_BATCHES,
     )?;
@@ -39,9 +41,8 @@ fn main() -> Result<()> {
         wanda.ppl_test, wanda.ppl_val, wanda.report.secs
     );
 
-    let wpp = prune_and_eval(
-        &rt,
-        &size,
+    let wpp = prune_and_eval_in(
+        &mut session,
         &PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4)),
         EVAL_BATCHES,
     )?;
@@ -56,10 +57,10 @@ fn main() -> Result<()> {
     let improvement =
         100.0 * (wanda.ppl_test - wpp.ppl_test) / wanda.ppl_test;
     println!("wanda++ improves pruned ppl by {improvement:.1}% over wanda");
+    assert_eq!(session.calib_builds(), 1, "both runs share one build");
 
-    // Sanity: the pruned model is still a usable LM.
-    let w = wandapp::model::load_size(&rt, &size)?;
-    let check = perplexity_split(&rt, &w, "val", 4)?;
+    // Sanity: the session template is still a usable dense LM.
+    let check = perplexity_split(rt, session.weights(), "val", 4)?;
     assert!(check.is_finite());
     Ok(())
 }

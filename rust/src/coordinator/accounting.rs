@@ -5,7 +5,7 @@
 //! full model plus all its gradient accumulators, which is precisely the
 //! asymmetry the paper's regional design removes.
 
-use crate::coordinator::{BlockReport, CalibStream};
+use crate::coordinator::BlockReport;
 use crate::model::{ModelConfig, Weights};
 use crate::pruner::{BlockGrads, PruneOptions};
 use crate::tensor::Tensor;
@@ -45,7 +45,7 @@ pub struct PruneReport {
 impl PruneReport {
     pub fn new(opts: &PruneOptions, cfg: &ModelConfig) -> Self {
         Self {
-            method: opts.method.label().to_string(),
+            method: opts.recipe.label.clone(),
             pattern: opts.pattern.label(),
             model: cfg.name.clone(),
             secs: 0.0,
@@ -55,10 +55,13 @@ impl PruneReport {
         }
     }
 
-    pub fn account_calibration(&mut self, calib: &CalibStream) {
-        // x chunks and (during RO) an equal-sized dense-target set.
-        let xs: usize = calib.xs.iter().map(|t| t.numel() * F32).sum();
-        self.memory.calibration = xs * 2;
+    /// Account the calibration hidden-state chunks (`xs`). RO recipes
+    /// (`with_targets`) additionally retain an equal-sized dense-target
+    /// set; score-only recipes drop it, and their footprint says so.
+    pub fn account_calibration(&mut self, xs: &[Tensor], with_targets: bool) {
+        let bytes: usize = xs.iter().map(|t| t.numel() * F32).sum();
+        self.memory.calibration =
+            if with_targets { bytes * 2 } else { bytes };
     }
 
     pub fn account_block(&mut self, bp: &[Tensor], grads: Option<&BlockGrads>) {

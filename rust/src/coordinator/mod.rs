@@ -1,28 +1,33 @@
 //! The block-streaming pruning coordinator — the paper's Alg. 1 as a
 //! system. Walks the decoder stack one block at a time, holding only that
 //! block's working set (the paper's central memory claim): calibration
-//! hidden states stream through; each block is scored, masked, regionally
-//! optimized (K rounds of prune -> RO), re-pruned, and the *pruned* hidden
-//! states propagate to the next block.
+//! hidden states stream through; each block runs the stage pipeline
+//! (stats → grads → select → ro → apply, see [`stages`]) and the *pruned*
+//! hidden states propagate to the next block.
+//!
+//! Two entry points share the pipeline:
+//! - [`Coordinator::prune`] — one-shot: builds its own calibration
+//!   stream, resolves the recipe against the built-in registry.
+//! - [`PruneSession`] — long-lived: owns the weights, a scorer registry
+//!   (open to out-of-tree [`Scorer`](crate::pruner::Scorer)s) and a
+//!   [`CalibCache`] shared across runs.
 
 mod accounting;
+pub mod session;
+pub mod stages;
 
 pub use accounting::{MemoryBreakdown, PruneReport};
-
-use std::time::Instant;
+pub use session::{
+    CalibCache, CalibKey, PruneOutcome, PruneSession, PruneSessionBuilder,
+};
+pub use stages::{stages_for, BlockStage, StageCtx};
 
 use anyhow::{anyhow, Result};
-use crate::rng::Rng;
 
 use crate::model::{load_corpus, sample_windows, Weights};
-use crate::pruner::{
-    method_score, sparsegpt::sparsegpt_prune, BlockGrads, BlockStats,
-    Method, PruneOptions,
-};
+use crate::pruner::{BlockGrads, PruneOptions, ScorerRegistry};
 use crate::runtime::Backend;
-use crate::sparsity::Pattern;
 use crate::tensor::{Tensor, TensorI32, ValueView};
-use crate::{BLOCK_PARAMS, PRUNABLE};
 
 /// Per-block outcome recorded in the report.
 #[derive(Debug, Clone)]
@@ -48,6 +53,93 @@ pub struct CalibStream {
     pub t: usize,
 }
 
+/// Build a calibration stream: `n_calib` random windows of length
+/// `opts.ctx` from the train split, embedded and chunked by B_CAL.
+pub fn build_calib_stream(
+    rt: &dyn Backend,
+    w: &Weights,
+    opts: &PruneOptions,
+) -> Result<CalibStream> {
+    let b = rt.manifest().consts.b_cal;
+    if opts.n_calib % b != 0 {
+        return Err(anyhow!(
+            "n_calib={} must be a multiple of B_CAL={b}",
+            opts.n_calib
+        ));
+    }
+    let size_info = rt.manifest().size(&w.cfg.name)?;
+    if !size_info.seq_variants.contains(&opts.ctx) {
+        return Err(anyhow!(
+            "ctx={} has no compiled kernels for {} (variants: {:?})",
+            opts.ctx,
+            w.cfg.name,
+            size_info.seq_variants
+        ));
+    }
+    let corpus = load_corpus(rt, "train")?;
+    let (inp, tgt) = sample_windows(&corpus, opts.n_calib, opts.ctx, opts.seed);
+    let mut xs = Vec::new();
+    let mut tokens = Vec::new();
+    let mut targets = Vec::new();
+    for c in 0..opts.n_calib / b {
+        let lo = c * b * opts.ctx;
+        let hi = lo + b * opts.ctx;
+        let tok = TensorI32::new(vec![b, opts.ctx], inp.data[lo..hi].to_vec());
+        let tg = TensorI32::new(vec![b, opts.ctx], tgt.data[lo..hi].to_vec());
+        xs.push(Coordinator::embed_native(w, &tok));
+        tokens.push(tok);
+        targets.push(tg);
+    }
+    Ok(CalibStream { xs, tokens, targets, n: opts.n_calib, t: opts.ctx })
+}
+
+/// GBLM precomputation: full-model backward over the calibration set,
+/// returning per-block gradient accumulators. Only available for the
+/// size with a compiled `full_grad` artifact (the paper's GBLM column
+/// is likewise missing for its largest models).
+pub fn gblm_full_grads(
+    rt: &dyn Backend,
+    w: &Weights,
+    calib: &CalibStream,
+) -> Result<Vec<BlockGrads>> {
+    let size = &w.cfg.name;
+    let key = format!("{size}_full_grad");
+    if !rt.supports(&key) {
+        return Err(anyhow!(
+            "GBLM needs the full-model gradient kernel, which is only \
+             available for the primary size (full-model BP at scale is \
+             exactly what the paper avoids)"
+        ));
+    }
+    let l = w.cfg.n_layers;
+    let mut acc: Option<Vec<Tensor>> = None;
+    for (tok, tgt) in calib.tokens.iter().zip(&calib.targets) {
+        let mut inputs: Vec<ValueView> = vec![tok.into(), tgt.into()];
+        inputs.push(w.get("embed").into());
+        for i in 0..l {
+            for p in w.block(i) {
+                inputs.push(p.into());
+            }
+        }
+        inputs.push(w.get("ln_f").into());
+        inputs.push(w.get("head").into());
+        let out = rt.exec_fv(&key, &inputs)?;
+        match &mut acc {
+            None => acc = Some(out),
+            Some(a) => {
+                for (ai, oi) in a.iter_mut().zip(&out) {
+                    ai.add_assign(oi);
+                }
+            }
+        }
+    }
+    let flat = acc.expect("no calibration chunks");
+    Ok(flat
+        .chunks(7)
+        .map(|c| BlockGrads { sq: c.to_vec(), samples: calib.n })
+        .collect())
+}
+
 impl<'rt> Coordinator<'rt> {
     pub fn new(rt: &'rt dyn Backend) -> Self {
         Self { rt }
@@ -67,470 +159,56 @@ impl<'rt> Coordinator<'rt> {
         Tensor::new(shape, out)
     }
 
-    /// Build the calibration stream: `n_calib` random windows of length
-    /// `ctx` from the train split, embedded and chunked by B_CAL.
+    /// Build the calibration stream (see [`build_calib_stream`]).
     pub fn build_calib(
         &self,
         w: &Weights,
         opts: &PruneOptions,
     ) -> Result<CalibStream> {
-        let b = self.rt.manifest().consts.b_cal;
-        if opts.n_calib % b != 0 {
-            return Err(anyhow!(
-                "n_calib={} must be a multiple of B_CAL={b}",
-                opts.n_calib
-            ));
-        }
-        let size_info = self.rt.manifest().size(&w.cfg.name)?;
-        if !size_info.seq_variants.contains(&opts.ctx) {
-            return Err(anyhow!(
-                "ctx={} has no compiled kernels for {} (variants: {:?})",
-                opts.ctx,
-                w.cfg.name,
-                size_info.seq_variants
-            ));
-        }
-        let corpus = load_corpus(self.rt, "train")?;
-        let (inp, tgt) = sample_windows(&corpus, opts.n_calib, opts.ctx, opts.seed);
-        let mut xs = Vec::new();
-        let mut tokens = Vec::new();
-        let mut targets = Vec::new();
-        for c in 0..opts.n_calib / b {
-            let lo = c * b * opts.ctx;
-            let hi = lo + b * opts.ctx;
-            let tok = TensorI32::new(vec![b, opts.ctx], inp.data[lo..hi].to_vec());
-            let tg = TensorI32::new(vec![b, opts.ctx], tgt.data[lo..hi].to_vec());
-            xs.push(Self::embed_native(w, &tok));
-            tokens.push(tok);
-            targets.push(tg);
-        }
-        Ok(CalibStream { xs, tokens, targets, n: opts.n_calib, t: opts.ctx })
+        build_calib_stream(self.rt, w, opts)
     }
 
-    fn block_inputs<'a>(x: &'a Tensor, bp: &'a [Tensor]) -> Vec<ValueView<'a>> {
-        let mut v: Vec<ValueView> = Vec::with_capacity(10);
-        v.push(x.into());
-        for p in bp {
-            v.push(p.into());
-        }
-        v
-    }
-
-    /// Forward all chunks through one block, returning outputs.
-    fn fwd_pass(
-        &self,
-        size: &str,
-        t: usize,
-        bp: &[Tensor],
-        xs: &[Tensor],
-    ) -> Result<Vec<Tensor>> {
-        let key = format!("{size}_block_fwd_t{t}");
-        xs.iter()
-            .map(|x| {
-                Ok(self.rt.exec_fv(&key, &Self::block_inputs(x, bp))?.remove(0))
-            })
-            .collect()
-    }
-
-    /// Stats pass: forward + accumulate the four input-site squared norms.
-    fn stats_pass(
-        &self,
-        size: &str,
-        t: usize,
-        d: usize,
-        ffn: usize,
-        bp: &[Tensor],
-        xs: &[Tensor],
-    ) -> Result<(Vec<Tensor>, BlockStats)> {
-        let key = format!("{size}_block_stats_t{t}");
-        let mut stats = BlockStats::zeros(d, ffn);
-        let mut ys = Vec::with_capacity(xs.len());
-        for x in xs {
-            let mut out = self.rt.exec_fv(&key, &Self::block_inputs(x, bp))?;
-            // outputs: y, sq_qkv, sq_o, sq_mlp, sq_down
-            let y = out.remove(0);
-            for site in 0..4 {
-                stats.sq[site].add_assign(&out[site]);
-            }
-            stats.positions += x.shape[0] * x.shape[1];
-            ys.push(y);
-        }
-        Ok((ys, stats))
-    }
-
-    /// Regional-gradient pass (paper Eq. 3): accumulate squared per-sample
-    /// gradients of ||f(x)||_2 over all calibration chunks.
-    fn rgs_pass(
-        &self,
-        size: &str,
-        t: usize,
-        bp: &[Tensor],
-        xs: &[Tensor],
-        n: usize,
-    ) -> Result<BlockGrads> {
-        let key = format!("{size}_rgs_grad_t{t}");
-        let mut sq: Option<Vec<Tensor>> = None;
-        for x in xs {
-            let out = self.rt.exec_fv(&key, &Self::block_inputs(x, bp))?;
-            match &mut sq {
-                None => sq = Some(out),
-                Some(acc) => {
-                    for (a, o) in acc.iter_mut().zip(&out) {
-                        a.add_assign(o);
-                    }
-                }
-            }
-        }
-        Ok(BlockGrads { sq: sq.expect("no calibration chunks"), samples: n })
-    }
-
-    /// Hessian pass for SparseGPT: accumulate the four Gram matrices.
-    fn hessian_pass(
-        &self,
-        size: &str,
-        t: usize,
-        bp: &[Tensor],
-        xs: &[Tensor],
-    ) -> Result<[Tensor; 4]> {
-        let key = format!("{size}_block_hessian_t{t}");
-        let mut acc: Option<[Tensor; 4]> = None;
-        for x in xs {
-            let mut out = self.rt.exec_fv(&key, &Self::block_inputs(x, bp))?;
-            out.remove(0); // y unused here (stats pass propagates)
-            let arr: [Tensor; 4] = [
-                out.remove(0),
-                out.remove(0),
-                out.remove(0),
-                out.remove(0),
-            ];
-            match &mut acc {
-                None => acc = Some(arr),
-                Some(a) => {
-                    for (ai, oi) in a.iter_mut().zip(arr.iter()) {
-                        ai.add_assign(oi);
-                    }
-                }
-            }
-        }
-        Ok(acc.expect("no calibration chunks"))
-    }
-
-    /// GBLM precomputation: full-model backward over the calibration set,
-    /// returning per-block gradient accumulators. Only available for the
-    /// size with a compiled `full_grad` artifact (the paper's GBLM column
-    /// is likewise missing for its largest models).
+    /// GBLM full-model gradients (see [`gblm_full_grads`]).
     pub fn gblm_grads(
         &self,
         w: &Weights,
         calib: &CalibStream,
     ) -> Result<Vec<BlockGrads>> {
-        let size = &w.cfg.name;
-        let key = format!("{size}_full_grad");
-        if !self.rt.supports(&key) {
-            return Err(anyhow!(
-                "GBLM needs the full-model gradient kernel, which is only \
-                 available for the primary size (full-model BP at scale is \
-                 exactly what the paper avoids)"
-            ));
-        }
-        let l = w.cfg.n_layers;
-        let mut acc: Option<Vec<Tensor>> = None;
-        for (tok, tgt) in calib.tokens.iter().zip(&calib.targets) {
-            let mut inputs: Vec<ValueView> = vec![tok.into(), tgt.into()];
-            inputs.push(w.get("embed").into());
-            for i in 0..l {
-                for p in w.block(i) {
-                    inputs.push(p.into());
-                }
-            }
-            inputs.push(w.get("ln_f").into());
-            inputs.push(w.get("head").into());
-            let out = self.rt.exec_fv(&key, &inputs)?;
-            match &mut acc {
-                None => acc = Some(out),
-                Some(a) => {
-                    for (ai, oi) in a.iter_mut().zip(&out) {
-                        ai.add_assign(oi);
-                    }
-                }
-            }
-        }
-        let flat = acc.expect("no calibration chunks");
-        Ok(flat
-            .chunks(7)
-            .map(|c| BlockGrads { sq: c.to_vec(), samples: calib.n })
-            .collect())
+        gblm_full_grads(self.rt, w, calib)
     }
 
-    /// Score all seven prunable weights of a block and select masks.
-    #[allow(clippy::too_many_arguments)]
-    fn select_masks(
-        &self,
-        size: &str,
-        method: Method,
-        pattern: Pattern,
-        alpha: f32,
-        bp: &[Tensor],
-        masks_now: Option<&[Tensor]>,
-        stats: &BlockStats,
-        grads: Option<&BlockGrads>,
-    ) -> Result<Vec<Tensor>> {
-        let mut masks = Vec::with_capacity(PRUNABLE.len());
-        for (pi, name) in PRUNABLE.iter().enumerate() {
-            let w_idx = BLOCK_PARAMS.iter().position(|p| p == name).unwrap();
-            // Score on the *effective* (masked) weights when a mask is
-            // already live — matches the pseudo-code's re-fetch semantics.
-            let w_eff = match masks_now {
-                Some(ms) => bp[w_idx].hadamard(&ms[pi]),
-                None => bp[w_idx].clone(),
-            };
-            let scores = method_score(
-                self.rt, size, method, name, pi, &w_eff, stats, grads, alpha,
-            )?;
-            masks.push(crate::pruner::mask_from_scores(
-                self.rt, size, name, &scores, pattern,
-            )?);
-        }
-        Ok(masks)
-    }
-
-    /// One RO round (paper Eq. 5): select M samples, run the fused
-    /// masked-RMSprop step artifact, update the live block params.
-    #[allow(clippy::too_many_arguments)]
-    fn ro_round(
-        &self,
-        size: &str,
-        t: usize,
-        d: usize,
-        bp: &mut Vec<Tensor>,
-        masks: &[Tensor],
-        vstate: &mut Vec<Tensor>,
-        calib: &CalibStream,
-        dense_ys: &[Tensor],
-        lr: f32,
-        rng: &mut Rng,
-    ) -> Result<f32> {
-        let m_ro = self.rt.manifest().consts.m_ro;
-        let b = self.rt.manifest().consts.b_cal;
-        let idx = rng.sample_indices(calib.n, m_ro);
-
-        let row = t * d;
-        let mut x = Vec::with_capacity(m_ro * row);
-        let mut y = Vec::with_capacity(m_ro * row);
-        for &i in &idx {
-            let (c, r) = (i / b, i % b);
-            x.extend_from_slice(&calib.xs[c].data[r * row..(r + 1) * row]);
-            y.extend_from_slice(&dense_ys[c].data[r * row..(r + 1) * row]);
-        }
-        let x = Tensor::new(vec![m_ro, t, d], x);
-        let y = Tensor::new(vec![m_ro, t, d], y);
-        let lr_t = Tensor::new(vec![1], vec![lr]);
-
-        let mut inputs: Vec<ValueView> = vec![(&x).into(), (&y).into()];
-        for p in bp.iter() {
-            inputs.push(p.into());
-        }
-        for m in masks {
-            inputs.push(m.into());
-        }
-        for v in vstate.iter() {
-            inputs.push(v.into());
-        }
-        inputs.push((&lr_t).into());
-
-        let key = format!("{size}_ro_step_t{t}");
-        let mut out = self.rt.exec_fv(&key, &inputs)?;
-        let loss = out.pop().expect("loss output").item();
-        let new_v = out.split_off(9);
-        *bp = out;
-        *vstate = new_v;
-        Ok(loss)
-    }
-
-    /// Prune `w` in place per `opts`. Returns the run report (time, peak
-    /// memory, per-block RO trajectories, achieved sparsity).
+    /// Prune `w` in place per `opts`, one-shot: the recipe's scorer is
+    /// resolved against the built-in registry and a fresh calibration
+    /// stream is built. For sweeps over several methods, prefer
+    /// [`PruneSession`] — it shares one calibration build across runs.
+    /// Returns the run report (time, peak memory, per-block RO
+    /// trajectories, achieved sparsity).
     pub fn prune(
         &self,
         w: &mut Weights,
         opts: &PruneOptions,
     ) -> Result<PruneReport> {
-        let t0 = Instant::now();
-        let size = w.cfg.name.clone();
-        let (d, ffn, l) = (w.cfg.d, w.cfg.ffn, w.cfg.n_layers);
-        let t = opts.ctx;
-        let mut rng = Rng::seed_from_u64(opts.seed ^ 0x517cc1b727220a95);
-
-        let calib = self.build_calib(w, opts)?;
-        let mut report = PruneReport::new(opts, &w.cfg);
-        report.account_calibration(&calib);
-
-        // GBLM: one full-model backward pass over the calibration set.
-        let gblm = if opts.method == Method::Gblm {
-            let g = self.gblm_grads(w, &calib)?;
-            report.account_full_model(w);
-            Some(g)
+        let registry = ScorerRegistry::with_builtins();
+        let scorer = registry.get(&opts.recipe.scorer)?;
+        let mut calib = build_calib_stream(self.rt, w, opts)?;
+        let full = if scorer.signals().full_grads {
+            Some(gblm_full_grads(self.rt, w, &calib)?)
         } else {
             None
         };
-
-        let mut xs = calib.xs.clone();
-        let calib_stream = CalibStream {
-            xs: Vec::new(), // tokens only; xs tracked separately
-            tokens: calib.tokens,
-            targets: calib.targets,
-            n: calib.n,
-            t: calib.t,
-        };
-
-        let limit = opts.max_blocks.unwrap_or(l).min(l);
-        for li in 0..limit {
-            let mut bp: Vec<Tensor> =
-                w.block(li).into_iter().cloned().collect();
-
-            // Dense targets + calibration statistics from incoming stream.
-            let (dense_ys, mut stats) =
-                self.stats_pass(&size, t, d, ffn, &bp, &xs)?;
-
-            // Regional gradients: computed ONCE per block on the dense
-            // weights and reused across RO rounds (paper §4.1).
-            let grads: Option<BlockGrads> = match opts.method {
-                Method::WandaPP | Method::WandaPPRgs => {
-                    Some(self.rgs_pass(&size, t, &bp, &xs, calib_stream.n)?)
-                }
-                Method::Gblm => Some(gblm.as_ref().unwrap()[li].clone()),
-                _ => None,
-            };
-
-            let mut block_rep = BlockReport {
-                block: li,
-                ro_losses: Vec::new(),
-                sparsity: 0.0,
-            };
-
-            if opts.method == Method::SparseGpt {
-                let hessians = self.hessian_pass(&size, t, &bp, &xs)?;
-                report.account_sparsegpt(d, ffn);
-                for name in PRUNABLE {
-                    let site = crate::stat_site(name);
-                    let w_idx =
-                        BLOCK_PARAMS.iter().position(|p| *p == name).unwrap();
-                    sparsegpt_prune(
-                        &mut bp[w_idx],
-                        &hessians[site],
-                        opts.pattern,
-                    );
-                }
-            } else {
-                // Initial mask selection (Alg. 1 step 5, k=0).
-                let mut masks = self.select_masks(
-                    &size,
-                    opts.method,
-                    opts.pattern,
-                    opts.alpha,
-                    &bp,
-                    None,
-                    &stats,
-                    grads.as_ref(),
-                )?;
-
-                if opts.method.uses_ro() {
-                    let mut vstate: Vec<Tensor> =
-                        bp.iter().map(|p| Tensor::zeros(&p.shape)).collect();
-                    report.account_ro(&bp);
-                    for k in 0..opts.k_iters {
-                        if k > 0 {
-                            // Re-fetch signals on the *pruned* weights and
-                            // re-infer the mask (Alg. 1 step 5, k>0).
-                            let masked: Vec<Tensor> = BLOCK_PARAMS
-                                .iter()
-                                .enumerate()
-                                .map(|(i, p)| {
-                                    match PRUNABLE
-                                        .iter()
-                                        .position(|q| q == p)
-                                    {
-                                        Some(pi) => {
-                                            bp[i].hadamard(&masks[pi])
-                                        }
-                                        None => bp[i].clone(),
-                                    }
-                                })
-                                .collect();
-                            let (_, st) = self
-                                .stats_pass(&size, t, d, ffn, &masked, &xs)?;
-                            stats = st;
-                            masks = self.select_masks(
-                                &size,
-                                opts.method,
-                                opts.pattern,
-                                opts.alpha,
-                                &bp,
-                                None,
-                                &stats,
-                                grads.as_ref(),
-                            )?;
-                        }
-                        let loss = self.ro_round(
-                            &size, t, d, &mut bp, &masks, &mut vstate,
-                            &CalibStream {
-                                xs: xs.clone(),
-                                tokens: Vec::new(),
-                                targets: Vec::new(),
-                                n: calib_stream.n,
-                                t,
-                            },
-                            &dense_ys,
-                            opts.ro_lr,
-                            &mut rng,
-                        )?;
-                        block_rep.ro_losses.push(loss);
-                    }
-                    // Final re-prune to restore sparsity (Alg. 1 step 11).
-                    let (_, st) =
-                        self.stats_pass(&size, t, d, ffn, &bp, &xs)?;
-                    stats = st;
-                    masks = self.select_masks(
-                        &size,
-                        opts.method,
-                        opts.pattern,
-                        opts.alpha,
-                        &bp,
-                        None,
-                        &stats,
-                        grads.as_ref(),
-                    )?;
-                }
-
-                // Apply the final masks destructively.
-                for (pi, name) in PRUNABLE.iter().enumerate() {
-                    let w_idx =
-                        BLOCK_PARAMS.iter().position(|p| p == name).unwrap();
-                    bp[w_idx] = bp[w_idx].hadamard(&masks[pi]);
-                }
-            }
-
-            // Achieved sparsity of this block.
-            let (mut zeros, mut total) = (0usize, 0usize);
-            for name in PRUNABLE {
-                let w_idx =
-                    BLOCK_PARAMS.iter().position(|p| *p == name).unwrap();
-                zeros +=
-                    bp[w_idx].data.iter().filter(|v| **v == 0.0).count();
-                total += bp[w_idx].numel();
-            }
-            block_rep.sparsity = zeros as f64 / total as f64;
-
-            // Write back and propagate the PRUNED stream.
-            for (i, name) in BLOCK_PARAMS.iter().enumerate() {
-                w.set_block(li, name, bp[i].clone());
-            }
-            report.account_block(&bp, grads.as_ref());
-            xs = self.fwd_pass(&size, t, &bp, &xs)?;
-            report.blocks.push(block_rep);
-        }
-
-        report.secs = t0.elapsed().as_secs_f64();
-        report.final_sparsity = w.prunable_sparsity();
-        Ok(report)
+        // Move the embedded stream out so only the pipeline's propagated
+        // copy is resident (tokens/targets were only needed for GBLM).
+        let xs0 = std::mem::take(&mut calib.xs);
+        let n_calib = calib.n;
+        drop(calib);
+        stages::run_pipeline(
+            self.rt,
+            w,
+            opts,
+            scorer.as_ref(),
+            xs0,
+            n_calib,
+            full.as_deref(),
+        )
     }
 }

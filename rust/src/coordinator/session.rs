@@ -1,0 +1,338 @@
+//! [`PruneSession`]: the long-lived entry point of the pruning API. A
+//! session owns the backend handle, a pristine copy of the model weights,
+//! a [`ScorerRegistry`], and a [`CalibCache`] — so a sweep over many
+//! methods/recipes pays for **one** calibration build (windows sampled,
+//! embedded, chunked; plus the GBLM full-model backward when requested)
+//! instead of one per run. Every [`PruneSession::run`] prunes a fresh
+//! clone of the session weights and returns it with the run report.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::model::{load_size, Weights};
+use crate::pruner::{BlockGrads, PruneOptions, Scorer, ScorerRegistry};
+use crate::runtime::Backend;
+
+use super::stages::run_pipeline;
+use super::{build_calib_stream, gblm_full_grads, CalibStream, PruneReport};
+
+/// What a calibration build depends on: any two runs that agree on these
+/// fields share the same stream (and the same GBLM gradients). The model
+/// name is part of the key because the stream holds *embedded* windows —
+/// a cache shared across models must never hand one model's embeddings
+/// to another.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct CalibKey {
+    pub model: String,
+    pub n_calib: usize,
+    pub ctx: usize,
+    pub seed: u64,
+}
+
+impl CalibKey {
+    pub fn of(w: &Weights, opts: &PruneOptions) -> Self {
+        Self {
+            model: w.cfg.name.clone(),
+            n_calib: opts.n_calib,
+            ctx: opts.ctx,
+            seed: opts.seed,
+        }
+    }
+}
+
+/// Memoized calibration artifacts, keyed by [`CalibKey`]: the embedded
+/// window stream and (lazily) the GBLM full-model gradient accumulators.
+/// Filling the cache is crate-internal ([`PruneSession`] does it with
+/// its fixed weight template); the key carries only the model *name*, so
+/// an open fill API taking arbitrary weights could silently mix two
+/// same-named checkpoints' embeddings.
+#[derive(Default)]
+pub struct CalibCache {
+    streams: HashMap<CalibKey, Arc<CalibStream>>,
+    full_grads: HashMap<CalibKey, Arc<Vec<BlockGrads>>>,
+    builds: usize,
+}
+
+impl CalibCache {
+    /// How many calibration streams were actually built (cache misses).
+    pub fn builds(&self) -> usize {
+        self.builds
+    }
+
+    /// The calibration stream for `opts`, building it on first use.
+    pub(crate) fn stream(
+        &mut self,
+        rt: &dyn Backend,
+        w: &Weights,
+        opts: &PruneOptions,
+    ) -> Result<Arc<CalibStream>> {
+        let key = CalibKey::of(w, opts);
+        if let Some(s) = self.streams.get(&key) {
+            return Ok(Arc::clone(s));
+        }
+        let stream = Arc::new(build_calib_stream(rt, w, opts)?);
+        self.builds += 1;
+        self.streams.insert(key, Arc::clone(&stream));
+        Ok(stream)
+    }
+
+    /// The GBLM full-model gradient accumulators for `opts`, computed on
+    /// first use from the (dense) weights `w` and then shared.
+    pub(crate) fn full_grads(
+        &mut self,
+        rt: &dyn Backend,
+        w: &Weights,
+        opts: &PruneOptions,
+        calib: &CalibStream,
+    ) -> Result<Arc<Vec<BlockGrads>>> {
+        let key = CalibKey::of(w, opts);
+        if let Some(g) = self.full_grads.get(&key) {
+            return Ok(Arc::clone(g));
+        }
+        let grads = Arc::new(gblm_full_grads(rt, w, calib)?);
+        self.full_grads.insert(key, Arc::clone(&grads));
+        Ok(grads)
+    }
+
+    /// Drop every cached stream and gradient set (e.g. between sweep
+    /// phases whose calibration settings never repeat).
+    pub fn clear(&mut self) {
+        self.streams.clear();
+        self.full_grads.clear();
+    }
+}
+
+/// The outcome of one [`PruneSession::run`]: the pruned weights and the
+/// run report (time, memory, per-block RO trajectories, sparsity).
+pub struct PruneOutcome {
+    pub weights: Weights,
+    pub report: PruneReport,
+}
+
+/// Builder for [`PruneSession`] — see [`PruneSession::builder`].
+pub struct PruneSessionBuilder<'rt> {
+    rt: &'rt dyn Backend,
+    size: Option<String>,
+    weights: Option<Weights>,
+    registry: ScorerRegistry,
+}
+
+impl<'rt> PruneSessionBuilder<'rt> {
+    /// Load the session weights for a model-size name (pretrained when
+    /// artifacts exist, synthetic otherwise).
+    pub fn size(mut self, name: &str) -> Self {
+        self.size = Some(name.to_string());
+        self
+    }
+
+    /// Use explicit weights instead of loading a size.
+    pub fn weights(mut self, w: Weights) -> Self {
+        self.weights = Some(w);
+        self
+    }
+
+    /// Register an extra scorer on top of the built-ins.
+    pub fn scorer(mut self, scorer: Arc<dyn Scorer>) -> Self {
+        self.registry.register(scorer);
+        self
+    }
+
+    /// Replace the whole registry (e.g. [`ScorerRegistry::empty`] for a
+    /// fully closed deployment).
+    pub fn registry(mut self, registry: ScorerRegistry) -> Self {
+        self.registry = registry;
+        self
+    }
+
+    pub fn build(self) -> Result<PruneSession<'rt>> {
+        let weights = match (self.weights, self.size) {
+            (Some(w), _) => w,
+            (None, Some(size)) => load_size(self.rt, &size)?,
+            (None, None) => {
+                let primary = self.rt.manifest().consts.primary.clone();
+                load_size(self.rt, &primary)?
+            }
+        };
+        Ok(PruneSession {
+            rt: self.rt,
+            template: weights,
+            registry: self.registry,
+            cache: CalibCache::default(),
+        })
+    }
+}
+
+/// A pruning session: backend + pristine weights + scorer registry +
+/// shared calibration cache. See the module docs.
+///
+/// ```
+/// use wandapp::pruner::{Method, PruneOptions};
+/// use wandapp::sparsity::Pattern;
+/// use wandapp::coordinator::PruneSession;
+///
+/// let rt = wandapp::runtime::open(
+///     std::env::temp_dir().join("wandapp_session_doc"),
+///     "native",
+/// )
+/// .unwrap();
+/// let mut session =
+///     PruneSession::builder(rt.as_ref()).size("s0").build().unwrap();
+///
+/// let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+/// opts.n_calib = 8;
+/// opts.ctx = 8;
+/// let wanda = session.run(&opts).unwrap();
+/// assert!((wanda.report.final_sparsity - 0.5).abs() < 1e-6);
+///
+/// // A second method reuses the same calibration build.
+/// let magnitude =
+///     session.run(&PruneOptions { recipe: Method::Magnitude.recipe(), ..opts }).unwrap();
+/// assert!((magnitude.report.final_sparsity - 0.5).abs() < 1e-6);
+/// assert_eq!(session.calib_builds(), 1);
+/// ```
+pub struct PruneSession<'rt> {
+    rt: &'rt dyn Backend,
+    template: Weights,
+    registry: ScorerRegistry,
+    cache: CalibCache,
+}
+
+impl<'rt> PruneSession<'rt> {
+    pub fn builder(rt: &'rt dyn Backend) -> PruneSessionBuilder<'rt> {
+        PruneSessionBuilder {
+            rt,
+            size: None,
+            weights: None,
+            registry: ScorerRegistry::with_builtins(),
+        }
+    }
+
+    pub fn rt(&self) -> &'rt dyn Backend {
+        self.rt
+    }
+
+    /// The pristine (dense) session weights every run starts from.
+    pub fn weights(&self) -> &Weights {
+        &self.template
+    }
+
+    pub fn registry(&self) -> &ScorerRegistry {
+        &self.registry
+    }
+
+    /// Register (or override) a scorer mid-session.
+    pub fn register_scorer(&mut self, scorer: Arc<dyn Scorer>) {
+        self.registry.register(scorer);
+    }
+
+    /// How many calibration builds this session has paid for.
+    pub fn calib_builds(&self) -> usize {
+        self.cache.builds()
+    }
+
+    /// Drop cached calibration artifacts (frees memory in long sweeps
+    /// whose calibration settings never repeat).
+    pub fn clear_calib(&mut self) {
+        self.cache.clear();
+    }
+
+    /// Prune a fresh clone of the session weights under `opts`, resolving
+    /// `opts.recipe.scorer` in the session registry and reusing any
+    /// cached calibration artifacts.
+    pub fn run(&mut self, opts: &PruneOptions) -> Result<PruneOutcome> {
+        let scorer = self.registry.get(&opts.recipe.scorer)?;
+        let calib = self.cache.stream(self.rt, &self.template, opts)?;
+        let full = if scorer.signals().full_grads {
+            Some(self.cache.full_grads(
+                self.rt,
+                &self.template,
+                opts,
+                &calib,
+            )?)
+        } else {
+            None
+        };
+        let mut weights = self.template.clone();
+        let report = run_pipeline(
+            self.rt,
+            &mut weights,
+            opts,
+            scorer.as_ref(),
+            // The cache keeps the stream for later runs; the pipeline
+            // propagates (and consumes) its own copy.
+            calib.xs.clone(),
+            calib.n,
+            full.as_deref().map(|v| v.as_slice()),
+        )?;
+        Ok(PruneOutcome { weights, report })
+    }
+
+    /// Convenience: run one of the paper methods.
+    pub fn run_method(
+        &mut self,
+        method: crate::pruner::Method,
+        opts: &PruneOptions,
+    ) -> Result<PruneOutcome> {
+        let mut opts = opts.clone();
+        opts.recipe = method.recipe();
+        self.run(&opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruner::Method;
+    use crate::sparsity::Pattern;
+
+    fn rt() -> crate::runtime::NativeBackend {
+        crate::runtime::NativeBackend::new(
+            std::env::temp_dir().join("wandapp_session_test"),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn calib_cache_is_keyed_by_settings() {
+        let rt = rt();
+        let mut session =
+            PruneSession::builder(&rt).size("s0").build().unwrap();
+        let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+        opts.n_calib = 8;
+        opts.ctx = 8;
+        session.run(&opts).unwrap();
+        session.run(&opts).unwrap();
+        assert_eq!(session.calib_builds(), 1, "same key must share");
+        opts.seed = 9;
+        session.run(&opts).unwrap();
+        assert_eq!(session.calib_builds(), 2, "new seed is a new key");
+        session.clear_calib();
+        session.run(&opts).unwrap();
+        assert_eq!(session.calib_builds(), 3, "clear drops the cache");
+    }
+
+    #[test]
+    fn builder_defaults_to_the_primary_size() {
+        let rt = rt();
+        let session = PruneSession::builder(&rt).build().unwrap();
+        assert_eq!(
+            session.weights().cfg.name,
+            rt.manifest().consts.primary
+        );
+    }
+
+    #[test]
+    fn unknown_scorer_is_a_clean_error() {
+        let rt = rt();
+        let mut session =
+            PruneSession::builder(&rt).size("s0").build().unwrap();
+        let opts = PruneOptions::for_recipe(
+            crate::pruner::Recipe::score_only("definitely-not-registered"),
+            Pattern::NofM(2, 4),
+        );
+        let err = session.run(&opts).unwrap_err().to_string();
+        assert!(err.contains("unknown scorer"), "{err}");
+    }
+}

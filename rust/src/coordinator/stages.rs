@@ -1,0 +1,576 @@
+//! The block pipeline as explicit stages. `Coordinator::prune` used to be
+//! one ~180-line monolith; it is now a sequence of [`BlockStage`]s —
+//! stats → grads → select → ro → apply (or stats → obs for SparseGPT) —
+//! each independently testable, driven per block by the crate-internal
+//! `run_pipeline` driver.
+//! Which stages run is decided by the [`Recipe`](crate::pruner::Recipe)
+//! and by the active scorer's [`Signals`](crate::pruner::Signals): a
+//! scorer that never reads gradients never pays for a gradient pass.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::Weights;
+use crate::pruner::{
+    mask_from_scores, sparsegpt::sparsegpt_prune, BlockGrads, BlockStats,
+    PruneOptions, ScoreCtx, Scorer,
+};
+use crate::rng::Rng;
+use crate::runtime::Backend;
+use crate::tensor::{Tensor, ValueView};
+use crate::{
+    stat_site, BLOCK_PARAMS, PARAM_PRUNABLE_IDX, PRUNABLE,
+    PRUNABLE_PARAM_IDX,
+};
+
+use super::{BlockReport, PruneReport};
+
+/// Everything one block's trip through the pipeline can read or mutate.
+/// Stages communicate exclusively through this context, so any stage can
+/// be run (or re-run — the RO stage re-invokes stats + select between
+/// rounds) in isolation.
+pub struct StageCtx<'a> {
+    pub rt: &'a dyn Backend,
+    /// Model-size name (selects kernels).
+    pub size: &'a str,
+    /// Decoder-block index.
+    pub block: usize,
+    /// Calibration context length.
+    pub t: usize,
+    pub d: usize,
+    pub ffn: usize,
+    pub opts: &'a PruneOptions,
+    /// The active scorer resolved from the registry.
+    pub scorer: &'a dyn Scorer,
+    /// Incoming calibration chunks (the pruned stream, borrowed — never
+    /// cloned per stage or per RO round).
+    pub xs: &'a [Tensor],
+    /// Total calibration samples.
+    pub n_calib: usize,
+    /// Live block parameters, `BLOCK_PARAMS` order.
+    pub bp: Vec<Tensor>,
+    /// Dense block outputs per chunk (the RO regression target).
+    /// Populated by the stats stage only for RO recipes; empty otherwise.
+    pub dense_ys: Vec<Tensor>,
+    pub stats: Option<BlockStats>,
+    pub grads: Option<BlockGrads>,
+    pub masks: Option<Vec<Tensor>>,
+    /// Precomputed full-model gradients for this block (GBLM), if any.
+    pub full_grads: Option<&'a BlockGrads>,
+    pub rng: &'a mut Rng,
+    pub report: &'a mut PruneReport,
+    pub block_report: BlockReport,
+}
+
+/// One step of the per-block pipeline.
+pub trait BlockStage {
+    /// Stage name, used in error contexts and logs.
+    fn name(&self) -> &'static str;
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()>;
+}
+
+/// Forward the calibration chunks, accumulating the four input-site
+/// squared norms when the scorer's signals request statistics (plus
+/// first moments when `Signals::moments` is set), and retaining the
+/// dense outputs as the regression target when the recipe runs RO. A
+/// statistics-free score-only recipe skips the pass entirely.
+pub struct StatsStage;
+
+/// Gather gradient magnitudes: the regional per-block pass (paper Eq. 3)
+/// or the precomputed full-model accumulators (GBLM). Skipped entirely
+/// when the scorer's signals don't request gradients.
+pub struct GradsStage;
+
+/// Score every prunable weight with the active scorer and select masks.
+pub struct SelectStage;
+
+/// K rounds of regional optimization (paper Eq. 5), re-fetching signals
+/// and re-selecting masks between rounds and once more afterwards
+/// (Alg. 1 steps 5–11).
+pub struct RoStage;
+
+/// Apply the selected masks destructively to the live parameters.
+pub struct ApplyStage;
+
+/// The SparseGPT OBS sweep: layer-wise Hessians + weight updates, in
+/// place of score → select → apply.
+pub struct ObsStage;
+
+/// The stage sequence for a recipe.
+pub fn stages_for(opts: &PruneOptions) -> Vec<Box<dyn BlockStage>> {
+    if opts.recipe.obs {
+        // The OBS sweep gathers its own Hessians (with their own
+        // forward); a stats pass would be computed and discarded.
+        let obs: Vec<Box<dyn BlockStage>> = vec![Box::new(ObsStage)];
+        return obs;
+    }
+    let mut stages: Vec<Box<dyn BlockStage>> = vec![
+        Box::new(StatsStage),
+        Box::new(GradsStage),
+        Box::new(SelectStage),
+    ];
+    if opts.recipe.ro {
+        stages.push(Box::new(RoStage));
+    }
+    stages.push(Box::new(ApplyStage));
+    stages
+}
+
+impl BlockStage for StatsStage {
+    fn name(&self) -> &'static str {
+        "stats"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        let sig = cx.scorer.signals();
+        // Dense targets are only the RO stage's regression target; for
+        // score-only recipes retaining them would hold the full
+        // n_calib x t x d output set per block for nothing.
+        let need_targets = cx.opts.recipe.ro;
+        if sig.stats || sig.moments {
+            let (ys, stats) = collect_stats(
+                cx.rt, cx.size, cx.t, cx.d, cx.ffn, &cx.bp, cx.xs,
+                sig.moments,
+            )?;
+            if need_targets {
+                cx.dense_ys = ys;
+            }
+            cx.stats = Some(stats);
+        } else if need_targets {
+            // Statistics-free scorer: only the dense targets are needed.
+            cx.dense_ys = fwd_pass(cx.rt, cx.size, cx.t, &cx.bp, cx.xs)?;
+        }
+        Ok(())
+    }
+}
+
+impl BlockStage for GradsStage {
+    fn name(&self) -> &'static str {
+        "grads"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        let sig = cx.scorer.signals();
+        if !sig.grads {
+            return Ok(());
+        }
+        let grads = if sig.full_grads {
+            cx.full_grads
+                .ok_or_else(|| {
+                    anyhow!(
+                        "scorer `{}` needs full-model gradients but none \
+                         were precomputed for block {}",
+                        cx.scorer.name(),
+                        cx.block
+                    )
+                })?
+                .clone()
+        } else {
+            // Regional gradients: computed ONCE per block on the dense
+            // weights and reused across RO rounds (paper §4.1).
+            rgs_pass(cx.rt, cx.size, cx.t, &cx.bp, cx.xs, cx.n_calib)?
+        };
+        cx.grads = Some(grads);
+        Ok(())
+    }
+}
+
+impl BlockStage for SelectStage {
+    fn name(&self) -> &'static str {
+        "select"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        cx.masks = Some(select_masks(cx)?);
+        Ok(())
+    }
+}
+
+impl BlockStage for RoStage {
+    fn name(&self) -> &'static str {
+        "ro"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        let mut vstate: Vec<Tensor> =
+            cx.bp.iter().map(|p| Tensor::zeros(&p.shape)).collect();
+        cx.report.account_ro(&cx.bp);
+        let sig = cx.scorer.signals();
+        let needs_stats = sig.stats || sig.moments;
+        for k in 0..cx.opts.k_iters {
+            if k > 0 {
+                // Re-fetch signals on the *pruned* weights and re-infer
+                // the mask (Alg. 1 step 5, k>0). Statistics-free scorers
+                // have nothing to re-fetch; they only re-select.
+                if needs_stats {
+                    let masks = cx.masks.as_ref().ok_or_else(|| {
+                        anyhow!(
+                            "ro stage needs masks — did the select stage \
+                             run?"
+                        )
+                    })?;
+                    let masked: Vec<Tensor> = cx
+                        .bp
+                        .iter()
+                        .enumerate()
+                        .map(|(i, p)| match PARAM_PRUNABLE_IDX[i] {
+                            Some(pi) => p.hadamard(&masks[pi]),
+                            None => p.clone(),
+                        })
+                        .collect();
+                    let (_, st) = collect_stats(
+                        cx.rt, cx.size, cx.t, cx.d, cx.ffn, &masked,
+                        cx.xs, sig.moments,
+                    )?;
+                    cx.stats = Some(st);
+                }
+                cx.masks = Some(select_masks(cx)?);
+            }
+            let loss = ro_round(cx, &mut vstate)?;
+            cx.block_report.ro_losses.push(loss);
+        }
+        // Final re-prune to restore sparsity (Alg. 1 step 11).
+        if needs_stats {
+            let (_, st) = collect_stats(
+                cx.rt, cx.size, cx.t, cx.d, cx.ffn, &cx.bp, cx.xs,
+                sig.moments,
+            )?;
+            cx.stats = Some(st);
+        }
+        cx.masks = Some(select_masks(cx)?);
+        Ok(())
+    }
+}
+
+impl BlockStage for ApplyStage {
+    fn name(&self) -> &'static str {
+        "apply"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        let masks = cx.masks.as_ref().ok_or_else(|| {
+            anyhow!("apply stage needs masks — did the select stage run?")
+        })?;
+        for (pi, &w_idx) in PRUNABLE_PARAM_IDX.iter().enumerate() {
+            cx.bp[w_idx] = cx.bp[w_idx].hadamard(&masks[pi]);
+        }
+        Ok(())
+    }
+}
+
+impl BlockStage for ObsStage {
+    fn name(&self) -> &'static str {
+        "obs"
+    }
+
+    fn run(&self, cx: &mut StageCtx) -> Result<()> {
+        let hessians = hessian_pass(cx.rt, cx.size, cx.t, &cx.bp, cx.xs)?;
+        cx.report.account_sparsegpt(cx.d, cx.ffn);
+        for (pi, &name) in PRUNABLE.iter().enumerate() {
+            let site = stat_site(name);
+            sparsegpt_prune(
+                &mut cx.bp[PRUNABLE_PARAM_IDX[pi]],
+                &hessians[site],
+                cx.opts.pattern,
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Score all seven prunable weights of the block and select masks.
+pub fn select_masks(cx: &StageCtx<'_>) -> Result<Vec<Tensor>> {
+    let mut masks = Vec::with_capacity(PRUNABLE.len());
+    for (pi, &name) in PRUNABLE.iter().enumerate() {
+        let w = &cx.bp[PRUNABLE_PARAM_IDX[pi]];
+        let sctx = ScoreCtx {
+            rt: cx.rt,
+            size: cx.size,
+            weight_name: name,
+            prunable_idx: pi,
+            w,
+            stats: cx.stats.as_ref(),
+            grads: cx.grads.as_ref(),
+            alpha: cx.opts.alpha,
+        };
+        let scores = cx.scorer.score(&sctx)?;
+        if scores.shape != w.shape {
+            return Err(anyhow!(
+                "scorer `{}` returned shape {:?} for `{name}` (expects {:?})",
+                cx.scorer.name(),
+                scores.shape,
+                w.shape
+            ));
+        }
+        masks.push(mask_from_scores(
+            cx.rt,
+            cx.size,
+            name,
+            &scores,
+            cx.opts.pattern,
+        )?);
+    }
+    Ok(masks)
+}
+
+fn block_inputs<'a>(x: &'a Tensor, bp: &'a [Tensor]) -> Vec<ValueView<'a>> {
+    let mut v: Vec<ValueView> = Vec::with_capacity(10);
+    v.push(x.into());
+    for p in bp {
+        v.push(p.into());
+    }
+    v
+}
+
+/// Forward all chunks through one block, returning outputs.
+pub(crate) fn fwd_pass(
+    rt: &dyn Backend,
+    size: &str,
+    t: usize,
+    bp: &[Tensor],
+    xs: &[Tensor],
+) -> Result<Vec<Tensor>> {
+    let key = format!("{size}_block_fwd_t{t}");
+    xs.iter()
+        .map(|x| Ok(rt.exec_fv(&key, &block_inputs(x, bp))?.remove(0)))
+        .collect()
+}
+
+/// Stats pass: forward + accumulate the four input-site squared norms,
+/// plus the per-channel first moments when `moments` is set (std-dev
+/// scorers; runs the `block_moments` kernel instead of `block_stats`).
+pub(crate) fn collect_stats(
+    rt: &dyn Backend,
+    size: &str,
+    t: usize,
+    d: usize,
+    ffn: usize,
+    bp: &[Tensor],
+    xs: &[Tensor],
+    moments: bool,
+) -> Result<(Vec<Tensor>, BlockStats)> {
+    let key = if moments {
+        format!("{size}_block_moments_t{t}")
+    } else {
+        format!("{size}_block_stats_t{t}")
+    };
+    if moments && !rt.supports(&key) {
+        return Err(anyhow!(
+            "this scorer needs first-moment statistics, but the `{}` \
+             backend has no `{key}` kernel",
+            rt.name()
+        ));
+    }
+    let mut stats = BlockStats::zeros(d, ffn);
+    if moments {
+        stats.sum = Some([
+            Tensor::zeros(&[d]),
+            Tensor::zeros(&[d]),
+            Tensor::zeros(&[d]),
+            Tensor::zeros(&[ffn]),
+        ]);
+    }
+    let mut ys = Vec::with_capacity(xs.len());
+    for x in xs {
+        let mut out = rt.exec_fv(&key, &block_inputs(x, bp))?;
+        // outputs: y, sq_qkv, sq_o, sq_mlp, sq_down[, sums x4]
+        let y = out.remove(0);
+        for site in 0..4 {
+            stats.sq[site].add_assign(&out[site]);
+        }
+        if let Some(sums) = &mut stats.sum {
+            for site in 0..4 {
+                sums[site].add_assign(&out[4 + site]);
+            }
+        }
+        stats.positions += x.shape[0] * x.shape[1];
+        ys.push(y);
+    }
+    Ok((ys, stats))
+}
+
+/// Regional-gradient pass (paper Eq. 3): accumulate squared per-sample
+/// gradients of ||f(x)||_2 over all calibration chunks.
+pub(crate) fn rgs_pass(
+    rt: &dyn Backend,
+    size: &str,
+    t: usize,
+    bp: &[Tensor],
+    xs: &[Tensor],
+    n: usize,
+) -> Result<BlockGrads> {
+    let key = format!("{size}_rgs_grad_t{t}");
+    let mut sq: Option<Vec<Tensor>> = None;
+    for x in xs {
+        let out = rt.exec_fv(&key, &block_inputs(x, bp))?;
+        match &mut sq {
+            None => sq = Some(out),
+            Some(acc) => {
+                for (a, o) in acc.iter_mut().zip(&out) {
+                    a.add_assign(o);
+                }
+            }
+        }
+    }
+    Ok(BlockGrads { sq: sq.expect("no calibration chunks"), samples: n })
+}
+
+/// Hessian pass for SparseGPT: accumulate the four Gram matrices.
+pub(crate) fn hessian_pass(
+    rt: &dyn Backend,
+    size: &str,
+    t: usize,
+    bp: &[Tensor],
+    xs: &[Tensor],
+) -> Result<[Tensor; 4]> {
+    let key = format!("{size}_block_hessian_t{t}");
+    let mut acc: Option<[Tensor; 4]> = None;
+    for x in xs {
+        let mut out = rt.exec_fv(&key, &block_inputs(x, bp))?;
+        out.remove(0); // y unused here (stats pass propagates)
+        let arr: [Tensor; 4] =
+            [out.remove(0), out.remove(0), out.remove(0), out.remove(0)];
+        match &mut acc {
+            None => acc = Some(arr),
+            Some(a) => {
+                for (ai, oi) in a.iter_mut().zip(arr.iter()) {
+                    ai.add_assign(oi);
+                }
+            }
+        }
+    }
+    Ok(acc.expect("no calibration chunks"))
+}
+
+/// One RO round (paper Eq. 5): select M samples, run the fused
+/// masked-RMSprop step artifact, update the live block params. The
+/// sample gather borrows straight from the incoming chunks — no
+/// per-round clone of the calibration stream.
+fn ro_round(cx: &mut StageCtx, vstate: &mut Vec<Tensor>) -> Result<f32> {
+    let m_ro = cx.rt.manifest().consts.m_ro;
+    let b = cx.rt.manifest().consts.b_cal;
+    let idx = cx.rng.sample_indices(cx.n_calib, m_ro);
+    let (t, d) = (cx.t, cx.d);
+
+    let row = t * d;
+    let mut x = Vec::with_capacity(m_ro * row);
+    let mut y = Vec::with_capacity(m_ro * row);
+    for &i in &idx {
+        let (c, r) = (i / b, i % b);
+        x.extend_from_slice(&cx.xs[c].data[r * row..(r + 1) * row]);
+        y.extend_from_slice(&cx.dense_ys[c].data[r * row..(r + 1) * row]);
+    }
+    let x = Tensor::new(vec![m_ro, t, d], x);
+    let y = Tensor::new(vec![m_ro, t, d], y);
+    let lr_t = Tensor::new(vec![1], vec![cx.opts.ro_lr]);
+
+    let masks = cx.masks.as_ref().ok_or_else(|| {
+        anyhow!("ro round needs masks — did the select stage run?")
+    })?;
+    let mut inputs: Vec<ValueView> = vec![(&x).into(), (&y).into()];
+    for p in cx.bp.iter() {
+        inputs.push(p.into());
+    }
+    for m in masks {
+        inputs.push(m.into());
+    }
+    for v in vstate.iter() {
+        inputs.push(v.into());
+    }
+    inputs.push((&lr_t).into());
+
+    let key = format!("{}_ro_step_t{t}", cx.size);
+    let mut out = cx.rt.exec_fv(&key, &inputs)?;
+    let loss = out.pop().expect("loss output").item();
+    let new_v = out.split_off(9);
+    cx.bp = out;
+    *vstate = new_v;
+    Ok(loss)
+}
+
+/// Drive `w` through the stage pipeline block by block (the paper's
+/// Alg. 1): run the stages, record achieved sparsity, write the block
+/// back, and propagate the *pruned* stream to the next block. `xs0` is
+/// the embedded calibration stream, taken by value so one-shot callers
+/// can move it in without keeping a second copy alive; `n_calib` is the
+/// total sample count it holds.
+pub(crate) fn run_pipeline(
+    rt: &dyn Backend,
+    w: &mut Weights,
+    opts: &PruneOptions,
+    scorer: &dyn Scorer,
+    xs0: Vec<Tensor>,
+    n_calib: usize,
+    full_grads: Option<&[BlockGrads]>,
+) -> Result<PruneReport> {
+    let t0 = Instant::now();
+    let size = w.cfg.name.clone();
+    let (d, ffn, l) = (w.cfg.d, w.cfg.ffn, w.cfg.n_layers);
+    let t = opts.ctx;
+    let mut rng = Rng::seed_from_u64(opts.seed ^ 0x517cc1b727220a95);
+
+    let mut report = PruneReport::new(opts, &w.cfg);
+    report.account_calibration(&xs0, opts.recipe.ro);
+    if full_grads.is_some() {
+        report.account_full_model(w);
+    }
+
+    let stages = stages_for(opts);
+    let mut xs = xs0;
+    let limit = opts.max_blocks.unwrap_or(l).min(l);
+    for li in 0..limit {
+        let mut cx = StageCtx {
+            rt,
+            size: &size,
+            block: li,
+            t,
+            d,
+            ffn,
+            opts,
+            scorer,
+            xs: &xs,
+            n_calib,
+            bp: w.block(li).into_iter().cloned().collect(),
+            dense_ys: Vec::new(),
+            stats: None,
+            grads: None,
+            masks: None,
+            full_grads: full_grads.map(|g| &g[li]),
+            rng: &mut rng,
+            report: &mut report,
+            block_report: BlockReport {
+                block: li,
+                ro_losses: Vec::new(),
+                sparsity: 0.0,
+            },
+        };
+        for stage in &stages {
+            stage.run(&mut cx).map_err(|e| {
+                e.context(format!("stage `{}` on block {li}", stage.name()))
+            })?;
+        }
+        let StageCtx { bp, grads, mut block_report, .. } = cx;
+
+        // Achieved sparsity of this block.
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for &w_idx in &PRUNABLE_PARAM_IDX {
+            zeros += bp[w_idx].data.iter().filter(|v| **v == 0.0).count();
+            total += bp[w_idx].numel();
+        }
+        block_report.sparsity = zeros as f64 / total as f64;
+
+        // Write back and propagate the PRUNED stream.
+        for (i, name) in BLOCK_PARAMS.iter().enumerate() {
+            w.set_block(li, name, bp[i].clone());
+        }
+        report.account_block(&bp, grads.as_ref());
+        xs = fwd_pass(rt, &size, t, &bp, &xs)?;
+        report.blocks.push(block_report);
+    }
+
+    report.secs = t0.elapsed().as_secs_f64();
+    report.final_sparsity = w.prunable_sparsity();
+    Ok(report)
+}

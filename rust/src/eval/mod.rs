@@ -8,3 +8,21 @@ pub mod tasks;
 pub use generate::generate;
 pub use ppl::{forward_hidden, perplexity, perplexity_split};
 pub use tasks::{load_tasks, run_tasks, Task, TaskResult};
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::runtime::Backend;
+
+/// The (test, val) perplexity pair every paper table reports — the
+/// "WikiText" and "C4 validation" columns.
+pub fn ppl_pair(
+    rt: &dyn Backend,
+    w: &Weights,
+    max_batches: usize,
+) -> Result<(f64, f64)> {
+    Ok((
+        perplexity_split(rt, w, "test", max_batches)?,
+        perplexity_split(rt, w, "val", max_batches)?,
+    ))
+}

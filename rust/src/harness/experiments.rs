@@ -1,9 +1,15 @@
 //! Drivers for every table and figure in the paper's evaluation section.
-//! Each prints the paper-shaped rows and returns the numbers.
+//! Each prints the paper-shaped rows and returns the numbers. Drivers
+//! that sweep many settings on one model hold a [`PruneSession`] so the
+//! calibration build (and, for GBLM, the full-model backward) is paid
+//! once per size instead of once per run.
 
 use anyhow::Result;
 
-use crate::harness::runs::{dense_ppl, prune_and_eval, EVAL_BATCHES};
+use crate::coordinator::PruneSession;
+use crate::harness::runs::{
+    dense_ppl, prune_and_eval, prune_and_eval_in, EVAL_BATCHES,
+};
 use crate::pruner::{Method, PruneOptions};
 use crate::runtime::Backend;
 use crate::sparsity::Pattern;
@@ -14,15 +20,14 @@ pub fn fig1(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
     println!("== Figure 1: relative ppl improvement over Wanda (2:4) ==");
     let mut rows = Vec::new();
     for size in sizes {
-        let wanda = prune_and_eval(
-            rt,
-            size,
+        let mut session = PruneSession::builder(rt).size(size).build()?;
+        let wanda = prune_and_eval_in(
+            &mut session,
             &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
             EVAL_BATCHES,
         )?;
-        let wpp = prune_and_eval(
-            rt,
-            size,
+        let wpp = prune_and_eval_in(
+            &mut session,
             &PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4)),
             EVAL_BATCHES,
         )?;
@@ -38,10 +43,12 @@ pub fn fig1(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<(String, f64)>> {
 }
 
 /// Figure 3: perplexity as progressively more decoder blocks are pruned
-/// (2 at a time), 2:4 and 4:8, on both eval splits.
+/// (2 at a time), 2:4 and 4:8, on both eval splits. One session serves
+/// the whole sweep — every point shares one calibration build.
 pub fn fig3(rt: &dyn Backend, size: &str) -> Result<Vec<Fig3Row>> {
     println!("== Figure 3: progressive block pruning ({size}) ==");
     let n_layers = rt.manifest().size(size)?.n_layers;
+    let mut session = PruneSession::builder(rt).size(size).build()?;
     let mut rows = Vec::new();
     for method in [Method::Wanda, Method::WandaPP] {
         for (n, m) in [(2usize, 4usize), (4, 8)] {
@@ -49,7 +56,7 @@ pub fn fig3(rt: &dyn Backend, size: &str) -> Result<Vec<Fig3Row>> {
                 let mut opts =
                     PruneOptions::new(method, Pattern::NofM(n, m));
                 opts.max_blocks = Some(upto);
-                let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+                let r = prune_and_eval_in(&mut session, &opts, EVAL_BATCHES)?;
                 println!(
                     "{} {n}:{m} blocks<={upto}: test {:.3} val {:.3}",
                     method.label(),
@@ -78,7 +85,9 @@ pub struct Fig3Row {
     pub ppl_val: f64,
 }
 
-/// Table 1: the full method x pattern x size perplexity grid.
+/// Table 1: the full method x pattern x size perplexity grid. One
+/// session per size: every method and pattern reuses the same
+/// calibration build (and GBLM's full-model gradients are computed once).
 pub fn table1(
     rt: &dyn Backend,
     sizes: &[&str],
@@ -87,6 +96,7 @@ pub fn table1(
     println!("== Table 1: Wikitext(ppl-test) comparison ==");
     let mut rows = Vec::new();
     for size in sizes {
+        let mut session = PruneSession::builder(rt).size(size).build()?;
         let (dense_test, _) = dense_ppl(rt, size, EVAL_BATCHES)?;
         println!("[{size}] dense: {dense_test:.3}");
         rows.push(Table1Row {
@@ -102,7 +112,7 @@ pub fn table1(
         ] {
             for &method in methods {
                 let opts = PruneOptions::new(method, pattern);
-                match prune_and_eval(rt, size, &opts, EVAL_BATCHES) {
+                match prune_and_eval_in(&mut session, &opts, EVAL_BATCHES) {
                     Ok(r) => {
                         println!(
                             "[{size}] {:<11} {:<14}: {:.3}",
@@ -143,13 +153,12 @@ pub struct Table1Row {
 /// Table 2: zero-shot accuracy across the nine synthetic tasks, 2:4.
 pub fn table2(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     use crate::eval::run_tasks;
-    use crate::model::load_size;
 
     println!("== Table 2: zero-shot accuracy (2:4, {size}) ==");
     let mut columns: Vec<(String, Vec<f64>)> = Vec::new();
 
-    let dense = load_size(rt, size)?;
-    let dense_res = run_tasks(rt, &dense, 50)?;
+    let mut session = PruneSession::builder(rt).size(size).build()?;
+    let dense_res = run_tasks(rt, session.weights(), 50)?;
     let names: Vec<String> = dense_res.iter().map(|r| r.name.clone()).collect();
     columns.push((
         "dense".into(),
@@ -158,13 +167,14 @@ pub fn table2(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
 
     for method in [Method::Wanda, Method::Gblm, Method::WandaPPRgs, Method::WandaPP] {
         let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
-        let mut w = load_size(rt, size)?;
-        let coord = crate::coordinator::Coordinator::new(rt);
-        if coord.prune(&mut w, &opts).is_err() {
-            println!("{:<11} -", method.label());
-            continue;
-        }
-        let res = run_tasks(rt, &w, 50)?;
+        let out = match session.run(&opts) {
+            Ok(out) => out,
+            Err(_) => {
+                println!("{:<11} -", method.label());
+                continue;
+            }
+        };
+        let res = run_tasks(rt, &out.weights, 50)?;
         columns.push((
             method.label().into(),
             res.iter().map(|r| r.accuracy).collect(),
@@ -192,20 +202,27 @@ pub fn table2(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     Ok(columns)
 }
 
-/// Table 3: pruning time and memory per method.
+/// Table 3: pruning time and memory per method. One live session at a
+/// time (sizes outer): methods share that size's calibration build, and
+/// at most one size is resident — the session holds its dense template
+/// plus the clone being pruned (the reported memory column itself is the
+/// coordinator's analytic accounting, not harness RSS). Rows come out
+/// size-major.
 pub fn table3(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<Table3Row>> {
     println!("== Table 3: pruning time (s) and peak memory (MiB) ==");
-    let mut rows = Vec::new();
-    for &method in &[
+    let methods = [
         Method::SparseGpt,
         Method::Gblm,
         Method::Wanda,
         Method::WandaPPRgs,
         Method::WandaPP,
-    ] {
-        for size in sizes {
+    ];
+    let mut rows = Vec::new();
+    for size in sizes {
+        let mut session = PruneSession::builder(rt).size(size).build()?;
+        for &method in &methods {
             let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
-            match prune_and_eval(rt, size, &opts, 2) {
+            match prune_and_eval_in(&mut session, &opts, 2) {
                 Ok(r) => {
                     let mib = r.report.memory.peak() as f64 / (1 << 20) as f64;
                     println!(
@@ -240,19 +257,18 @@ pub struct Table3Row {
 
 /// Table 4: LoRA fine-tuning after pruning (Wanda vs Wanda++).
 pub fn table4(rt: &dyn Backend, steps: usize) -> Result<Vec<Table4Row>> {
+    use crate::eval::perplexity_split;
     use crate::lora::{finetune, perplexity_with_lora, LoraState};
-    use crate::model::load_size;
 
     let size = rt.manifest().consts.primary.clone();
     println!("== Table 4: perplexity with LoRA ({size}, 2:4, {steps} steps) ==");
     let (dense_test, _) = dense_ppl(rt, &size, EVAL_BATCHES)?;
+    let mut session = PruneSession::builder(rt).size(&size).build()?;
     let mut rows = Vec::new();
     for method in [Method::Wanda, Method::WandaPP] {
         let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
-        let mut w = load_size(rt, &size)?;
-        let coord = crate::coordinator::Coordinator::new(rt);
-        coord.prune(&mut w, &opts)?;
-        let pruned = crate::eval::perplexity_split(rt, &w, "test", EVAL_BATCHES)?;
+        let w = session.run(&opts)?.weights;
+        let pruned = perplexity_split(rt, &w, "test", EVAL_BATCHES)?;
         let rank = rt.manifest().consts.lora_rank;
         let mut lora = LoraState::init(&w, rank, 7);
         finetune(rt, &w, &mut lora, steps, 1e-3, 11)?;
@@ -283,12 +299,13 @@ pub struct Table4Row {
 /// Table 5: higher unstructured sparsity (0.6 / 0.7 / 0.8).
 pub fn table5(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     println!("== Table 5: high unstructured sparsity ({size}) ==");
+    let mut session = PruneSession::builder(rt).size(size).build()?;
     let mut rows = Vec::new();
     for method in [Method::Gblm, Method::Wanda, Method::WandaPP] {
         let mut ppls = Vec::new();
         for s in [0.6, 0.7, 0.8] {
             let opts = PruneOptions::new(method, Pattern::Unstructured(s));
-            match prune_and_eval(rt, size, &opts, EVAL_BATCHES) {
+            match prune_and_eval_in(&mut session, &opts, EVAL_BATCHES) {
                 Ok(r) => ppls.push(r.ppl_test),
                 Err(_) => ppls.push(f64::NAN),
             }
@@ -308,6 +325,7 @@ pub fn table5(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
 /// Table 6: structured row pruning (Wanda-SP vs Wanda++-SP).
 pub fn table6(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
     println!("== Table 6: structured row pruning ({size}) ==");
+    let mut session = PruneSession::builder(rt).size(size).build()?;
     let mut rows = Vec::new();
     for (label, method) in
         [("wanda-SP", Method::Wanda), ("wanda++-SP", Method::WandaPP)]
@@ -315,7 +333,7 @@ pub fn table6(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
         let mut ppls = Vec::new();
         for f in [0.1, 0.3, 0.5] {
             let opts = PruneOptions::new(method, Pattern::StructuredRows(f));
-            let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+            let r = prune_and_eval_in(&mut session, &opts, EVAL_BATCHES)?;
             ppls.push(r.ppl_test);
         }
         println!(
@@ -348,14 +366,16 @@ pub fn table7_table9() {
     }
 }
 
-/// Table 8: the RGS alpha ablation.
+/// Table 8: the RGS alpha ablation. Alpha is not part of the calibration
+/// key, so the whole sweep shares one calibration build.
 pub fn table8(rt: &dyn Backend, size: &str) -> Result<Vec<(f32, f64)>> {
     println!("== Table 8: alpha ablation (RGS, 2:4, {size}) ==");
+    let mut session = PruneSession::builder(rt).size(size).build()?;
     let mut rows = Vec::new();
     for alpha in [1.0, 10.0, 50.0, 100.0, 500.0, 1000.0, 5000.0, 1e4, 1e6] {
         let mut opts = PruneOptions::new(Method::WandaPPRgs, Pattern::NofM(2, 4));
         opts.alpha = alpha as f32;
-        let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+        let r = prune_and_eval_in(&mut session, &opts, EVAL_BATCHES)?;
         println!("alpha {alpha:>9}: {:.3}", r.ppl_test);
         rows.push((alpha as f32, r.ppl_test));
     }
@@ -363,7 +383,10 @@ pub fn table8(rt: &dyn Backend, size: &str) -> Result<Vec<(f32, f64)>> {
 }
 
 /// Figure 4: calibration-size sensitivity box plot data. Returns, per
-/// (method, n, ctx) setting, the perplexities across `runs` seeds.
+/// (method, n, ctx) setting, the perplexities across `runs` seeds. Every
+/// run here has a distinct calibration key (the seed is part of it), so
+/// this driver deliberately uses one-shot runs instead of a session —
+/// caching would only grow memory without a single hit.
 pub fn fig4(
     rt: &dyn Backend,
     size: &str,
@@ -447,6 +470,7 @@ pub struct Fig4Row {
 /// this sweep shows the marginal value of each round.
 pub fn ablation_k(rt: &dyn Backend, size: &str) -> Result<Vec<(usize, f64)>> {
     println!("== Ablation: RO rounds K (2:4, {size}) ==");
+    let mut session = PruneSession::builder(rt).size(size).build()?;
     let mut rows = Vec::new();
     for k in [0usize, 1, 2, 3, 5, 8] {
         let mut opts = PruneOptions::new(
@@ -454,10 +478,7 @@ pub fn ablation_k(rt: &dyn Backend, size: &str) -> Result<Vec<(usize, f64)>> {
             Pattern::NofM(2, 4),
         );
         opts.k_iters = k.max(1);
-        if k == 0 {
-            opts.k_iters = 1; // unused without RO
-        }
-        let r = prune_and_eval(rt, size, &opts, EVAL_BATCHES)?;
+        let r = prune_and_eval_in(&mut session, &opts, EVAL_BATCHES)?;
         println!("K={k}: {:.3}  ({:.1}s)", r.ppl_test, r.report.secs);
         rows.push((k, r.ppl_test));
     }
@@ -466,7 +487,8 @@ pub fn ablation_k(rt: &dyn Backend, size: &str) -> Result<Vec<(usize, f64)>> {
 
 /// Ablation (extension): RO minibatch source — does re-sampling the M RO
 /// inputs each round (the paper's design) beat a fixed set? Approximated
-/// by comparing seeds, since sampling is seed-driven.
+/// by comparing seeds, since sampling is seed-driven. Seed-keyed
+/// calibration means no cache hits; one-shot runs are used on purpose.
 pub fn ablation_seeds(rt: &dyn Backend, size: &str, n: usize) -> Result<Vec<f64>> {
     println!("== Ablation: seed variance of wanda++ (2:4, {size}) ==");
     let mut ppls = Vec::new();

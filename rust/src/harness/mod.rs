@@ -6,4 +6,6 @@ mod experiments;
 mod runs;
 
 pub use experiments::*;
-pub use runs::{dense_ppl, prune_and_eval, PruneEval, EVAL_BATCHES};
+pub use runs::{
+    dense_ppl, prune_and_eval, prune_and_eval_in, PruneEval, EVAL_BATCHES,
+};

@@ -1,10 +1,12 @@
-//! Shared run helper: prune a fresh copy of a model and evaluate
-//! perplexity on the held-out splits.
+//! Shared run helpers: prune a fresh copy of a model and evaluate
+//! perplexity on the held-out splits — either one-shot or inside a
+//! [`PruneSession`], where every run after the first reuses the session's
+//! calibration build.
 
 use anyhow::Result;
 
-use crate::coordinator::{Coordinator, PruneReport};
-use crate::eval::perplexity_split;
+use crate::coordinator::{Coordinator, PruneReport, PruneSession};
+use crate::eval::ppl_pair;
 use crate::model::load_size;
 use crate::pruner::PruneOptions;
 use crate::runtime::Backend;
@@ -21,7 +23,10 @@ pub struct PruneEval {
     pub ppl_val: f64,
 }
 
-/// Prune a fresh copy of `size` under `opts` and evaluate it.
+/// Prune a fresh copy of `size` under `opts` and evaluate it. One-shot:
+/// prunes in place through [`Coordinator`] so only a single copy of the
+/// weights is ever resident; sweeps should hold a [`PruneSession`] and
+/// call [`prune_and_eval_in`] to share the calibration build instead.
 pub fn prune_and_eval(
     rt: &dyn Backend,
     size: &str,
@@ -29,18 +34,25 @@ pub fn prune_and_eval(
     eval_batches: usize,
 ) -> Result<PruneEval> {
     let mut w = load_size(rt, size)?;
-    let coord = Coordinator::new(rt);
-    let report = coord.prune(&mut w, opts)?;
-    let ppl_test = perplexity_split(rt, &w, "test", eval_batches)?;
-    let ppl_val = perplexity_split(rt, &w, "val", eval_batches)?;
+    let report = Coordinator::new(rt).prune(&mut w, opts)?;
+    let (ppl_test, ppl_val) = ppl_pair(rt, &w, eval_batches)?;
     Ok(PruneEval { report, ppl_test, ppl_val })
+}
+
+/// Prune a fresh clone of the session weights under `opts` and evaluate
+/// it; calibration is shared with every other run of the session.
+pub fn prune_and_eval_in(
+    session: &mut PruneSession,
+    opts: &PruneOptions,
+    eval_batches: usize,
+) -> Result<PruneEval> {
+    let out = session.run(opts)?;
+    let (ppl_test, ppl_val) = ppl_pair(session.rt(), &out.weights, eval_batches)?;
+    Ok(PruneEval { report: out.report, ppl_test, ppl_val })
 }
 
 /// Dense (unpruned) perplexities of a size.
 pub fn dense_ppl(rt: &dyn Backend, size: &str, eval_batches: usize) -> Result<(f64, f64)> {
     let w = load_size(rt, size)?;
-    Ok((
-        perplexity_split(rt, &w, "test", eval_batches)?,
-        perplexity_split(rt, &w, "val", eval_batches)?,
-    ))
+    ppl_pair(rt, &w, eval_batches)
 }

@@ -18,10 +18,15 @@
 //! - [`model`] — model config, weight store, calibration/eval data, and
 //!   deterministic synthetic fallbacks for artifact-free runs.
 //! - [`sparsity`] — mask algebra: unstructured, 2:4, 4:8, structured rows.
-//! - [`pruner`] — scoring methods: magnitude, Wanda, SparseGPT, GBLM,
-//!   Wanda++ (RGS / RO / full), all behind one [`pruner::Method`] enum.
+//! - [`pruner`] — the pluggable [`pruner::Scorer`] trait and
+//!   [`pruner::ScorerRegistry`]: magnitude, Wanda, SparseGPT, GBLM,
+//!   Wanda++ (RGS / RO / full) plus STADE and RIA ship as built-in
+//!   registrations; [`pruner::Method`] survives as a parse/label shim.
 //! - [`coordinator`] — the block-streaming pipeline (the paper's Alg. 1)
-//!   with time/memory accounting.
+//!   split into explicit [`coordinator::BlockStage`]s, driven either
+//!   one-shot ([`coordinator::Coordinator`]) or through a
+//!   [`coordinator::PruneSession`] that shares one calibration build
+//!   across many method runs.
 //! - [`eval`] — perplexity + the zero-shot likelihood-ranking task suite.
 //! - [`latency`] — roofline latency simulator for the 2:4 deployment tables.
 //! - [`lora`] — sparsity-aware LoRA fine-tuning (paper §5.6).
@@ -51,6 +56,24 @@ pub const BLOCK_PARAMS: [&str; 9] =
 /// The seven prunable linear weights of a decoder block, in order.
 pub const PRUNABLE: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
 
+/// [`BLOCK_PARAMS`] index of each [`PRUNABLE`] entry (prunable → param),
+/// precomputed so hot loops never re-scan the name tables.
+pub const PRUNABLE_PARAM_IDX: [usize; 7] = [1, 2, 3, 4, 6, 7, 8];
+
+/// [`PRUNABLE`] index of each [`BLOCK_PARAMS`] entry (param → prunable);
+/// `None` for the two norm vectors.
+pub const PARAM_PRUNABLE_IDX: [Option<usize>; 9] = [
+    None,
+    Some(0),
+    Some(1),
+    Some(2),
+    Some(3),
+    None,
+    Some(4),
+    Some(5),
+    Some(6),
+];
+
 /// Which of the four calibration-statistics sites feeds each prunable layer.
 pub fn stat_site(name: &str) -> usize {
     match name {
@@ -59,5 +82,23 @@ pub fn stat_site(name: &str) -> usize {
         "wg" | "wu" => 2,        // post-ln2 hidden states
         "wd" => 3,               // swiglu activations
         _ => panic!("not a prunable weight: {name}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_tables_match_the_name_tables() {
+        for (pi, name) in PRUNABLE.iter().enumerate() {
+            let scanned =
+                BLOCK_PARAMS.iter().position(|p| p == name).unwrap();
+            assert_eq!(PRUNABLE_PARAM_IDX[pi], scanned, "{name}");
+        }
+        for (i, name) in BLOCK_PARAMS.iter().enumerate() {
+            let scanned = PRUNABLE.iter().position(|p| p == name);
+            assert_eq!(PARAM_PRUNABLE_IDX[i], scanned, "{name}");
+        }
     }
 }

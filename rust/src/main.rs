@@ -9,10 +9,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use wandapp::eval::{perplexity_split, run_tasks};
+use wandapp::eval::{ppl_pair, run_tasks};
 use wandapp::harness;
 use wandapp::model::load_size;
-use wandapp::pruner::{Method, PruneOptions};
+use wandapp::pruner::{Method, PruneOptions, Recipe, ScorerRegistry};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::Pattern;
 
@@ -45,6 +45,9 @@ COMMANDS
   profile  [--size s0]  Execution profile of a short Wanda++ run.
 
 METHODS  magnitude wanda sparsegpt gblm wanda++rgs wanda++ro wanda++
+         — or any registered scorer by name (built-ins add: stade ria),
+         with an optional +ro suffix for regional optimization, e.g.
+         `--method ria` or `--method stade+ro`.
 PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
@@ -92,6 +95,30 @@ impl Args {
     }
 }
 
+/// A method string: one of the seven paper labels, or any registered
+/// scorer name with an optional `+ro` suffix (`stade`, `ria+ro`, …).
+fn parse_method(s: &str, registry: &ScorerRegistry) -> Result<Recipe> {
+    if let Some(m) = Method::parse(s) {
+        return Ok(m.recipe());
+    }
+    let (name, ro) = match s.strip_suffix("+ro") {
+        Some(base) => (base, true),
+        None => (s, false),
+    };
+    if registry.contains(name) {
+        return Ok(if ro {
+            Recipe::with_ro(name)
+        } else {
+            Recipe::score_only(name)
+        });
+    }
+    bail!(
+        "unknown method `{s}` (paper methods: {}; registered scorers: {})",
+        Method::all().map(|m| m.label()).join(" "),
+        registry.names().join(" ")
+    )
+}
+
 fn parse_pattern(s: &str) -> Result<Pattern> {
     if let Some((n, m)) = s.split_once(':') {
         return Ok(Pattern::NofM(n.parse()?, m.parse()?));
@@ -124,10 +151,13 @@ fn main() -> Result<()> {
     match cmd.as_str() {
         "prune" => {
             let size = args.get("size", "s2");
-            let method = Method::parse(&args.get("method", "wanda++"))
-                .ok_or_else(|| anyhow!("unknown method"))?;
-            let mut opts =
-                PruneOptions::new(method, parse_pattern(&args.get("pattern", "2:4"))?);
+            let registry = ScorerRegistry::with_builtins();
+            let recipe =
+                parse_method(&args.get("method", "wanda++"), &registry)?;
+            let mut opts = PruneOptions::for_recipe(
+                recipe,
+                parse_pattern(&args.get("pattern", "2:4"))?,
+            );
             opts.n_calib = args.get_parse("calib", 32)?;
             opts.alpha = args.get_parse("alpha", opts.alpha)?;
             opts.k_iters = args.get_parse("k", 5)?;
@@ -137,11 +167,14 @@ fn main() -> Result<()> {
 
             let (dense_test, _) =
                 harness::dense_ppl(rt, &size, harness::EVAL_BATCHES)?;
+            // One-shot run: prune in place through the Coordinator (one
+            // resident copy of the weights); the built-in registry covers
+            // every recipe `parse_method` accepts.
             let mut w = load_size(rt, &size)?;
             let coord = wandapp::coordinator::Coordinator::new(rt);
             let report = coord.prune(&mut w, &opts)?;
-            let ppl_test = perplexity_split(rt, &w, "test", harness::EVAL_BATCHES)?;
-            let ppl_val = perplexity_split(rt, &w, "val", harness::EVAL_BATCHES)?;
+            let (ppl_test, ppl_val) =
+                ppl_pair(rt, &w, harness::EVAL_BATCHES)?;
             println!("{}", report.summary());
             println!("ppl(test): dense {dense_test:.3} -> pruned {ppl_test:.3}");
             println!("ppl(val):  pruned {ppl_val:.3}");
@@ -155,8 +188,7 @@ fn main() -> Result<()> {
                 Some(p) => wandapp::model::Weights::load(p)?,
                 None => load_size(rt, &args.get("size", "s2"))?,
             };
-            let test = perplexity_split(rt, &w, "test", harness::EVAL_BATCHES)?;
-            let val = perplexity_split(rt, &w, "val", harness::EVAL_BATCHES)?;
+            let (test, val) = ppl_pair(rt, &w, harness::EVAL_BATCHES)?;
             println!(
                 "{} ({:.2}M params, sparsity {:.3}): test {test:.3}  val {val:.3}",
                 w.cfg.name,

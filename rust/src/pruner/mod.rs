@@ -1,11 +1,19 @@
 //! Pruning methods: the paper's Wanda++ family plus every baseline it
-//! compares against (Table 1). All methods emit per-layer {0,1} masks via
-//! the score -> select pipeline; SparseGPT additionally updates surviving
-//! weights (OBS error compensation).
+//! compares against (Table 1), all expressed through the pluggable
+//! [`Scorer`] registry (`scorer.rs`). A [`Recipe`] names the scorer and
+//! toggles the pipeline stages (regional optimization, the SparseGPT OBS
+//! sweep); the historical [`Method`] enum survives as a thin parse/label
+//! shim that maps each paper method onto its recipe.
 
+pub mod scorer;
 pub mod sparsegpt;
 
-use anyhow::Result;
+pub use scorer::{
+    GradBlendScorer, MagnitudeScorer, RiaScorer, ScoreCtx, Scorer,
+    ScorerRegistry, Signals, StadeScorer, WandaScorer,
+};
+
+use anyhow::{anyhow, Result};
 
 use crate::runtime::{Backend, Manifest};
 use crate::sparsity::{select_mask, Pattern};
@@ -76,6 +84,33 @@ impl Method {
         })
     }
 
+    /// The [`Recipe`] this method maps onto: which registered scorer it
+    /// uses and which pipeline stages it enables.
+    ///
+    /// ```
+    /// use wandapp::pruner::Method;
+    /// let r = Method::WandaPP.recipe();
+    /// assert_eq!((r.scorer.as_str(), r.ro, r.obs), ("rgs", true, false));
+    /// assert_eq!(Method::SparseGpt.recipe().obs, true);
+    /// ```
+    pub fn recipe(&self) -> Recipe {
+        let (scorer, ro, obs) = match self {
+            Method::Magnitude => ("magnitude", false, false),
+            Method::Wanda => ("wanda", false, false),
+            Method::SparseGpt => ("wanda", false, true),
+            Method::Gblm => ("gblm", false, false),
+            Method::WandaPPRgs => ("rgs", false, false),
+            Method::WandaPPRo => ("wanda", true, false),
+            Method::WandaPP => ("rgs", true, false),
+        };
+        Recipe {
+            label: self.label().to_string(),
+            scorer: scorer.to_string(),
+            ro,
+            obs,
+        }
+    }
+
     /// Does this method run regional optimization?
     pub fn uses_ro(&self) -> bool {
         matches!(self, Method::WandaPPRo | Method::WandaPP)
@@ -99,10 +134,51 @@ impl Method {
     }
 }
 
+/// A resolved pruning recipe: which scorer to run (by registry name) and
+/// which pipeline stages to enable. The seven paper methods are fixed
+/// recipes (see [`Method::recipe`]); any registered scorer composes into
+/// new ones via [`Recipe::score_only`] / [`Recipe::with_ro`].
+#[derive(Debug, Clone)]
+pub struct Recipe {
+    /// Display label used in reports and tables.
+    pub label: String,
+    /// Registry name of the scorer.
+    pub scorer: String,
+    /// Run regional optimization (paper Eq. 5) after mask selection.
+    pub ro: bool,
+    /// Run the SparseGPT OBS sweep instead of score → select → apply.
+    pub obs: bool,
+}
+
+impl Recipe {
+    /// Score + select + apply, no weight updates.
+    pub fn score_only(scorer: impl Into<String>) -> Self {
+        let scorer = scorer.into();
+        Self { label: scorer.clone(), scorer, ro: false, obs: false }
+    }
+
+    /// Score + select with regional optimization rounds in between.
+    pub fn with_ro(scorer: impl Into<String>) -> Self {
+        let scorer = scorer.into();
+        Self {
+            label: format!("{scorer}+ro"),
+            scorer,
+            ro: true,
+            obs: false,
+        }
+    }
+
+    /// Does this recipe run regional optimization?
+    pub fn uses_ro(&self) -> bool {
+        self.ro
+    }
+}
+
 /// Options controlling a pruning run (paper §5.1 defaults, scaled).
 #[derive(Debug, Clone)]
 pub struct PruneOptions {
-    pub method: Method,
+    /// What to run: the scorer (by registry name) plus stage toggles.
+    pub recipe: Recipe,
     pub pattern: Pattern,
     /// RGS/GBLM gradient scaling (paper Eq. 4; default 100).
     pub alpha: f32,
@@ -123,8 +199,13 @@ pub struct PruneOptions {
 
 impl PruneOptions {
     pub fn new(method: Method, pattern: Pattern) -> Self {
+        Self::for_recipe(method.recipe(), pattern)
+    }
+
+    /// Options for an arbitrary recipe — the open-registry entry point.
+    pub fn for_recipe(recipe: Recipe, pattern: Pattern) -> Self {
         Self {
-            method,
+            recipe,
             pattern,
             alpha: 5.0, // model-specific (paper Table 8); tuned on the ladder
             n_calib: 32,
@@ -138,11 +219,16 @@ impl PruneOptions {
 }
 
 /// Per-layer calibration statistics for one decoder block: the
-/// `||X_j||_2` input norms at the four distinct input sites.
+/// `||X_j||_2` input norms at the four distinct input sites, plus —
+/// when the moments kernel ran — the per-channel first moments std-dev
+/// scorers need.
 #[derive(Debug, Clone)]
 pub struct BlockStats {
     /// Accumulated sum of squares per input channel, 4 sites.
     pub sq: [Tensor; 4],
+    /// Accumulated per-channel sums (first moments), present only when
+    /// the stats pass ran the `block_moments` kernel.
+    pub sum: Option<[Tensor; 4]>,
     /// Number of token positions accumulated.
     pub positions: usize,
 }
@@ -156,6 +242,7 @@ impl BlockStats {
                 Tensor::zeros(&[d]),
                 Tensor::zeros(&[ffn]),
             ],
+            sum: None,
             positions: 0,
         }
     }
@@ -168,6 +255,34 @@ impl BlockStats {
             t.shape.clone(),
             t.data.iter().map(|v| v.max(0.0).sqrt()).collect(),
         )
+    }
+
+    /// Per-channel standard deviation `sqrt(E[X_j^2] - E[X_j]^2)` for the
+    /// site feeding `weight_name`. Errors when first moments were not
+    /// collected (the stats pass runs the moments kernel only for scorers
+    /// whose [`Signals::moments`] is set).
+    pub fn xstd(&self, weight_name: &str) -> Result<Tensor> {
+        let site = crate::stat_site(weight_name);
+        let sums = self.sum.as_ref().ok_or_else(|| {
+            anyhow!(
+                "first-moment statistics for `{weight_name}` were not \
+                 collected (stats pass ran without the moments kernel)"
+            )
+        })?;
+        let n = self.positions.max(1) as f32;
+        let sq = &self.sq[site];
+        let sm = &sums[site];
+        Ok(Tensor::new(
+            sq.shape.clone(),
+            sq.data
+                .iter()
+                .zip(&sm.data)
+                .map(|(q, s)| {
+                    let mean = s / n;
+                    (q / n - mean * mean).max(0.0).sqrt()
+                })
+                .collect(),
+        ))
     }
 }
 
@@ -239,42 +354,6 @@ pub fn mask_from_scores(
     }
 }
 
-/// Score per method. `stats`/`grads` may be unused depending on method.
-pub fn method_score(
-    rt: &dyn Backend,
-    size: &str,
-    method: Method,
-    weight_name: &str,
-    prunable_idx: usize,
-    w: &Tensor,
-    stats: &BlockStats,
-    grads: Option<&BlockGrads>,
-    alpha: f32,
-) -> Result<Tensor> {
-    let zeros_g = || Tensor::zeros(&w.shape);
-    match method {
-        Method::Magnitude => {
-            let ones = Tensor::ones(&[w.cols()]);
-            score_weight(rt, size, weight_name, w, &zeros_g(), &ones, 0.0)
-        }
-        Method::Wanda | Method::WandaPPRo | Method::SparseGpt => {
-            // SparseGPT's *selection* inside the OBS sweep is handled in
-            // sparsegpt.rs; this path covers score-reporting uses.
-            let xn = stats.xnorm(weight_name);
-            score_weight(rt, size, weight_name, w, &zeros_g(), &xn, 0.0)
-        }
-        Method::Gblm | Method::WandaPPRgs | Method::WandaPP => {
-            let xn = stats.xnorm(weight_name);
-            let g = grads
-                .ok_or_else(|| {
-                    anyhow::anyhow!("{} requires gradients", method.label())
-                })?
-                .magnitude(prunable_idx);
-            score_weight(rt, size, weight_name, w, &g, &xn, alpha)
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,11 +377,58 @@ mod tests {
     }
 
     #[test]
+    fn recipes_mirror_the_method_flags() {
+        let reg = ScorerRegistry::with_builtins();
+        for m in Method::all() {
+            let r = m.recipe();
+            assert_eq!(r.label, m.label());
+            assert_eq!(r.uses_ro(), m.uses_ro(), "{}", m.label());
+            assert_eq!(r.obs, m == Method::SparseGpt);
+            let scorer = reg.get(&r.scorer).unwrap();
+            // the recipe's scorer requests gradients iff the method did
+            assert_eq!(
+                scorer.signals().grads,
+                m.uses_gradients(),
+                "{}",
+                m.label()
+            );
+        }
+        assert!(Method::Gblm.recipe().scorer == "gblm");
+    }
+
+    #[test]
+    fn recipe_constructors_label_themselves() {
+        let r = Recipe::score_only("ria");
+        assert_eq!((r.label.as_str(), r.ro, r.obs), ("ria", false, false));
+        let r = Recipe::with_ro("stade");
+        assert_eq!((r.label.as_str(), r.ro), ("stade+ro", true));
+    }
+
+    #[test]
     fn stats_xnorm_sqrt() {
         let mut st = BlockStats::zeros(4, 8);
         st.sq[0] = Tensor::new(vec![4], vec![4.0, 9.0, 16.0, 0.0]);
         let xn = st.xnorm("wq");
         assert_eq!(xn.data, vec![2.0, 3.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn stats_xstd_needs_and_uses_first_moments() {
+        let mut st = BlockStats::zeros(2, 4);
+        assert!(st.xstd("wq").is_err(), "no moments collected");
+        // two positions: channel 0 sees {1, 3}; channel 1 sees {2, 2}
+        st.sq[0] = Tensor::new(vec![2], vec![10.0, 8.0]);
+        st.sum = Some([
+            Tensor::new(vec![2], vec![4.0, 4.0]),
+            Tensor::zeros(&[2]),
+            Tensor::zeros(&[2]),
+            Tensor::zeros(&[4]),
+        ]);
+        st.positions = 2;
+        let std = st.xstd("wq").unwrap();
+        // var = E[x^2] - mean^2: {5 - 4, 4 - 4} = {1, 0}
+        assert!((std.data[0] - 1.0).abs() < 1e-6);
+        assert!(std.data[1].abs() < 1e-6);
     }
 
     #[test]

@@ -1,0 +1,397 @@
+//! Pluggable pruning scores: the [`Scorer`] trait, the [`ScoreCtx`] it
+//! reads from, and the name-keyed [`ScorerRegistry`] that subsumes the
+//! closed `Method` enum. The paper's score family (magnitude, Wanda's
+//! Eq. 1, the RGS blend of Eq. 4, GBLM's full-gradient variant) ships as
+//! built-in registrations; STADE's std-dev metric and RIA-style relative
+//! importance land beside them as proof the surface is open. Out-of-tree
+//! scorers implement [`Scorer`] and register under their own name — the
+//! coordinator pipeline never needs to change.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::pruner::{score_weight, BlockGrads, BlockStats};
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+/// The calibration signals a scorer draws on. The stage pipeline gathers
+/// only what the active scorer requests: gradient passes are skipped for
+/// activation-only scores, and first-moment statistics (needed by std-dev
+/// metrics) are collected through the `block_moments` kernel only when a
+/// scorer asks for them.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Signals {
+    /// Per-site input-activation statistics ([`BlockStats`]). When unset
+    /// (and `moments` too), the stats stage runs a plain forward for the
+    /// dense targets and leaves `ScoreCtx::stats` empty.
+    pub stats: bool,
+    /// Per-weight gradient magnitudes ([`BlockGrads`]).
+    pub grads: bool,
+    /// Gradients must come from the full-model backward (GBLM) rather
+    /// than the regional per-block pass (paper Eq. 3).
+    pub full_grads: bool,
+    /// First-moment (per-channel sum) statistics alongside the squared
+    /// norms — required by std-dev metrics such as STADE.
+    pub moments: bool,
+}
+
+/// Everything a scorer may read when scoring one weight matrix.
+pub struct ScoreCtx<'a> {
+    pub rt: &'a dyn Backend,
+    /// Model-size name (selects the score/mask kernels).
+    pub size: &'a str,
+    /// Prunable weight name (`"wq"` … `"wd"`).
+    pub weight_name: &'a str,
+    /// Index of `weight_name` within [`crate::PRUNABLE`].
+    pub prunable_idx: usize,
+    /// The weight matrix being scored.
+    pub w: &'a Tensor,
+    /// Calibration statistics, when the stats stage ran.
+    pub stats: Option<&'a BlockStats>,
+    /// Gradient magnitudes, when the grads stage ran.
+    pub grads: Option<&'a BlockGrads>,
+    /// Gradient blend factor (paper Eq. 4).
+    pub alpha: f32,
+}
+
+impl<'a> ScoreCtx<'a> {
+    /// The calibration statistics, or a descriptive error when the scorer
+    /// forgot to request them via [`Scorer::signals`].
+    pub fn stats(&self) -> Result<&'a BlockStats> {
+        self.stats.ok_or_else(|| {
+            anyhow!(
+                "scorer needs calibration statistics for `{}` but the \
+                 stats stage did not provide them",
+                self.weight_name
+            )
+        })
+    }
+
+    /// The gradient magnitudes, or a descriptive error when absent.
+    pub fn grads(&self) -> Result<&'a BlockGrads> {
+        self.grads.ok_or_else(|| {
+            anyhow!(
+                "scorer needs gradients for `{}` but the grads stage did \
+                 not provide them (set `Signals::grads`)",
+                self.weight_name
+            )
+        })
+    }
+}
+
+/// A pruning score: maps one weight matrix (plus whatever calibration
+/// signals it requested) to an importance tensor of the same shape.
+/// Higher scores survive mask selection.
+pub trait Scorer: Send + Sync {
+    /// Registry key and default display label.
+    fn name(&self) -> &str;
+
+    /// Which calibration signals [`Scorer::score`] reads.
+    fn signals(&self) -> Signals {
+        Signals::default()
+    }
+
+    /// Score `ctx.w`; the returned tensor must match `ctx.w.shape`.
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor>;
+}
+
+/// `|W|` (Han et al.) — the classical baseline. Runs through the score
+/// kernel with a unit activation norm so the exec path (and therefore the
+/// selected masks) is bit-identical to the historical `Method` path.
+pub struct MagnitudeScorer;
+
+impl Scorer for MagnitudeScorer {
+    fn name(&self) -> &str {
+        "magnitude"
+    }
+
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+        let ones = Tensor::ones(&[ctx.w.cols()]);
+        let zeros = Tensor::zeros(&ctx.w.shape);
+        score_weight(ctx.rt, ctx.size, ctx.weight_name, ctx.w, &zeros, &ones, 0.0)
+    }
+}
+
+/// `|W| * ||X_j||_2` (Sun et al., Eq. 1).
+pub struct WandaScorer;
+
+impl Scorer for WandaScorer {
+    fn name(&self) -> &str {
+        "wanda"
+    }
+
+    fn signals(&self) -> Signals {
+        Signals { stats: true, ..Signals::default() }
+    }
+
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+        let xn = ctx.stats()?.xnorm(ctx.weight_name);
+        let zeros = Tensor::zeros(&ctx.w.shape);
+        score_weight(ctx.rt, ctx.size, ctx.weight_name, ctx.w, &zeros, &xn, 0.0)
+    }
+}
+
+/// `(alpha * G + ||X_j||) * |W|` (paper Eq. 4). One implementation backs
+/// both registrations: `"rgs"` blends the regional per-block gradients
+/// (Eq. 3) and `"gblm"` the full-model gradients (Das et al.) — the
+/// formula is shared, only the gradient source differs.
+pub struct GradBlendScorer {
+    name: &'static str,
+    full: bool,
+}
+
+impl GradBlendScorer {
+    /// The Wanda++ RGS score over regional gradients.
+    pub fn regional() -> Self {
+        Self { name: "rgs", full: false }
+    }
+
+    /// The GBLM score over full-model gradients.
+    pub fn full_model() -> Self {
+        Self { name: "gblm", full: true }
+    }
+}
+
+impl Scorer for GradBlendScorer {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn signals(&self) -> Signals {
+        Signals {
+            stats: true,
+            grads: true,
+            full_grads: self.full,
+            moments: false,
+        }
+    }
+
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+        let xn = ctx.stats()?.xnorm(ctx.weight_name);
+        let g = ctx.grads()?.magnitude(ctx.prunable_idx);
+        score_weight(ctx.rt, ctx.size, ctx.weight_name, ctx.w, &g, &xn, ctx.alpha)
+    }
+}
+
+/// STADE-style std-dev metric: `|W| * std(X_j)` with the per-channel
+/// standard deviation estimated from the same streamed statistics the
+/// Wanda norm uses, plus the first-moment accumulators the
+/// `block_moments` kernel adds (`Signals::moments`).
+pub struct StadeScorer;
+
+impl Scorer for StadeScorer {
+    fn name(&self) -> &str {
+        "stade"
+    }
+
+    fn signals(&self) -> Signals {
+        Signals { stats: true, moments: true, ..Signals::default() }
+    }
+
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+        let xstd = ctx.stats()?.xstd(ctx.weight_name)?;
+        let zeros = Tensor::zeros(&ctx.w.shape);
+        score_weight(ctx.rt, ctx.size, ctx.weight_name, ctx.w, &zeros, &xstd, 0.0)
+    }
+}
+
+/// RIA-style relative importance (Zhang et al.):
+/// `(|W_ij| / sum_j |W_ij| + |W_ij| / sum_i |W_ij|) * ||X_j||^0.5` —
+/// per-weight magnitude normalized by its row and column L1 mass, blended
+/// with the square-rooted activation norm. Computed natively (no kernel):
+/// the registry is exactly for scores the artifact set never anticipated.
+pub struct RiaScorer;
+
+impl Scorer for RiaScorer {
+    fn name(&self) -> &str {
+        "ria"
+    }
+
+    fn signals(&self) -> Signals {
+        Signals { stats: true, ..Signals::default() }
+    }
+
+    fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+        let w = ctx.w;
+        let (rows, cols) = (w.rows(), w.cols());
+        let xn = ctx.stats()?.xnorm(ctx.weight_name);
+        let mut row_sum = vec![0.0f32; rows];
+        let mut col_sum = vec![0.0f32; cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                let a = w.data[i * cols + j].abs();
+                row_sum[i] += a;
+                col_sum[j] += a;
+            }
+        }
+        let mut out = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                let a = w.data[i * cols + j].abs();
+                let rel = a / row_sum[i].max(1e-12) + a / col_sum[j].max(1e-12);
+                out.push(rel * xn.data[j].max(0.0).sqrt());
+            }
+        }
+        Ok(Tensor::new(w.shape.clone(), out))
+    }
+}
+
+/// Name-keyed scorer registry. [`ScorerRegistry::with_builtins`] registers
+/// the paper's score family plus STADE and RIA; [`ScorerRegistry::register`]
+/// adds (or overrides) out-of-tree scorers.
+pub struct ScorerRegistry {
+    map: HashMap<String, Arc<dyn Scorer>>,
+}
+
+impl ScorerRegistry {
+    /// A registry with no scorers at all.
+    pub fn empty() -> Self {
+        Self { map: HashMap::new() }
+    }
+
+    /// The built-in scorers: `magnitude`, `wanda`, `rgs`, `gblm`,
+    /// `stade`, `ria`.
+    pub fn with_builtins() -> Self {
+        let mut reg = Self::empty();
+        reg.register(Arc::new(MagnitudeScorer));
+        reg.register(Arc::new(WandaScorer));
+        reg.register(Arc::new(GradBlendScorer::regional()));
+        reg.register(Arc::new(GradBlendScorer::full_model()));
+        reg.register(Arc::new(StadeScorer));
+        reg.register(Arc::new(RiaScorer));
+        reg
+    }
+
+    /// Register `scorer` under [`Scorer::name`], replacing any previous
+    /// scorer with that name.
+    pub fn register(&mut self, scorer: Arc<dyn Scorer>) {
+        self.map.insert(scorer.name().to_string(), scorer);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Scorer>> {
+        self.map.get(name).cloned().ok_or_else(|| {
+            anyhow!(
+                "unknown scorer `{name}` (registered: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.map.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+impl Default for ScorerRegistry {
+    fn default() -> Self {
+        Self::with_builtins()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_the_paper_family_and_the_new_scorers() {
+        let reg = ScorerRegistry::with_builtins();
+        for name in ["magnitude", "wanda", "rgs", "gblm", "stade", "ria"] {
+            assert!(reg.contains(name), "{name} missing");
+            assert_eq!(reg.get(name).unwrap().name(), name);
+        }
+        assert!(reg.get("nope").is_err());
+        assert_eq!(reg.names().len(), 6);
+    }
+
+    #[test]
+    fn registry_overrides_by_name() {
+        struct Custom;
+        impl Scorer for Custom {
+            fn name(&self) -> &str {
+                "wanda"
+            }
+            fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+                Ok(ctx.w.clone())
+            }
+        }
+        let mut reg = ScorerRegistry::with_builtins();
+        reg.register(Arc::new(Custom));
+        assert_eq!(reg.names().len(), 6, "override must not duplicate");
+        // the override is signal-free, unlike the built-in wanda
+        assert_eq!(reg.get("wanda").unwrap().signals(), Signals::default());
+    }
+
+    #[test]
+    fn gradient_scorers_declare_their_sources() {
+        assert!(GradBlendScorer::regional().signals().grads);
+        assert!(!GradBlendScorer::regional().signals().full_grads);
+        assert!(GradBlendScorer::full_model().signals().full_grads);
+        assert!(StadeScorer.signals().moments);
+        assert!(!WandaScorer.signals().moments);
+    }
+
+    #[test]
+    fn ria_score_matches_formula() {
+        let w = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, 4.0]);
+        let mut st = BlockStats::zeros(2, 4);
+        st.sq[0] = Tensor::new(vec![2], vec![4.0, 16.0]); // xnorm 2, 4
+        st.positions = 1;
+        let rt = crate::runtime::NativeBackend::new(
+            std::env::temp_dir().join("wandapp_scorer_test"),
+        )
+        .unwrap();
+        let ctx = ScoreCtx {
+            rt: &rt,
+            size: "s0",
+            weight_name: "wq",
+            prunable_idx: 0,
+            w: &w,
+            stats: Some(&st),
+            grads: None,
+            alpha: 0.0,
+        };
+        let s = RiaScorer.score(&ctx).unwrap();
+        // row sums: 3, 7; col sums: 4, 6; xnorm^0.5: sqrt(2), 2
+        let want = [
+            (1.0 / 3.0 + 1.0 / 4.0) * 2.0f32.sqrt(),
+            (2.0 / 3.0 + 2.0 / 6.0) * 2.0,
+            (3.0 / 7.0 + 3.0 / 4.0) * 2.0f32.sqrt(),
+            (4.0 / 7.0 + 4.0 / 6.0) * 2.0,
+        ];
+        for (got, want) in s.data.iter().zip(want) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn missing_signals_error_clearly() {
+        let rt = crate::runtime::NativeBackend::new(
+            std::env::temp_dir().join("wandapp_scorer_test"),
+        )
+        .unwrap();
+        let w = Tensor::ones(&[2, 2]);
+        let ctx = ScoreCtx {
+            rt: &rt,
+            size: "s0",
+            weight_name: "wq",
+            prunable_idx: 0,
+            w: &w,
+            stats: None,
+            grads: None,
+            alpha: 1.0,
+        };
+        let err = WandaScorer.score(&ctx).unwrap_err().to_string();
+        assert!(err.contains("statistics"), "{err}");
+        let err = ctx.grads().unwrap_err().to_string();
+        assert!(err.contains("grads"), "{err}");
+    }
+}

@@ -391,6 +391,32 @@ pub fn site_squares(cache: &BlockCache, dims: Dims) -> [Vec<f32>; 4] {
     sq
 }
 
+/// The four calibration-site per-channel activation sums (first moments)
+/// of `block_moments` — the companion to [`site_squares`] that std-dev
+/// scoring metrics (STADE) need to form `E[X]` alongside `E[X^2]`.
+pub fn site_sums(cache: &BlockCache, dims: Dims) -> [Vec<f32>; 4] {
+    let (d, f) = (dims.d, dims.ffn);
+    let n = dims.positions();
+    let mut sums = [
+        vec![0.0f32; d],
+        vec![0.0f32; d],
+        vec![0.0f32; d],
+        vec![0.0f32; f],
+    ];
+    let act = cache.act();
+    for p in 0..n {
+        for j in 0..d {
+            sums[0][j] += cache.xn[p * d + j];
+            sums[1][j] += cache.attn[p * d + j];
+            sums[2][j] += cache.xm[p * d + j];
+        }
+        for j in 0..f {
+            sums[3][j] += act[p * f + j];
+        }
+    }
+    sums
+}
+
 /// The four Gram matrices of `block_hessian`:
 /// `(h_qkv, h_o, h_mlp, h_down)` — `X^T X` at each linear input site.
 pub fn site_grams(cache: &BlockCache, dims: Dims) -> [Vec<f32>; 4] {
@@ -591,5 +617,22 @@ mod tests {
         let total: f32 = sq[0].iter().sum();
         assert!((manual - total).abs() < 1e-3);
         assert_eq!(sq[3].len(), dm.ffn);
+    }
+
+    #[test]
+    fn site_sums_match_cache() {
+        let dm = dims();
+        let p = Params::random(7, dm);
+        let mut rng = Rng::seed_from_u64(8);
+        let x = rand_vec(&mut rng, dm.positions() * dm.d, 0.5);
+        let (_, cache) = block_forward(&x, p.weights(), dm);
+        let sums = site_sums(&cache, dm);
+        let manual: f32 = cache.xn.iter().sum();
+        let total: f32 = sums[0].iter().sum();
+        assert!((manual - total).abs() < 1e-3);
+        let manual2: f32 = cache.xm.iter().sum();
+        let total2: f32 = sums[2].iter().sum();
+        assert!((manual2 - total2).abs() < 1e-3);
+        assert_eq!(sums[3].len(), dm.ffn);
     }
 }

@@ -8,7 +8,9 @@
 //! (`{size}_block_fwd_t{t}`, `{size}_score_{tag}`, `{size}_mask24_{tag}`,
 //! `{size}_ro_step_t{t}`, `{size}_full_grad`, …; full list in DESIGN.md
 //! §8), so the coordinator, pruner, eval and harness run unchanged on
-//! either backend.
+//! either backend. The native backend additionally provides
+//! `{size}_block_moments_t{t}` — a superset of `block_stats` that also
+//! emits per-channel first moments for std-dev scorers.
 
 pub mod block;
 pub mod math;
@@ -25,14 +27,12 @@ use crate::sparsity::nm_mask_native;
 use crate::tensor::{Tensor, TensorI32, Value, ValueView};
 
 use block::{
-    block_backward, block_forward, site_grams, site_squares, BlockWeights,
-    Dims,
+    block_backward, block_forward, site_grams, site_squares, site_sums,
+    BlockWeights, Dims,
 };
 use math::{par_map, rmsprop_update};
 
-/// Indices of the seven prunable weights within the 9-parameter canonical
-/// block order (`crate::BLOCK_PARAMS`): wq wk wv wo wg wu wd.
-const PRUNABLE_IDX: [usize; 7] = [1, 2, 3, 4, 6, 7, 8];
+use crate::{PARAM_PRUNABLE_IDX, PRUNABLE_PARAM_IDX};
 
 /// Pure-Rust implementation of every manifest kernel.
 pub struct NativeBackend {
@@ -45,6 +45,7 @@ pub struct NativeBackend {
 enum Kernel {
     BlockFwd(usize),
     BlockStats(usize),
+    BlockMoments(usize),
     BlockHessian(usize),
     RgsGrad(usize),
     RoStep(usize),
@@ -100,6 +101,9 @@ impl NativeBackend {
         }
         if let Some(t) = seq(kernel, "block_stats_t") {
             return Some(Kernel::BlockStats(t));
+        }
+        if let Some(t) = seq(kernel, "block_moments_t") {
+            return Some(Kernel::BlockMoments(t));
         }
         if let Some(t) = seq(kernel, "block_hessian_t") {
             return Some(Kernel::BlockHessian(t));
@@ -287,6 +291,7 @@ impl NativeBackend {
         match kernel {
             Kernel::BlockFwd(_)
             | Kernel::BlockStats(_)
+            | Kernel::BlockMoments(_)
             | Kernel::BlockHessian(_)
             | Kernel::RgsGrad(_) => 10, // x + 9 params
             Kernel::RoStep(_) => 28,    // x, dense_y, 9 bp, 7 masks, 9 v, lr
@@ -359,6 +364,30 @@ impl NativeBackend {
                     Value::F32(Tensor::new(vec![info.d], s1)),
                     Value::F32(Tensor::new(vec![info.d], s2)),
                     Value::F32(Tensor::new(vec![info.ffn], s3)),
+                ])
+            }
+            Kernel::BlockMoments(t) => {
+                // Superset of `block_stats`: the same forward + squared
+                // norms, plus the per-channel first moments std-dev
+                // scorers (STADE) consume.
+                let x = Self::f32_in(key, inputs, 0)?;
+                let dims = Self::block_dims(key, info, x, t)?;
+                let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                let (y, cache) = block_forward(&x.data, w, dims);
+                let [s0, s1, s2, s3] = site_squares(&cache, dims);
+                let [m0, m1, m2, m3] = site_sums(&cache, dims);
+                Ok(vec![
+                    Value::F32(Tensor::new(x.shape.clone(), y)),
+                    Value::F32(Tensor::new(vec![info.d], s0)),
+                    Value::F32(Tensor::new(vec![info.d], s1)),
+                    Value::F32(Tensor::new(vec![info.d], s2)),
+                    Value::F32(Tensor::new(vec![info.ffn], s3)),
+                    Value::F32(Tensor::new(vec![info.d], m0)),
+                    Value::F32(Tensor::new(vec![info.d], m1)),
+                    Value::F32(Tensor::new(vec![info.d], m2)),
+                    Value::F32(Tensor::new(vec![info.ffn], m3)),
                 ])
             }
             Kernel::BlockHessian(t) => {
@@ -585,7 +614,7 @@ impl NativeBackend {
         let lr = Self::scalar_in(key, inputs, 27, "lr")?;
         // Masks mirror the prunable weights; v-state mirrors all params.
         for (pi, mask) in masks.iter().enumerate() {
-            let want = bp[PRUNABLE_IDX[pi]].len();
+            let want = bp[PRUNABLE_PARAM_IDX[pi]].len();
             if mask.len() != want {
                 bail!(
                     "{key}: mask {pi} has {} elements, expects {want}",
@@ -607,7 +636,7 @@ impl NativeBackend {
         // (the Pallas masked-GEMM path in python).
         let mut eff: Vec<Vec<f32>> = Vec::with_capacity(9);
         for (i, w) in bp.iter().enumerate() {
-            if let Some(pi) = PRUNABLE_IDX.iter().position(|p| *p == i) {
+            if let Some(pi) = PARAM_PRUNABLE_IDX[i] {
                 eff.push(
                     w.iter().zip(masks[pi]).map(|(a, m)| a * m).collect(),
                 );
@@ -635,7 +664,7 @@ impl NativeBackend {
         let mut new_bp = Vec::with_capacity(9);
         let mut new_v = Vec::with_capacity(9);
         for i in 0..9 {
-            let pi = PRUNABLE_IDX.iter().position(|p| *p == i);
+            let pi = PARAM_PRUNABLE_IDX[i];
             // d(w*mask)/dw = mask: the weight gradient carries the mask.
             let g: Vec<f32> = match pi {
                 Some(pi) => grads[i]
@@ -824,6 +853,7 @@ impl Backend for NativeBackend {
         match kernel {
             Kernel::BlockFwd(t)
             | Kernel::BlockStats(t)
+            | Kernel::BlockMoments(t)
             | Kernel::RgsGrad(t)
             | Kernel::RoStep(t) => info.seq_variants.contains(&t),
             // Emitted only at the default context, like the artifacts.
@@ -890,6 +920,8 @@ mod tests {
         assert!(rt.supports("s0_block_fwd_t64"));
         assert!(rt.supports("s0_block_fwd_t8")); // s0 has ctx variants
         assert!(!rt.supports("s1_block_fwd_t8")); // others do not
+        assert!(rt.supports("s0_block_moments_t8"));
+        assert!(!rt.supports("s1_block_moments_t8"));
         assert!(rt.supports("s2_score_sq"));
         assert!(rt.supports("s2_mask24_fd"));
         assert!(rt.supports("s2_full_grad")); // primary only

@@ -6,12 +6,17 @@
 //! method ordering) additionally require the pretrained weight files and
 //! are skipped when absent.
 
-use wandapp::coordinator::Coordinator;
+use std::sync::Arc;
+
+use wandapp::coordinator::{Coordinator, PruneSession};
 use wandapp::eval::{perplexity_split, run_tasks};
 use wandapp::model::{load_size, Weights};
-use wandapp::pruner::{Method, PruneOptions};
+use wandapp::pruner::{
+    Method, PruneOptions, Recipe, ScoreCtx, Scorer,
+};
 use wandapp::runtime::Backend;
 use wandapp::sparsity::{is_nm, Pattern};
+use wandapp::tensor::Tensor;
 
 fn artifacts_dir() -> String {
     concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
@@ -307,6 +312,132 @@ fn wanda_score_reduces_to_paper_eq1() {
     Coordinator::new(rt).prune(&mut w, &opts).unwrap();
     Coordinator::new(rt).prune(&mut w2, &opts2).unwrap();
     assert_eq!(w.get("blocks.0.wq").data, w2.get("blocks.0.wq").data);
+}
+
+/// Golden-mask parity: for every paper method, the registry-built scorer
+/// driven through `PruneSession` must produce bit-identical pruned
+/// weights to the `Method`-labelled path through `Coordinator::prune`
+/// (which is also how the pre-refactor monolith was invoked) on fixed
+/// seeds — including the shared-calibration reuse inside the session.
+#[test]
+fn registry_scorers_match_method_paths_bit_exact() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let mut session = PruneSession::builder(rt).size("s0").build().unwrap();
+    for method in [
+        Method::Magnitude,
+        Method::Wanda,
+        Method::SparseGpt,
+        Method::WandaPPRgs,
+        Method::WandaPPRo,
+        Method::WandaPP,
+    ] {
+        let opts = quick_opts(method, Pattern::NofM(2, 4));
+        let mut w1 = load_size(rt, "s0").unwrap();
+        Coordinator::new(rt).prune(&mut w1, &opts).unwrap();
+        let out = session.run(&opts).unwrap();
+        for li in 0..w1.cfg.n_layers {
+            for name in wandapp::BLOCK_PARAMS {
+                let key = Weights::block_name(li, name);
+                assert_eq!(
+                    w1.get(&key).data,
+                    out.weights.get(&key).data,
+                    "{} diverged at {key}",
+                    method.label()
+                );
+            }
+        }
+    }
+    assert_eq!(session.calib_builds(), 1, "one build for all six methods");
+}
+
+/// GBLM runs on the primary size only; its session path must also match
+/// the one-shot path bit-exactly (the full-model gradients are cached by
+/// the session but computed from the same dense weights).
+#[test]
+fn gblm_registry_path_matches_method_path() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let mut opts = quick_opts(Method::Gblm, Pattern::NofM(2, 4));
+    opts.n_calib = 8;
+    let mut w1 = load_size(rt, "s2").unwrap();
+    Coordinator::new(rt).prune(&mut w1, &opts).unwrap();
+    let mut session = PruneSession::builder(rt).size("s2").build().unwrap();
+    let out = session.run(&opts).unwrap();
+    assert_eq!(
+        w1.get("blocks.0.wq").data,
+        out.weights.get("blocks.0.wq").data
+    );
+    assert_eq!(
+        w1.get("blocks.3.wd").data,
+        out.weights.get("blocks.3.wd").data
+    );
+}
+
+/// The registry is open: a scorer the paper never heard of registers,
+/// resolves by name, and prunes end-to-end through the session.
+#[test]
+fn custom_scorer_registers_and_prunes_end_to_end() {
+    /// Keeps the *smallest* weights — deliberately anti-magnitude.
+    struct SmallestWeights;
+    impl Scorer for SmallestWeights {
+        fn name(&self) -> &str {
+            "smallest"
+        }
+        fn score(&self, ctx: &ScoreCtx) -> wandapp::Result<Tensor> {
+            Ok(Tensor::new(
+                ctx.w.shape.clone(),
+                ctx.w.data.iter().map(|v| -v.abs()).collect(),
+            ))
+        }
+    }
+
+    let rt = rt();
+    let rt = rt.as_ref();
+    let mut session = PruneSession::builder(rt)
+        .size("s0")
+        .scorer(Arc::new(SmallestWeights))
+        .build()
+        .unwrap();
+    let mut opts = PruneOptions::for_recipe(
+        Recipe::score_only("smallest"),
+        Pattern::NofM(2, 4),
+    );
+    opts.n_calib = 16;
+    let out = session.run(&opts).unwrap();
+    assert!((out.report.final_sparsity - 0.5).abs() < 1e-6);
+    assert_eq!(out.report.method, "smallest");
+
+    // Inverse-magnitude keeps what magnitude drops: within any 2:4 group
+    // both can't survive, so the pruned weights must differ.
+    let (_, mag) = prune_ppl(rt, Method::Magnitude, Pattern::NofM(2, 4));
+    assert_ne!(
+        out.weights.get("blocks.0.wq").data,
+        mag.get("blocks.0.wq").data
+    );
+}
+
+/// The two post-paper built-ins (STADE's std-dev metric, RIA-style
+/// relative importance) prune to target through the same pipeline.
+#[test]
+fn stade_and_ria_prune_to_target_sparsity() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let mut session = PruneSession::builder(rt).size("s0").build().unwrap();
+    for name in ["stade", "ria"] {
+        let mut opts = PruneOptions::for_recipe(
+            Recipe::score_only(name),
+            Pattern::NofM(2, 4),
+        );
+        opts.n_calib = 16;
+        let out = session.run(&opts).unwrap();
+        assert!(
+            (out.report.final_sparsity - 0.5).abs() < 1e-6,
+            "{name}: {}",
+            out.report.final_sparsity
+        );
+    }
+    assert_eq!(session.calib_builds(), 1);
 }
 
 #[test]

@@ -289,6 +289,43 @@ fn ro_steps_descend_on_fixed_mask() {
     assert!(losses.iter().all(|l| l.is_finite()));
 }
 
+/// `block_moments` is a strict superset of `block_stats`: identical y
+/// and squared-norm outputs, plus four first-moment outputs that must be
+/// consistent with the squares (Cauchy–Schwarz per channel).
+#[test]
+fn block_moments_kernel_extends_stats() {
+    let rt = bare_backend();
+    let info = rt.manifest().sizes["s0"].clone();
+    let (t, b) = (8usize, 2usize);
+    let w = load_size(&rt, "s0").unwrap();
+    let mut rng = Rng::seed_from_u64(14);
+    let x = rand_tensor(&mut rng, &[b, t, info.d], 0.5);
+    let mut inputs: Vec<Value> = vec![x.into()];
+    for p in w.block(0) {
+        inputs.push(p.clone().into());
+    }
+    let stats = rt.exec_f32("s0_block_stats_t8", &inputs).unwrap();
+    let moments = rt.exec_f32("s0_block_moments_t8", &inputs).unwrap();
+    assert_eq!(stats.len(), 5);
+    assert_eq!(moments.len(), 9);
+    for i in 0..5 {
+        assert_eq!(stats[i].data, moments[i].data, "output {i}");
+    }
+    let n = (b * t) as f32;
+    for site in 0..4 {
+        let sq = &moments[1 + site];
+        let sums = &moments[5 + site];
+        assert_eq!(sums.shape, sq.shape, "site {site}");
+        for (s, q) in sums.data.iter().zip(&sq.data) {
+            // (sum x)^2 <= N * sum x^2, so the derived variance is >= 0
+            assert!(
+                s * s <= n * q * 1.0001 + 1e-4,
+                "site {site}: sum {s} sq {q}"
+            );
+        }
+    }
+}
+
 /// The acceptance run: a bare checkout (no artifacts/, no Python) prunes
 /// and evaluates end-to-end on the native backend.
 #[test]

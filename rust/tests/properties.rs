@@ -4,6 +4,9 @@
 //! JSON round-trips, and backend-kernel/native cross-checks.
 
 use wandapp::json::Json;
+use wandapp::pruner::{
+    BlockStats, RiaScorer, ScoreCtx, Scorer, StadeScorer,
+};
 use wandapp::rng::Rng;
 use wandapp::runtime::Backend;
 use wandapp::sparsity::{
@@ -227,6 +230,120 @@ fn prop_backend_nm_kernel_matches_native() {
                 .remove(0);
             let native = nm_mask_native(&s, n, m);
             assert_eq!(kernel.data, native.data, "case {case} {n}:{m}");
+        }
+    }
+}
+
+/// RIA's native score against the written-out formula on random inputs.
+#[test]
+fn prop_ria_scorer_matches_formula() {
+    let rt = backend();
+    let rt = rt.as_ref();
+    let d = rt.manifest().sizes["s0"].d;
+    let mut rng = Rng::seed_from_u64(1100);
+    for _ in 0..8 {
+        let w = Tensor::new(
+            vec![d, d],
+            (0..d * d).map(|_| rng.gen_normal()).collect(),
+        );
+        let mut st = BlockStats::zeros(d, rt.manifest().sizes["s0"].ffn);
+        st.sq[0] = Tensor::new(
+            vec![d],
+            (0..d).map(|_| rng.gen_f32() * 9.0).collect(),
+        );
+        st.positions = 16;
+        let ctx = ScoreCtx {
+            rt,
+            size: "s0",
+            weight_name: "wq",
+            prunable_idx: 0,
+            w: &w,
+            stats: Some(&st),
+            grads: None,
+            alpha: 0.0,
+        };
+        let s = RiaScorer.score(&ctx).unwrap();
+        let xn = st.xnorm("wq");
+        let mut row_sum = vec![0.0f32; d];
+        let mut col_sum = vec![0.0f32; d];
+        for i in 0..d {
+            for j in 0..d {
+                let a = w.data[i * d + j].abs();
+                row_sum[i] += a;
+                col_sum[j] += a;
+            }
+        }
+        for i in 0..d {
+            for j in 0..d {
+                let a = w.data[i * d + j].abs();
+                let want = (a / row_sum[i].max(1e-12)
+                    + a / col_sum[j].max(1e-12))
+                    * xn.data[j].sqrt();
+                let got = s.data[i * d + j];
+                assert!(
+                    (want - got).abs() <= 1e-5 * want.abs().max(1e-5),
+                    "({i},{j}): want {want} got {got}"
+                );
+            }
+        }
+    }
+}
+
+/// STADE reduces to |W| * std(X_j): with first moments supplied, the
+/// scorer must match the elementwise formula (via the score kernel).
+#[test]
+fn prop_stade_scorer_matches_formula() {
+    let rt = backend();
+    let rt = rt.as_ref();
+    let d = rt.manifest().sizes["s0"].d;
+    let ffn = rt.manifest().sizes["s0"].ffn;
+    let mut rng = Rng::seed_from_u64(1200);
+    for _ in 0..6 {
+        let w = Tensor::new(
+            vec![d, d],
+            (0..d * d).map(|_| rng.gen_normal()).collect(),
+        );
+        let n = 32usize;
+        let mut st = BlockStats::zeros(d, ffn);
+        st.positions = n;
+        // per-channel sums and squared sums from synthetic activations
+        st.sq[0] = Tensor::new(
+            vec![d],
+            (0..d).map(|_| rng.gen_f32() * n as f32).collect(),
+        );
+        st.sum = Some([
+            Tensor::new(
+                vec![d],
+                (0..d).map(|_| (rng.gen_f32() - 0.5) * n as f32).collect(),
+            ),
+            Tensor::zeros(&[d]),
+            Tensor::zeros(&[d]),
+            Tensor::zeros(&[ffn]),
+        ]);
+        let ctx = ScoreCtx {
+            rt,
+            size: "s0",
+            weight_name: "wq",
+            prunable_idx: 0,
+            w: &w,
+            stats: Some(&st),
+            grads: None,
+            alpha: 123.0, // must be ignored by a gradient-free scorer
+        };
+        let s = StadeScorer.score(&ctx).unwrap();
+        let sums = st.sum.as_ref().unwrap();
+        for i in 0..d {
+            for j in 0..d {
+                let mean = sums[0].data[j] / n as f32;
+                let var = (st.sq[0].data[j] / n as f32 - mean * mean)
+                    .max(0.0);
+                let want = w.data[i * d + j].abs() * var.sqrt();
+                let got = s.data[i * d + j];
+                assert!(
+                    (want - got).abs() <= 1e-4 * want.abs().max(1e-4),
+                    "({i},{j}): want {want} got {got}"
+                );
+            }
         }
     }
 }
