@@ -74,6 +74,59 @@ fn main() {
         assert_eq!(session.calib_builds(), 1);
     });
 
+    // --- weight-fabric residency: CoW clone vs full materialization,
+    // per-run deep-copy accounting, and the streaming file→file path ----
+    let template = load_size(rt, "s0").unwrap();
+    let model_bytes = template.param_count() * 4;
+    let prunable_bytes = template.prunable_count() * 4;
+    let mut grp = Group::new("weight fabric (s0)").budget(3.0);
+    grp.bench("cow_clone_template", || {
+        // O(tensor count) Arc bumps — no buffer copies.
+        std::hint::black_box(template.clone());
+    });
+    grp.bench("deep_materialize_template", || {
+        // The pre-fabric cost shape: touch every tensor so copy-on-write
+        // materializes the whole model.
+        let mut c = template.clone();
+        for (name, _) in template.iter() {
+            let t = c.get_mut(name);
+            let v = t.data[0];
+            t.data[0] = std::hint::black_box(v);
+        }
+        std::hint::black_box(&c);
+    });
+
+    let mut grp = Group::new("2-method sweep residency (s0)").budget(8.0);
+    grp.bench("session_sweep_cow", || {
+        let mut session =
+            PruneSession::builder(rt).size("s0").build().unwrap();
+        for method in [Method::Magnitude, Method::Wanda] {
+            let mut opts = PruneOptions::new(method, Pattern::NofM(2, 4));
+            opts.n_calib = 16;
+            let out = session.run(&opts).unwrap();
+            assert!(
+                out.report.bytes_deep_copied <= prunable_bytes,
+                "a run must not deep-copy beyond the prunable params"
+            );
+        }
+    });
+    let stream_src = std::env::temp_dir().join("wandapp_bench_stream_src.bin");
+    let stream_dst = std::env::temp_dir().join("wandapp_bench_stream_dst.bin");
+    template.save(&stream_src).unwrap();
+    grp.bench("streaming_file_to_file", || {
+        let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+        opts.n_calib = 16;
+        let rep = Coordinator::new(rt)
+            .prune_streaming(&stream_src, &stream_dst, &opts)
+            .unwrap();
+        assert!(
+            rep.memory.model_resident < model_bytes / 2,
+            "streaming must hold ~one block, not the model"
+        );
+    });
+    std::fs::remove_file(&stream_src).ok();
+    std::fs::remove_file(&stream_dst).ok();
+
     // --- SparseGPT OBS solve (native linalg) ------------------------------
     let d = 128;
     let mut h = Tensor::zeros(&[d, d]);

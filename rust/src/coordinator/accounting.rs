@@ -6,7 +6,7 @@
 //! asymmetry the paper's regional design removes.
 
 use crate::coordinator::BlockReport;
-use crate::model::{ModelConfig, Weights};
+use crate::model::ModelConfig;
 use crate::pruner::{BlockGrads, PruneOptions};
 use crate::tensor::Tensor;
 
@@ -22,11 +22,34 @@ pub struct MemoryBreakdown {
     pub hessians: usize,
     /// Full model + full-gradient accumulators (GBLM only).
     pub full_model: usize,
+    /// Peak bytes of model weights the run's fabric held resident: the
+    /// whole model on the resident path, one block when streaming
+    /// (DESIGN.md §11).
+    pub model_resident: usize,
 }
 
 impl MemoryBreakdown {
+    /// Transient working set of the pipeline (calibration + per-block
+    /// state + method extras). The fabric's model weights are counted
+    /// separately via `model_resident` — except GBLM's `full_model`
+    /// term, which by definition includes the dense model its backward
+    /// holds.
     pub fn peak(&self) -> usize {
         self.calibration + self.block_peak + self.hessians + self.full_model
+    }
+
+    /// Everything resident at peak: working set plus the model weights
+    /// the fabric held. The headline number for residency benches. When
+    /// the GBLM `full_model` term is present it already contains the
+    /// dense model, and the fabric's working copy shares its buffers
+    /// with it (copy-on-write), so `model_resident` is not added a
+    /// second time.
+    pub fn resident_peak(&self) -> usize {
+        if self.full_model > 0 {
+            self.peak()
+        } else {
+            self.peak() + self.model_resident
+        }
     }
 }
 
@@ -38,6 +61,15 @@ pub struct PruneReport {
     pub model: String,
     pub secs: f64,
     pub memory: MemoryBreakdown,
+    /// Model-parameter bytes this run materialized fresh: checked-in
+    /// tensors whose buffer no longer shares with the stored one. With
+    /// the copy-on-write fabric this is bounded by the block parameters
+    /// the run rewrites — exactly the prunable matrices for score-only
+    /// runs, all nine per-block params (the RMSProp step refreshes the
+    /// norm vectors too) under RO — never a whole-model deep copy.
+    /// Streaming runs report 0: blocks load fresh from disk and stream
+    /// out, there is no shared template to copy from (DESIGN.md §11).
+    pub bytes_deep_copied: usize,
     pub blocks: Vec<BlockReport>,
     pub final_sparsity: f64,
 }
@@ -50,6 +82,7 @@ impl PruneReport {
             model: cfg.name.clone(),
             secs: 0.0,
             memory: MemoryBreakdown::default(),
+            bytes_deep_copied: 0,
             blocks: Vec::new(),
             final_sparsity: 0.0,
         }
@@ -87,11 +120,11 @@ impl PruneReport {
         self.memory.hessians = self.memory.hessians.max(grams + chol);
     }
 
-    pub fn account_full_model(&mut self, w: &Weights) {
+    pub fn account_full_model(&mut self, cfg: &ModelConfig) {
         // GBLM: the whole model resident + one sq-grad accumulator per
         // prunable matrix.
-        let model: usize = w.param_count() * F32;
-        let grads: usize = w.prunable_count() * F32;
+        let model: usize = cfg.param_count() * F32;
+        let grads: usize = cfg.prunable_count() * F32;
         self.memory.full_model = model + grads;
     }
 
@@ -111,12 +144,15 @@ impl PruneReport {
 
     pub fn summary(&self) -> String {
         format!(
-            "{} {} on {}: {:.1}s, peak {:.1} MiB, sparsity {:.3}",
+            "{} {} on {}: {:.1}s, peak {:.1} MiB resident ({:.1} MiB \
+             working set, {:.1} MiB deep-copied), sparsity {:.3}",
             self.method,
             self.pattern,
             self.model,
             self.secs,
+            self.memory.resident_peak() as f64 / (1 << 20) as f64,
             self.memory.peak() as f64 / (1 << 20) as f64,
+            self.bytes_deep_copied as f64 / (1 << 20) as f64,
             self.final_sparsity
         )
     }
@@ -164,25 +200,23 @@ mod tests {
         );
         let bp = vec![Tensor::zeros(&[8, 8]); 9];
         r.account_block(&bp, None);
-        let w = {
-            let mut map = std::collections::HashMap::new();
-            map.insert("embed".into(), Tensor::zeros(&[32, 8]));
-            for i in 0..2 {
-                for k in crate::BLOCK_PARAMS {
-                    let shape: Vec<usize> = match k {
-                        "ln1" | "ln2" => vec![8],
-                        "wg" | "wu" => vec![16, 8],
-                        "wd" => vec![8, 16],
-                        _ => vec![8, 8],
-                    };
-                    map.insert(format!("blocks.{i}.{k}"), Tensor::zeros(&shape));
-                }
-            }
-            map.insert("ln_f".into(), Tensor::zeros(&[8]));
-            map.insert("head".into(), Tensor::zeros(&[32, 8]));
-            Weights { cfg: cfg(), map }
-        };
-        r.account_full_model(&w);
+        r.account_full_model(&cfg());
         assert!(r.memory.full_model > r.memory.block_peak);
+    }
+
+    #[test]
+    fn resident_peak_adds_the_fabric_term() {
+        let mut r = PruneReport::new(
+            &PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4)),
+            &cfg(),
+        );
+        r.account_block(&[Tensor::zeros(&[8, 8])], None);
+        assert_eq!(r.memory.resident_peak(), r.memory.peak());
+        r.memory.model_resident = 1000;
+        assert_eq!(r.memory.resident_peak(), r.memory.peak() + 1000);
+        // GBLM's full_model term already holds the dense model; the
+        // fabric's CoW working copy must not be double-counted.
+        r.account_full_model(&cfg());
+        assert_eq!(r.memory.resident_peak(), r.memory.peak());
     }
 }

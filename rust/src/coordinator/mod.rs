@@ -5,9 +5,14 @@
 //! (stats → grads → select → ro → apply, see [`stages`]) and the *pruned*
 //! hidden states propagate to the next block.
 //!
-//! Two entry points share the pipeline:
+//! Three entry points share the pipeline:
 //! - [`Coordinator::prune`] — one-shot: builds its own calibration
-//!   stream, resolves the recipe against the built-in registry.
+//!   stream, resolves the recipe against the built-in registry, prunes a
+//!   resident model in place.
+//! - [`Coordinator::prune_streaming`] — one-shot file→file: blocks check
+//!   out of a [`WeightStore`](crate::model::WeightStore) lazily and the
+//!   pruned model streams to disk as each block finishes, so fresh
+//!   memory stays O(one block + calibration) (DESIGN.md §11).
 //! - [`PruneSession`] — long-lived: owns the weights, a scorer registry
 //!   (open to out-of-tree [`Scorer`](crate::pruner::Scorer)s) and a
 //!   [`CalibCache`] shared across runs.
@@ -22,9 +27,14 @@ pub use session::{
 };
 pub use stages::{stages_for, BlockStage, StageCtx};
 
+use std::path::Path;
+
 use anyhow::{anyhow, Result};
 
-use crate::model::{load_corpus, sample_windows, Weights};
+use crate::model::{
+    load_corpus, sample_windows, ModelConfig, ResidentFabric,
+    StreamingFabric, WeightStore, Weights,
+};
 use crate::pruner::{BlockGrads, PruneOptions, ScorerRegistry};
 use crate::runtime::Backend;
 use crate::tensor::{Tensor, TensorI32, ValueView};
@@ -60,6 +70,18 @@ pub fn build_calib_stream(
     w: &Weights,
     opts: &PruneOptions,
 ) -> Result<CalibStream> {
+    build_calib_stream_with(rt, &w.cfg, w.get("embed"), opts)
+}
+
+/// [`build_calib_stream`] from just the config and the embedding table —
+/// the streaming prune path uses this so the rest of the model never
+/// loads for calibration.
+pub fn build_calib_stream_with(
+    rt: &dyn Backend,
+    cfg: &ModelConfig,
+    embed: &Tensor,
+    opts: &PruneOptions,
+) -> Result<CalibStream> {
     let b = rt.manifest().consts.b_cal;
     if opts.n_calib % b != 0 {
         return Err(anyhow!(
@@ -67,12 +89,12 @@ pub fn build_calib_stream(
             opts.n_calib
         ));
     }
-    let size_info = rt.manifest().size(&w.cfg.name)?;
+    let size_info = rt.manifest().size(&cfg.name)?;
     if !size_info.seq_variants.contains(&opts.ctx) {
         return Err(anyhow!(
             "ctx={} has no compiled kernels for {} (variants: {:?})",
             opts.ctx,
-            w.cfg.name,
+            cfg.name,
             size_info.seq_variants
         ));
     }
@@ -86,11 +108,23 @@ pub fn build_calib_stream(
         let hi = lo + b * opts.ctx;
         let tok = TensorI32::new(vec![b, opts.ctx], inp.data[lo..hi].to_vec());
         let tg = TensorI32::new(vec![b, opts.ctx], tgt.data[lo..hi].to_vec());
-        xs.push(Coordinator::embed_native(w, &tok));
+        xs.push(embed_lookup(embed, cfg.d, &tok));
         tokens.push(tok);
         targets.push(tg);
     }
     Ok(CalibStream { xs, tokens, targets, n: opts.n_calib, t: opts.ctx })
+}
+
+/// Byte-level embedding lookup, done natively (a gather needs no XLA).
+fn embed_lookup(emb: &Tensor, d: usize, tokens: &TensorI32) -> Tensor {
+    let mut out = Vec::with_capacity(tokens.data.len() * d);
+    for &tok in &tokens.data {
+        let base = tok as usize * d;
+        out.extend_from_slice(&emb.data[base..base + d]);
+    }
+    let mut shape = tokens.shape.clone();
+    shape.push(d);
+    Tensor::new(shape, out)
 }
 
 /// GBLM precomputation: full-model backward over the calibration set,
@@ -147,16 +181,7 @@ impl<'rt> Coordinator<'rt> {
 
     /// Byte-level embedding lookup, done natively (a gather needs no XLA).
     pub fn embed_native(w: &Weights, tokens: &TensorI32) -> Tensor {
-        let emb = w.get("embed");
-        let d = w.cfg.d;
-        let mut out = Vec::with_capacity(tokens.data.len() * d);
-        for &tok in &tokens.data {
-            let base = tok as usize * d;
-            out.extend_from_slice(&emb.data[base..base + d]);
-        }
-        let mut shape = tokens.shape.clone();
-        shape.push(d);
-        Tensor::new(shape, out)
+        embed_lookup(w.get("embed"), w.cfg.d, tokens)
     }
 
     /// Build the calibration stream (see [`build_calib_stream`]).
@@ -190,25 +215,80 @@ impl<'rt> Coordinator<'rt> {
     ) -> Result<PruneReport> {
         let registry = ScorerRegistry::with_builtins();
         let scorer = registry.get(&opts.recipe.scorer)?;
-        let mut calib = build_calib_stream(self.rt, w, opts)?;
+        let calib = build_calib_stream(self.rt, w, opts)?;
         let full = if scorer.signals().full_grads {
             Some(gblm_full_grads(self.rt, w, &calib)?)
         } else {
             None
         };
-        // Move the embedded stream out so only the pipeline's propagated
-        // copy is resident (tokens/targets were only needed for GBLM).
-        let xs0 = std::mem::take(&mut calib.xs);
-        let n_calib = calib.n;
-        drop(calib);
+        // Move the embedded stream in (tokens/targets were needed for
+        // GBLM's full backward alone); the pipeline frees it as soon as
+        // block 0's propagated stream replaces it.
+        let CalibStream { xs, n, .. } = calib;
+        let mut fabric = ResidentFabric::new(w);
         stages::run_pipeline(
             self.rt,
-            w,
+            &mut fabric,
             opts,
             scorer.as_ref(),
-            xs0,
-            n_calib,
+            stages::CalibChunks::Owned(xs),
+            n,
             full.as_deref(),
+        )
+    }
+
+    /// Prune file→file with O(block) fresh residency: parse the input's
+    /// WPPW header once, check each block out lazily, and stream the
+    /// pruned block to `output` the moment the pipeline finishes it —
+    /// the model is never fully resident (the paper's block-local memory
+    /// claim, realized end to end; DESIGN.md §11). Calibration loads only
+    /// the embedding table. GBLM is the one recipe this cannot serve: its
+    /// full-model backward needs every block live at once — exactly the
+    /// asymmetry Table 3 reports — so it returns a clean error.
+    pub fn prune_streaming<P: AsRef<Path>, Q: AsRef<Path>>(
+        &self,
+        input: P,
+        output: Q,
+        opts: &PruneOptions,
+    ) -> Result<PruneReport> {
+        let registry = ScorerRegistry::with_builtins();
+        let scorer = registry.get(&opts.recipe.scorer)?;
+        if scorer.signals().full_grads {
+            return Err(anyhow!(
+                "scorer `{}` needs full-model gradients, which require \
+                 the whole model resident — use `prune` for GBLM-style \
+                 recipes",
+                scorer.name()
+            ));
+        }
+        let (input, output) = (input.as_ref(), output.as_ref());
+        // Streaming truncates `output` up front — writing onto the input
+        // would destroy the source before a single block is read.
+        if let (Ok(a), Ok(b)) =
+            (std::fs::canonicalize(input), std::fs::canonicalize(output))
+        {
+            if a == b {
+                return Err(anyhow!(
+                    "streaming output {output:?} is the input file — \
+                     in-place streaming would destroy the source; write \
+                     to a fresh path"
+                ));
+            }
+        }
+        let mut store = WeightStore::open(input)?;
+        let cfg = store.cfg().clone();
+        let embed = store.load_tensor("embed")?;
+        let calib = build_calib_stream_with(self.rt, &cfg, &embed, opts)?;
+        let CalibStream { xs, n, .. } = calib;
+        let mut fabric = StreamingFabric::create(store, output, Some(embed))?;
+        stages::run_pipeline(
+            self.rt,
+            &mut fabric,
+            opts,
+            scorer.as_ref(),
+            stages::CalibChunks::Owned(xs),
+            n,
+            None,
         )
     }
 }

@@ -11,11 +11,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::model::{load_size, Weights};
+use crate::model::{load_size, ResidentFabric, Weights};
 use crate::pruner::{BlockGrads, PruneOptions, Scorer, ScorerRegistry};
 use crate::runtime::Backend;
 
-use super::stages::run_pipeline;
+use super::stages::{run_pipeline, CalibChunks};
 use super::{build_calib_stream, gblm_full_grads, CalibStream, PruneReport};
 
 /// What a calibration build depends on: any two runs that agree on these
@@ -240,7 +240,10 @@ impl<'rt> PruneSession<'rt> {
 
     /// Prune a fresh clone of the session weights under `opts`, resolving
     /// `opts.recipe.scorer` in the session registry and reusing any
-    /// cached calibration artifacts.
+    /// cached calibration artifacts. The clone is copy-on-write — an
+    /// `Arc` bump per tensor, with only the block parameters the run
+    /// rewrites materializing fresh buffers — and the cached calibration
+    /// chunks are borrowed, never copied per run.
     pub fn run(&mut self, opts: &PruneOptions) -> Result<PruneOutcome> {
         let scorer = self.registry.get(&opts.recipe.scorer)?;
         let calib = self.cache.stream(self.rt, &self.template, opts)?;
@@ -255,17 +258,18 @@ impl<'rt> PruneSession<'rt> {
             None
         };
         let mut weights = self.template.clone();
-        let report = run_pipeline(
-            self.rt,
-            &mut weights,
-            opts,
-            scorer.as_ref(),
-            // The cache keeps the stream for later runs; the pipeline
-            // propagates (and consumes) its own copy.
-            calib.xs.clone(),
-            calib.n,
-            full.as_deref().map(|v| v.as_slice()),
-        )?;
+        let report = {
+            let mut fabric = ResidentFabric::new(&mut weights);
+            run_pipeline(
+                self.rt,
+                &mut fabric,
+                opts,
+                scorer.as_ref(),
+                CalibChunks::Borrowed(&calib.xs),
+                calib.n,
+                full.as_deref().map(|v| v.as_slice()),
+            )?
+        };
         Ok(PruneOutcome { weights, report })
     }
 
@@ -311,6 +315,57 @@ mod tests {
         session.clear_calib();
         session.run(&opts).unwrap();
         assert_eq!(session.calib_builds(), 3, "clear drops the cache");
+    }
+
+    /// Satellite: a session run never deep-copies the model template or
+    /// the cached calibration stream. The template clone is an `Arc` bump
+    /// per tensor, calibration chunks are borrowed, and the only fresh
+    /// model bytes are the rewritten prunable parameters.
+    #[test]
+    fn run_is_zero_copy_over_template_and_calibration() {
+        let rt = rt();
+        let mut session =
+            PruneSession::builder(&rt).size("s0").build().unwrap();
+        let mut opts =
+            PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+        opts.n_calib = 8;
+        opts.ctx = 8;
+        session.run(&opts).unwrap(); // calibration builds here
+
+        // Second run: everything is cached, so any copy-on-write hit
+        // would be a per-run deep copy — there must be none.
+        let cow_before = crate::tensor::deep_copied_bytes();
+        let out = session.run(&opts).unwrap();
+        assert_eq!(
+            crate::tensor::deep_copied_bytes(),
+            cow_before,
+            "a run must not deep-copy shared buffers"
+        );
+        assert_eq!(session.calib_builds(), 1);
+
+        // Untouched tensors of the outcome still share the template's
+        // buffers; only rewritten prunable params were materialized.
+        let template = session.weights();
+        assert!(out
+            .weights
+            .get("embed")
+            .shares_data(template.get("embed")));
+        assert!(out
+            .weights
+            .get("blocks.0.ln1")
+            .shares_data(template.get("blocks.0.ln1")));
+        assert!(!out
+            .weights
+            .get("blocks.0.wq")
+            .shares_data(template.get("blocks.0.wq")));
+        let prunable_bytes = template.prunable_count() * 4;
+        assert!(out.report.bytes_deep_copied > 0);
+        assert!(
+            out.report.bytes_deep_copied <= prunable_bytes,
+            "fresh bytes {} must be bounded by prunable bytes \
+             {prunable_bytes}",
+            out.report.bytes_deep_copied
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::model::Weights;
+use crate::model::WeightFabric;
 use crate::pruner::{
     mask_from_scores, sparsegpt::sparsegpt_prune, BlockGrads, BlockStats,
     PruneOptions, ScoreCtx, Scorer,
@@ -20,8 +20,7 @@ use crate::rng::Rng;
 use crate::runtime::Backend;
 use crate::tensor::{Tensor, ValueView};
 use crate::{
-    stat_site, BLOCK_PARAMS, PARAM_PRUNABLE_IDX, PRUNABLE,
-    PRUNABLE_PARAM_IDX,
+    stat_site, PARAM_PRUNABLE_IDX, PRUNABLE, PRUNABLE_PARAM_IDX,
 };
 
 use super::{BlockReport, PruneReport};
@@ -490,37 +489,71 @@ fn ro_round(cx: &mut StageCtx, vstate: &mut Vec<Tensor>) -> Result<f32> {
     Ok(loss)
 }
 
-/// Drive `w` through the stage pipeline block by block (the paper's
-/// Alg. 1): run the stages, record achieved sparsity, write the block
-/// back, and propagate the *pruned* stream to the next block. `xs0` is
-/// the embedded calibration stream, taken by value so one-shot callers
-/// can move it in without keeping a second copy alive; `n_calib` is the
-/// total sample count it holds.
-pub(crate) fn run_pipeline(
+/// The embedded calibration stream handed to [`run_pipeline`]. A session
+/// lends its cached chunks (`Borrowed` — zero copying, the cache keeps
+/// them alive anyway); one-shot callers move theirs in (`Owned`), and
+/// the pipeline frees them the moment block 0's propagated stream
+/// replaces them, so one-shot peak residency never holds a stream that
+/// will not be read again.
+pub(crate) enum CalibChunks<'a> {
+    Borrowed(&'a [Tensor]),
+    Owned(Vec<Tensor>),
+}
+
+impl CalibChunks<'_> {
+    fn as_slice(&self) -> &[Tensor] {
+        match self {
+            CalibChunks::Borrowed(xs) => xs,
+            CalibChunks::Owned(xs) => xs,
+        }
+    }
+
+    /// Drop an owned stream once the pipeline no longer reads it.
+    fn release(&mut self) {
+        if let CalibChunks::Owned(xs) = self {
+            *xs = Vec::new();
+        }
+    }
+}
+
+/// Drive a [`WeightFabric`] through the stage pipeline block by block
+/// (the paper's Alg. 1): check the block out, run the stages, check the
+/// (pruned) block back in, and propagate the *pruned* stream to the next
+/// block. `xs0` is the embedded calibration stream (see [`CalibChunks`]);
+/// only the per-block propagated streams are fresh.
+pub(crate) fn run_pipeline<F: WeightFabric>(
     rt: &dyn Backend,
-    w: &mut Weights,
+    fabric: &mut F,
     opts: &PruneOptions,
     scorer: &dyn Scorer,
-    xs0: Vec<Tensor>,
+    mut xs0: CalibChunks<'_>,
     n_calib: usize,
     full_grads: Option<&[BlockGrads]>,
 ) -> Result<PruneReport> {
     let t0 = Instant::now();
-    let size = w.cfg.name.clone();
-    let (d, ffn, l) = (w.cfg.d, w.cfg.ffn, w.cfg.n_layers);
+    let cfg = fabric.cfg().clone();
+    let size = cfg.name.clone();
+    let (d, ffn, l) = (cfg.d, cfg.ffn, cfg.n_layers);
     let t = opts.ctx;
     let mut rng = Rng::seed_from_u64(opts.seed ^ 0x517cc1b727220a95);
 
-    let mut report = PruneReport::new(opts, &w.cfg);
-    report.account_calibration(&xs0, opts.recipe.ro);
+    let mut report = PruneReport::new(opts, &cfg);
+    report.account_calibration(xs0.as_slice(), opts.recipe.ro);
     if full_grads.is_some() {
-        report.account_full_model(w);
+        report.account_full_model(&cfg);
     }
 
     let stages = stages_for(opts);
-    let mut xs = xs0;
+    // The pruned stream propagated past the previous block; block 0 reads
+    // the incoming calibration chunks directly.
+    let mut propagated: Option<Vec<Tensor>> = None;
     let limit = opts.max_blocks.unwrap_or(l).min(l);
     for li in 0..limit {
+        let xs: &[Tensor] = match propagated.as_deref() {
+            Some(p) => p,
+            None => xs0.as_slice(),
+        };
+        let bp_in = fabric.checkout_block(li)?;
         let mut cx = StageCtx {
             rt,
             size: &size,
@@ -530,9 +563,9 @@ pub(crate) fn run_pipeline(
             ffn,
             opts,
             scorer,
-            xs: &xs,
+            xs,
             n_calib,
-            bp: w.block(li).into_iter().cloned().collect(),
+            bp: bp_in,
             dense_ys: Vec::new(),
             stats: None,
             grads: None,
@@ -561,16 +594,21 @@ pub(crate) fn run_pipeline(
         }
         block_report.sparsity = zeros as f64 / total as f64;
 
-        // Write back and propagate the PRUNED stream.
-        for (i, name) in BLOCK_PARAMS.iter().enumerate() {
-            w.set_block(li, name, bp[i].clone());
-        }
+        // Propagate the PRUNED stream, then write the block back (the
+        // fabric counts which buffers this run materialized fresh).
+        let next = fwd_pass(rt, &size, t, &bp, xs)?;
+        fabric.checkin_block(li, &bp)?;
         report.account_block(&bp, grads.as_ref());
-        xs = fwd_pass(rt, &size, t, &bp, &xs)?;
+        propagated = Some(next);
+        // One-shot callers' stream will never be read again.
+        xs0.release();
         report.blocks.push(block_report);
     }
 
+    fabric.finish()?;
+    report.memory.model_resident = fabric.resident_model_bytes();
+    report.bytes_deep_copied = fabric.fresh_bytes();
     report.secs = t0.elapsed().as_secs_f64();
-    report.final_sparsity = w.prunable_sparsity();
+    report.final_sparsity = fabric.final_sparsity()?;
     Ok(report)
 }

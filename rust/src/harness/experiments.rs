@@ -209,7 +209,10 @@ pub fn table2(rt: &dyn Backend, size: &str) -> Result<Vec<(String, Vec<f64>)>> {
 /// coordinator's analytic accounting, not harness RSS). Rows come out
 /// size-major.
 pub fn table3(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<Table3Row>> {
-    println!("== Table 3: pruning time (s) and peak memory (MiB) ==");
+    println!(
+        "== Table 3: pruning time (s), peak working set / deep-copied \
+         (MiB) =="
+    );
     let methods = [
         Method::SparseGpt,
         Method::Gblm,
@@ -224,18 +227,22 @@ pub fn table3(rt: &dyn Backend, sizes: &[&str]) -> Result<Vec<Table3Row>> {
             let opts = PruneOptions::new(method, Pattern::NofM(2, 4));
             match prune_and_eval_in(&mut session, &opts, 2) {
                 Ok(r) => {
-                    let mib = r.report.memory.peak() as f64 / (1 << 20) as f64;
+                    const MIB: f64 = (1 << 20) as f64;
                     println!(
-                        "{:<11} {size}: {:>7.1}s {:>8.1} MiB",
+                        "{:<11} {size}: {:>7.1}s {:>8.1} MiB (+{:.1} MiB \
+                         fresh)",
                         method.label(),
                         r.report.secs,
-                        mib
+                        r.report.memory.peak() as f64 / MIB,
+                        r.report.bytes_deep_copied as f64 / MIB,
                     );
                     rows.push(Table3Row {
                         method: method.label().into(),
                         size: size.to_string(),
                         secs: r.report.secs,
                         peak_bytes: r.report.memory.peak(),
+                        resident_bytes: r.report.memory.resident_peak(),
+                        deep_copied_bytes: r.report.bytes_deep_copied,
                     });
                 }
                 Err(e) => {
@@ -252,7 +259,12 @@ pub struct Table3Row {
     pub method: String,
     pub size: String,
     pub secs: f64,
+    /// Transient working set (calibration + block state + method extras).
     pub peak_bytes: usize,
+    /// Working set plus the model bytes the run's fabric held resident.
+    pub resident_bytes: usize,
+    /// Model bytes the run materialized fresh (copy-on-write accounting).
+    pub deep_copied_bytes: usize,
 }
 
 /// Table 4: LoRA fine-tuning after pruning (Wanda vs Wanda++).

@@ -15,8 +15,12 @@
 //! Quick tour:
 //! - [`runtime`] — the [`runtime::Backend`] trait, the native kernel
 //!   implementations, and (feature `pjrt`) the HLO-artifact executor.
-//! - [`model`] — model config, weight store, calibration/eval data, and
-//!   deterministic synthetic fallbacks for artifact-free runs.
+//! - [`model`] — model config, the zero-copy weight fabric (`Arc`-backed
+//!   copy-on-write tensors, the lazy [`model::WeightStore`] /
+//!   [`model::StreamingWeightWriter`] pair, and the
+//!   [`model::WeightFabric`] check-out/check-in trait; DESIGN.md §11),
+//!   calibration/eval data, and deterministic synthetic fallbacks for
+//!   artifact-free runs.
 //! - [`sparsity`] — mask algebra: unstructured, 2:4, 4:8, structured rows.
 //! - [`pruner`] — the pluggable [`pruner::Scorer`] trait and
 //!   [`pruner::ScorerRegistry`]: magnitude, Wanda, SparseGPT, GBLM,

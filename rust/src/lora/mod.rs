@@ -169,7 +169,7 @@ mod tests {
         }
         map.insert("ln_f".into(), Tensor::zeros(&[8]));
         map.insert("head".into(), Tensor::zeros(&[32, 8]));
-        let w = Weights { cfg, map };
+        let w = Weights::from_map(cfg, map);
         let st = LoraState::init(&w, 4, 0);
         assert_eq!(st.tensors.len(), 2 * 2 * 2); // layers x {q,v} x {a,b}
         // every B starts at zero => adapters are a no-op at init

@@ -30,7 +30,10 @@ BACKENDS
 COMMANDS
   prune    --size s2 --method wanda++ --pattern 2:4 [--calib 32]
            [--alpha 100] [--k 5] [--seed 0] [--save FILE]
-           Prune a model; report ppl before/after.
+           [--stream-to FILE]
+           Prune a model; report ppl before/after. --stream-to prunes
+           file-to-file with O(one block) fresh residency: blocks load
+           lazily from the weight file and stream out as they finish.
   eval     --size s2 [--weights FILE]
            Perplexity of a weight file (or the pristine size).
   tasks    --size s2 [--weights FILE] [--max-examples 50]
@@ -167,21 +170,44 @@ fn main() -> Result<()> {
 
             let (dense_test, _) =
                 harness::dense_ppl(rt, &size, harness::EVAL_BATCHES)?;
-            // One-shot run: prune in place through the Coordinator (one
-            // resident copy of the weights); the built-in registry covers
-            // every recipe `parse_method` accepts.
-            let mut w = load_size(rt, &size)?;
             let coord = wandapp::coordinator::Coordinator::new(rt);
-            let report = coord.prune(&mut w, &opts)?;
-            let (ppl_test, ppl_val) =
-                ppl_pair(rt, &w, harness::EVAL_BATCHES)?;
+            let (w, report) = if let Some(out_path) = args.get_opt("stream-to") {
+                // Streaming run: blocks check out of the weight file
+                // lazily and the pruned model streams to `out_path` as
+                // each block finishes — the model is never fully
+                // resident during the prune.
+                let src =
+                    rt.artifacts_dir().join(format!("weights_{size}.bin"));
+                let src = if src.exists() {
+                    src
+                } else {
+                    // Bare checkout: materialize the deterministic
+                    // synthetic template once so there is a file to
+                    // stream from.
+                    let tmp = std::env::temp_dir()
+                        .join(format!("wandapp_synth_{size}.bin"));
+                    load_size(rt, &size)?.save(&tmp)?;
+                    tmp
+                };
+                let report = coord.prune_streaming(&src, &out_path, &opts)?;
+                println!("streamed pruned weights to {out_path}");
+                (wandapp::model::Weights::load(&out_path)?, report)
+            } else {
+                // One-shot run: prune in place through the Coordinator
+                // (one resident copy of the weights); the built-in
+                // registry covers every recipe `parse_method` accepts.
+                let mut w = load_size(rt, &size)?;
+                let report = coord.prune(&mut w, &opts)?;
+                if let Some(path) = args.get_opt("save") {
+                    w.save(&path)?;
+                    println!("saved pruned weights to {path}");
+                }
+                (w, report)
+            };
+            let (ppl_test, ppl_val) = ppl_pair(rt, &w, harness::EVAL_BATCHES)?;
             println!("{}", report.summary());
             println!("ppl(test): dense {dense_test:.3} -> pruned {ppl_test:.3}");
             println!("ppl(val):  pruned {ppl_val:.3}");
-            if let Some(path) = args.get_opt("save") {
-                w.save(&path)?;
-                println!("saved pruned weights to {path}");
-            }
         }
         "eval" => {
             let w = match args.get_opt("weights") {

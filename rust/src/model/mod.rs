@@ -8,7 +8,10 @@ mod store;
 pub mod synth;
 
 pub use data::{sample_windows, CorpusData, EvalBatches};
-pub use store::{ModelConfig, Weights};
+pub use store::{
+    ModelConfig, ResidentFabric, StreamingFabric, StreamingWeightWriter,
+    WeightFabric, WeightStore, Weights,
+};
 
 use crate::runtime::Backend;
 use crate::Result;

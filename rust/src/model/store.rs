@@ -5,18 +5,38 @@
 //!
 //! Tensor names: `embed`, `blocks.<i>.<ln1|wq|wk|wv|wo|ln2|wg|wu|wd>`,
 //! `ln_f`, `head`.
+//!
+//! Three access tiers (DESIGN.md §11):
+//! - [`Weights`] — the fully in-memory model. Tensors sit in **canonical
+//!   order** in one `Vec`, so block access is index arithmetic (no string
+//!   keys on hot paths) and cloning is an `Arc` bump per tensor.
+//! - [`WeightStore`] — a header-indexed handle on the file. The header is
+//!   parsed once; tensors load lazily (per block, straight from the file
+//!   offsets — never a whole-file `read_to_end`).
+//! - [`StreamingWeightWriter`] — emits tensors incrementally in canonical
+//!   order, so a block-sequential prune writes each block as it finishes
+//!   and never holds two copies of the model.
+//!
+//! [`WeightFabric`] abstracts "where does the pipeline check blocks out
+//! of / in to": [`ResidentFabric`] (an in-memory [`Weights`]) or
+//! [`StreamingFabric`] (store → writer, O(one block) fresh residency).
 
 use std::collections::HashMap;
-use std::io::{Read, Write};
+use std::fs::File;
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
 use crate::json::Json;
 use crate::tensor::Tensor;
-use crate::BLOCK_PARAMS;
+use crate::{BLOCK_PARAMS, PRUNABLE_PARAM_IDX};
 
 const MAGIC: &[u8; 4] = b"WPPW";
+
+/// Decode/encode scratch size: bounds transient buffering during load
+/// and save to 64 KiB regardless of tensor size.
+const IO_CHUNK: usize = 1 << 16;
 
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelConfig {
@@ -53,26 +73,237 @@ impl ModelConfig {
             ("seq", Json::Num(self.seq as f64)),
         ])
     }
+
+    /// Canonical tensor count: embed + 9 per block + ln_f + head.
+    pub fn n_tensors(&self) -> usize {
+        3 + 9 * self.n_layers
+    }
+
+    /// Shape of the canonical tensor at `idx` (see [`canonical_names`]).
+    fn canonical_shape(&self, idx: usize) -> Vec<usize> {
+        let (d, f) = (self.d, self.ffn);
+        if idx == 0 {
+            return vec![self.vocab, d]; // embed
+        }
+        let last = self.n_tensors() - 1;
+        if idx == last {
+            return vec![self.vocab, d]; // head
+        }
+        if idx == last - 1 {
+            return vec![d]; // ln_f
+        }
+        match (idx - 1) % 9 {
+            0 | 5 => vec![d],    // ln1, ln2
+            1..=4 => vec![d, d], // wq wk wv wo
+            6 | 7 => vec![f, d], // wg wu
+            _ => vec![d, f],     // wd
+        }
+    }
+
+    /// Parameters per decoder block.
+    pub fn block_param_count(&self) -> usize {
+        4 * self.d * self.d + 3 * self.d * self.ffn + 2 * self.d
+    }
+
+    /// Total parameter count of the model.
+    pub fn param_count(&self) -> usize {
+        2 * self.vocab * self.d
+            + self.d
+            + self.n_layers * self.block_param_count()
+    }
+
+    /// Total count of the seven prunable matrices across all blocks.
+    pub fn prunable_count(&self) -> usize {
+        self.n_layers * (4 * self.d * self.d + 3 * self.d * self.ffn)
+    }
 }
 
-#[derive(Debug)]
+/// Canonical tensor names for a model: embed, blocks, ln_f, head.
+fn canonical_names(cfg: &ModelConfig) -> Vec<String> {
+    let mut order = Vec::with_capacity(cfg.n_tensors());
+    order.push("embed".to_string());
+    for i in 0..cfg.n_layers {
+        for k in BLOCK_PARAMS {
+            order.push(format!("blocks.{i}.{k}"));
+        }
+    }
+    order.push("ln_f".to_string());
+    order.push("head".to_string());
+    order
+}
+
+/// Index of block `i`'s first parameter in the canonical tensor order.
+#[inline]
+fn block_base(i: usize) -> usize {
+    1 + i * 9
+}
+
+#[derive(Debug, Clone)]
 struct HeaderEntry {
     name: String,
     shape: Vec<usize>,
-    offset: usize, // in f32 elements
+    offset: usize, // in f32 elements from the start of the data section
 }
 
-/// An in-memory model: config + name-addressed tensors. Cloned per pruning
-/// run so the dense original stays available (the RO target).
+/// An in-memory model: config + tensors in canonical order, with a
+/// name index built once. Cloning is an `Arc` bump per tensor (see
+/// `tensor::TensorBuf`), so a pruning run that clones the dense template
+/// materializes only the buffers it actually rewrites.
 #[derive(Debug, Clone)]
 pub struct Weights {
     pub cfg: ModelConfig,
-    pub map: HashMap<String, Tensor>,
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+    index: HashMap<String, usize>,
 }
 
 impl Weights {
+    /// Assemble from a complete name→tensor map (the synthetic generator
+    /// and tests build models this way). Panics on a missing or unknown
+    /// tensor — a partial model is a bug, not a state.
+    pub fn from_map(cfg: ModelConfig, mut map: HashMap<String, Tensor>) -> Self {
+        let names = canonical_names(&cfg);
+        let tensors: Vec<Tensor> = names
+            .iter()
+            .map(|n| {
+                map.remove(n)
+                    .unwrap_or_else(|| panic!("missing tensor `{n}`"))
+            })
+            .collect();
+        assert!(
+            map.is_empty(),
+            "unknown tensors for {}: {:?}",
+            cfg.name,
+            map.keys().collect::<Vec<_>>()
+        );
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Self { cfg, names, tensors, index }
+    }
+
+    /// Load the whole file through a [`WeightStore`] (header parsed once,
+    /// each tensor decoded straight into its own buffer — no whole-file
+    /// byte vec, no intermediate float vec).
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let mut f = std::fs::File::open(path.as_ref()).map_err(|e| {
+        WeightStore::open(path)?.load_all()
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        let shapes = self
+            .names
+            .iter()
+            .zip(&self.tensors)
+            .map(|(n, t)| (n.clone(), t.shape.clone()))
+            .collect::<Vec<_>>();
+        let mut w = StreamingWeightWriter::create(path, &self.cfg, shapes)?;
+        for t in &self.tensors {
+            w.write_next(t)?;
+        }
+        w.finish()
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.index[name]]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = *self.index.get(name).expect("unknown tensor");
+        &mut self.tensors[i]
+    }
+
+    /// The 9 parameters of block `i`, in canonical order — a direct slice
+    /// of the canonical tensor vec, no key formatting or hashing.
+    pub fn block(&self, i: usize) -> &[Tensor] {
+        let base = block_base(i);
+        &self.tensors[base..base + 9]
+    }
+
+    pub fn block_name(i: usize, param: &str) -> String {
+        format!("blocks.{i}.{param}")
+    }
+
+    /// Replace block `i`'s parameter `k` (a `BLOCK_PARAMS` index). The
+    /// hot write-back path — pure index arithmetic.
+    pub fn set_block_param(&mut self, i: usize, k: usize, t: Tensor) {
+        let slot = &mut self.tensors[block_base(i) + k];
+        assert_eq!(
+            slot.shape, t.shape,
+            "shape change for blocks.{i}.{}",
+            BLOCK_PARAMS[k]
+        );
+        *slot = t;
+    }
+
+    /// Replace block `i`'s parameter by name (convenience over
+    /// [`Weights::set_block_param`]).
+    pub fn set_block(&mut self, i: usize, param: &str, t: Tensor) {
+        let k = BLOCK_PARAMS
+            .iter()
+            .position(|p| *p == param)
+            .unwrap_or_else(|| panic!("unknown block tensor {param}"));
+        self.set_block_param(i, k, t);
+    }
+
+    /// All tensors with their names, canonical order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.names.iter().map(String::as_str).zip(self.tensors.iter())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    /// Total count of the seven prunable matrices across all blocks.
+    pub fn prunable_count(&self) -> usize {
+        let mut n = 0;
+        for i in 0..self.cfg.n_layers {
+            let base = block_base(i);
+            for &k in &PRUNABLE_PARAM_IDX {
+                n += self.tensors[base + k].numel();
+            }
+        }
+        n
+    }
+
+    /// Overall sparsity of the prunable weights (fraction of exact zeros).
+    pub fn prunable_sparsity(&self) -> f64 {
+        let mut zeros = 0usize;
+        let mut total = 0usize;
+        for i in 0..self.cfg.n_layers {
+            let base = block_base(i);
+            for &k in &PRUNABLE_PARAM_IDX {
+                let t = &self.tensors[base + k];
+                zeros += t.data.iter().filter(|v| **v == 0.0).count();
+                total += t.numel();
+            }
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+/// A lazily-loading handle on a WPPW file: the header is parsed once into
+/// a canonical-order index; tensors are read on demand straight from
+/// their file offsets. The whole-model path is [`WeightStore::load_all`];
+/// the block-streaming pipeline pulls one block at a time via
+/// [`WeightStore::load_block`] so peak fresh memory stays O(block).
+#[derive(Debug)]
+pub struct WeightStore {
+    cfg: ModelConfig,
+    entries: Vec<HeaderEntry>, // canonical order
+    file: File,
+    data_start: u64,
+    payload_len: u64, // bytes after the header
+    scratch: Vec<u8>,
+}
+
+impl WeightStore {
+    /// Open the file and parse the header (only the header is read).
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut f = File::open(path.as_ref()).map_err(|e| {
             anyhow!("open {:?}: {e} — run `make artifacts`", path.as_ref())
         })?;
         let mut magic = [0u8; 4];
@@ -87,54 +318,164 @@ impl Weights {
         f.read_exact(&mut hbuf)?;
         let hjson = Json::parse(std::str::from_utf8(&hbuf)?)?;
         let cfg = ModelConfig::from_json(hjson.get("meta")?)?;
-        let mut tensors = Vec::new();
+        let mut by_name: HashMap<String, HeaderEntry> = HashMap::new();
         for e in hjson.get("tensors")?.as_arr()? {
-            tensors.push(HeaderEntry {
+            let entry = HeaderEntry {
                 name: e.get("name")?.as_str()?.to_string(),
                 shape: e.get("shape")?.usize_vec()?,
                 offset: e.get("offset")?.as_usize()?,
-            });
+            };
+            by_name.insert(entry.name.clone(), entry);
         }
-        let mut raw = Vec::new();
-        f.read_to_end(&mut raw)?;
-        if raw.len() % 4 != 0 {
+        // Re-index into canonical order so block loads are arithmetic,
+        // validating every declared shape against the config — a header
+        // that disagrees with its own meta must not parse.
+        let mut entries = Vec::with_capacity(cfg.n_tensors());
+        for (idx, name) in canonical_names(&cfg).into_iter().enumerate() {
+            let entry = by_name.remove(&name).ok_or_else(|| {
+                anyhow!("weight file is missing tensor `{name}`")
+            })?;
+            let want = cfg.canonical_shape(idx);
+            if entry.shape != want {
+                return Err(anyhow!(
+                    "tensor `{name}` has shape {:?}, config implies {want:?}",
+                    entry.shape
+                ));
+            }
+            entries.push(entry);
+        }
+        if !by_name.is_empty() {
+            return Err(anyhow!(
+                "weight file has unknown tensors: {:?}",
+                by_name.keys().collect::<Vec<_>>()
+            ));
+        }
+        let data_start = (8 + hlen) as u64;
+        let payload_len = f.metadata()?.len().saturating_sub(data_start);
+        if payload_len % 4 != 0 {
             return Err(anyhow!("weight payload not f32-aligned"));
         }
-        let floats: Vec<f32> = raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-
-        let mut map = HashMap::new();
-        for e in &tensors {
-            let n: usize = e.shape.iter().product();
-            let data = floats
-                .get(e.offset..e.offset + n)
-                .ok_or_else(|| anyhow!("tensor {} out of bounds", e.name))?
-                .to_vec();
-            map.insert(e.name.clone(), Tensor::new(e.shape.clone(), data));
-        }
-        Ok(Self { cfg, map })
+        Ok(Self {
+            cfg,
+            entries,
+            file: f,
+            data_start,
+            payload_len,
+            scratch: Vec::new(),
+        })
     }
 
-    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        let mut entries = Vec::new();
-        let mut blobs: Vec<&Tensor> = Vec::new();
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    /// Tensor names with shapes, canonical order (feeds the streaming
+    /// writer so output headers mirror input headers).
+    pub fn shapes(&self) -> Vec<(String, Vec<usize>)> {
+        self.entries
+            .iter()
+            .map(|e| (e.name.clone(), e.shape.clone()))
+            .collect()
+    }
+
+    fn load_idx(&mut self, idx: usize) -> Result<Tensor> {
+        let e = &self.entries[idx];
+        let n: usize = e.shape.iter().product();
+        let end = (e.offset + n) as u64 * 4;
+        if end > self.payload_len {
+            return Err(anyhow!("tensor {} out of bounds", e.name));
+        }
+        self.file
+            .seek(SeekFrom::Start(self.data_start + e.offset as u64 * 4))?;
+        let shape = e.shape.clone();
+        // Decode straight into the tensor's own buffer through a small
+        // reused scratch window — no whole-file or whole-tensor byte vec.
+        let mut data = Vec::with_capacity(n);
+        let mut remaining = n * 4;
+        while remaining > 0 {
+            let take = remaining.min(IO_CHUNK);
+            self.scratch.resize(take, 0);
+            self.file.read_exact(&mut self.scratch[..take])?;
+            data.extend(
+                self.scratch[..take]
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+            );
+            remaining -= take;
+        }
+        Ok(Tensor::new(shape, data))
+    }
+
+    /// Load one tensor by name.
+    pub fn load_tensor(&mut self, name: &str) -> Result<Tensor> {
+        let idx = self
+            .entries
+            .iter()
+            .position(|e| e.name == name)
+            .ok_or_else(|| anyhow!("unknown tensor `{name}`"))?;
+        self.load_idx(idx)
+    }
+
+    /// Load the 9 parameters of block `i` (canonical order).
+    pub fn load_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+        if i >= self.cfg.n_layers {
+            return Err(anyhow!(
+                "block {i} out of range (n_layers {})",
+                self.cfg.n_layers
+            ));
+        }
+        (0..9).map(|k| self.load_idx(block_base(i) + k)).collect()
+    }
+
+    /// Load every tensor into a resident [`Weights`].
+    pub fn load_all(&mut self) -> Result<Weights> {
+        let names: Vec<String> =
+            self.entries.iter().map(|e| e.name.clone()).collect();
+        let tensors: Result<Vec<Tensor>> =
+            (0..self.entries.len()).map(|i| self.load_idx(i)).collect();
+        let index = names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.clone(), i))
+            .collect();
+        Ok(Weights {
+            cfg: self.cfg.clone(),
+            names,
+            tensors: tensors?,
+            index,
+        })
+    }
+}
+
+/// Incremental WPPW writer: the header (with offsets precomputed from the
+/// declared shapes) goes out first, then tensors append one at a time in
+/// canonical order — so a block-sequential prune can emit each block the
+/// moment it finishes and the pruned model never sits in memory twice.
+pub struct StreamingWeightWriter {
+    f: BufWriter<File>,
+    entries: Vec<HeaderEntry>,
+    next: usize,
+    scratch: Vec<u8>,
+}
+
+impl StreamingWeightWriter {
+    /// Create the file and write the complete header. `shapes` declares
+    /// every tensor (canonical order) up front; writes must follow that
+    /// order exactly.
+    pub fn create<P: AsRef<Path>>(
+        path: P,
+        cfg: &ModelConfig,
+        shapes: Vec<(String, Vec<usize>)>,
+    ) -> Result<Self> {
+        let mut entries = Vec::with_capacity(shapes.len());
         let mut offset = 0usize;
-        let mut put = |name: String, t: &'_ Tensor| -> HeaderEntry {
-            let e = HeaderEntry { name, shape: t.shape.clone(), offset };
-            offset += t.numel();
-            e
-        };
-        // canonical order: embed, blocks, ln_f, head
-        let order = self.canonical_order();
-        for name in &order {
-            let t = &self.map[name];
-            entries.push(put(name.clone(), t));
-            blobs.push(t);
+        for (name, shape) in shapes {
+            let n: usize = shape.iter().product();
+            entries.push(HeaderEntry { name, shape, offset });
+            offset += n;
         }
         let header = Json::obj(vec![
-            ("meta", self.cfg.to_json()),
+            ("meta", cfg.to_json()),
             (
                 "tensors",
                 Json::Arr(
@@ -152,96 +493,295 @@ impl Weights {
             ),
         ]);
         let hjson = header.write().into_bytes();
-        let mut f = std::fs::File::create(path)?;
+        let mut f = BufWriter::new(File::create(path)?);
         f.write_all(MAGIC)?;
         f.write_all(&(hjson.len() as u32).to_le_bytes())?;
         f.write_all(&hjson)?;
-        for t in blobs {
-            let mut bytes = Vec::with_capacity(t.numel() * 4);
-            for v in &t.data {
-                bytes.extend_from_slice(&v.to_le_bytes());
+        Ok(Self { f, entries, next: 0, scratch: Vec::new() })
+    }
+
+    /// Name of the tensor the writer expects next (None when complete).
+    pub fn expected(&self) -> Option<&str> {
+        self.entries.get(self.next).map(|e| e.name.as_str())
+    }
+
+    /// Append the next tensor; must match the declared shape.
+    pub fn write_next(&mut self, t: &Tensor) -> Result<()> {
+        let e = self.entries.get(self.next).ok_or_else(|| {
+            anyhow!("writer already received all {} tensors", self.entries.len())
+        })?;
+        if t.shape != e.shape {
+            return Err(anyhow!(
+                "tensor `{}` has shape {:?}, declared {:?}",
+                e.name,
+                t.shape,
+                e.shape
+            ));
+        }
+        for chunk in t.data.chunks(IO_CHUNK / 4) {
+            self.scratch.clear();
+            for v in chunk {
+                self.scratch.extend_from_slice(&v.to_le_bytes());
             }
-            f.write_all(&bytes)?;
+            self.f.write_all(&self.scratch)?;
+        }
+        self.next += 1;
+        Ok(())
+    }
+
+    /// Completeness check + flush, shared by [`Self::finish`] and the
+    /// streaming fabric (whose writer lives in a struct field and cannot
+    /// be consumed). Dropping a writer without this runs the `BufWriter`
+    /// flush with its error swallowed — a truncated file could pass as
+    /// complete.
+    fn finalize(&mut self) -> Result<()> {
+        if self.next != self.entries.len() {
+            return Err(anyhow!(
+                "writer finished after {} of {} tensors (next: `{}`)",
+                self.next,
+                self.entries.len(),
+                self.entries[self.next].name
+            ));
+        }
+        self.f.flush()?;
+        Ok(())
+    }
+
+    /// Flush and close; errors if any declared tensor was never written.
+    pub fn finish(mut self) -> Result<()> {
+        self.finalize()
+    }
+}
+
+/// Where the block pipeline checks blocks out of and back in to. The
+/// coordinator drives the paper's Alg. 1 against this trait, so the same
+/// stage code runs fully resident ([`ResidentFabric`]) or streaming
+/// file→file ([`StreamingFabric`]).
+pub trait WeightFabric {
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Check out block `i`'s nine parameters (`BLOCK_PARAMS` order).
+    fn checkout_block(&mut self, i: usize) -> Result<Vec<Tensor>>;
+
+    /// Check a (possibly rewritten) block back in. Blocks arrive strictly
+    /// in ascending order — the pipeline is block-sequential.
+    fn checkin_block(&mut self, i: usize, bp: &[Tensor]) -> Result<()>;
+
+    /// Called once after the last checked-in block: flush passthrough
+    /// tensors (streaming) or no-op (resident).
+    fn finish(&mut self) -> Result<()>;
+
+    /// Achieved sparsity over all prunable weights; valid after
+    /// [`WeightFabric::finish`].
+    fn final_sparsity(&mut self) -> Result<f64>;
+
+    /// Peak bytes of model weights this fabric held resident at once:
+    /// the whole model for [`ResidentFabric`]; for [`StreamingFabric`]
+    /// the largest single residency moment (the embed copy-through, one
+    /// block, or the tail tensors). May overlap with the pipeline's own
+    /// per-block working set (`block_peak` counts the checked-out
+    /// params too), so `resident_peak()` is a conservative upper bound,
+    /// never an understatement.
+    fn resident_model_bytes(&self) -> usize;
+
+    /// Model-parameter bytes checked in with a buffer different from
+    /// the one stored — the fresh materializations this run paid for.
+    /// Streaming fabrics report 0: their blocks load fresh from disk
+    /// and stream out, there is no shared template to copy from.
+    fn fresh_bytes(&self) -> usize;
+}
+
+/// Fabric over an in-memory model: check-out hands back `Arc`-shared
+/// tensors (zero-copy), check-in swaps the rewritten ones in place and
+/// counts the buffers that no longer share with the stored ones (the
+/// run's `bytes_deep_copied`).
+pub struct ResidentFabric<'a> {
+    w: &'a mut Weights,
+    fresh: usize,
+}
+
+impl<'a> ResidentFabric<'a> {
+    pub fn new(w: &'a mut Weights) -> Self {
+        Self { w, fresh: 0 }
+    }
+}
+
+impl WeightFabric for ResidentFabric<'_> {
+    fn cfg(&self) -> &ModelConfig {
+        &self.w.cfg
+    }
+
+    fn checkout_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+        Ok(self.w.block(i).to_vec())
+    }
+
+    fn checkin_block(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
+        for (k, t) in bp.iter().enumerate() {
+            // The stored tensor is still the checked-out original, so
+            // buffer identity tells exactly which params this run
+            // materialized fresh (in-place CoW splits count too).
+            if !t.shares_data(&self.w.block(i)[k]) {
+                self.fresh += t.numel() * 4;
+            }
+            self.w.set_block_param(i, k, t.clone());
         }
         Ok(())
     }
 
-    fn canonical_order(&self) -> Vec<String> {
-        let mut order = vec!["embed".to_string()];
-        for i in 0..self.cfg.n_layers {
-            for k in BLOCK_PARAMS {
-                order.push(format!("blocks.{i}.{k}"));
-            }
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn final_sparsity(&mut self) -> Result<f64> {
+        Ok(self.w.prunable_sparsity())
+    }
+
+    fn resident_model_bytes(&self) -> usize {
+        self.w.param_count() * 4
+    }
+
+    fn fresh_bytes(&self) -> usize {
+        self.fresh
+    }
+}
+
+/// Fabric that streams file→file: blocks check out of a [`WeightStore`]
+/// lazily and check in to a [`StreamingWeightWriter`] the moment the
+/// pipeline finishes them. Fresh memory during a prune is one block (plus
+/// whatever the stages hold) instead of a whole second model; `embed` is
+/// copied through at construction, untouched blocks and the tail tensors
+/// at [`WeightFabric::finish`].
+pub struct StreamingFabric {
+    store: WeightStore,
+    writer: StreamingWeightWriter,
+    next_block: usize,
+    zeros: usize,
+    total: usize,
+    peak_block_bytes: usize,
+    finished: bool,
+}
+
+impl StreamingFabric {
+    /// Open the output next to an already-open store and copy `embed`
+    /// through (the writer's canonical order starts with it). Callers
+    /// that already loaded the embedding table — the streaming prune
+    /// path reads it for calibration — pass it in to avoid a second
+    /// decode of the largest single tensor.
+    pub fn create<P: AsRef<Path>>(
+        mut store: WeightStore,
+        out_path: P,
+        embed: Option<Tensor>,
+    ) -> Result<Self> {
+        let mut writer = StreamingWeightWriter::create(
+            out_path,
+            store.cfg(),
+            store.shapes(),
+        )?;
+        let embed = match embed {
+            Some(e) => e,
+            None => store.load_tensor("embed")?,
+        };
+        writer.write_next(&embed)?;
+        Ok(Self {
+            store,
+            writer,
+            next_block: 0,
+            zeros: 0,
+            total: 0,
+            // The copy-through embed was this fabric's first residency
+            // moment; blocks and the tail tensors raise it later.
+            peak_block_bytes: embed.numel() * 4,
+            finished: false,
+        })
+    }
+
+    fn account_block(&mut self, bp: &[Tensor]) {
+        let bytes: usize = bp.iter().map(|t| t.numel() * 4).sum();
+        self.peak_block_bytes = self.peak_block_bytes.max(bytes);
+        for &k in &PRUNABLE_PARAM_IDX {
+            self.zeros +=
+                bp[k].data.iter().filter(|v| **v == 0.0).count();
+            self.total += bp[k].numel();
         }
-        order.push("ln_f".to_string());
-        order.push("head".to_string());
-        order
     }
 
-    pub fn get(&self, name: &str) -> &Tensor {
-        &self.map[name]
-    }
-
-    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
-        self.map.get_mut(name).expect("unknown tensor")
-    }
-
-    /// The 9 parameters of block `i`, in canonical order.
-    pub fn block(&self, i: usize) -> Vec<&Tensor> {
-        BLOCK_PARAMS
-            .iter()
-            .map(|k| &self.map[&format!("blocks.{i}.{k}")])
-            .collect()
-    }
-
-    pub fn block_name(i: usize, param: &str) -> String {
-        format!("blocks.{i}.{param}")
-    }
-
-    pub fn set_block(&mut self, i: usize, param: &str, t: Tensor) {
-        let key = Self::block_name(i, param);
-        let old = self.map.get(&key).expect("unknown block tensor");
-        assert_eq!(old.shape, t.shape, "shape change for {key}");
-        self.map.insert(key, t);
-    }
-
-    /// Total parameter count.
-    pub fn param_count(&self) -> usize {
-        self.map.values().map(|t| t.numel()).sum()
-    }
-
-    /// Total bytes of the seven prunable matrices across all blocks.
-    pub fn prunable_count(&self) -> usize {
-        let mut n = 0;
-        for i in 0..self.cfg.n_layers {
-            for k in crate::PRUNABLE {
-                n += self.map[&Self::block_name(i, k)].numel();
-            }
+    fn write_block(&mut self, bp: &[Tensor]) -> Result<()> {
+        for t in bp {
+            self.writer.write_next(t)?;
         }
-        n
+        Ok(())
+    }
+}
+
+impl WeightFabric for StreamingFabric {
+    fn cfg(&self) -> &ModelConfig {
+        self.store.cfg()
     }
 
-    /// Overall sparsity of the prunable weights (fraction of exact zeros).
-    pub fn prunable_sparsity(&self) -> f64 {
-        let mut zeros = 0usize;
-        let mut total = 0usize;
-        for i in 0..self.cfg.n_layers {
-            for k in crate::PRUNABLE {
-                let t = &self.map[&Self::block_name(i, k)];
-                zeros += t.data.iter().filter(|v| **v == 0.0).count();
-                total += t.numel();
-            }
+    fn checkout_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+        self.store.load_block(i)
+    }
+
+    fn checkin_block(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
+        if i != self.next_block {
+            return Err(anyhow!(
+                "streaming fabric expects block {} next, got {i}",
+                self.next_block
+            ));
         }
-        zeros as f64 / total.max(1) as f64
+        self.account_block(bp);
+        self.write_block(bp)?;
+        self.next_block += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // Copy through blocks the pipeline never touched (max_blocks
+        // prefix runs), then the tail tensors.
+        for i in self.next_block..self.store.cfg().n_layers {
+            let bp = self.store.load_block(i)?;
+            self.account_block(&bp);
+            self.write_block(&bp)?;
+        }
+        self.next_block = self.store.cfg().n_layers;
+        let ln_f = self.store.load_tensor("ln_f")?;
+        self.writer.write_next(&ln_f)?;
+        drop(ln_f);
+        let head = self.store.load_tensor("head")?;
+        self.peak_block_bytes = self.peak_block_bytes.max(head.numel() * 4);
+        self.writer.write_next(&head)?;
+        // Completeness + flush now, with errors surfaced — a `Drop`-time
+        // flush would swallow them and let a truncated file pass.
+        self.writer.finalize()?;
+        self.finished = true;
+        Ok(())
+    }
+
+    fn final_sparsity(&mut self) -> Result<f64> {
+        if !self.finished {
+            return Err(anyhow!(
+                "streaming fabric sparsity read before finish()"
+            ));
+        }
+        Ok(self.zeros as f64 / self.total.max(1) as f64)
+    }
+
+    fn resident_model_bytes(&self) -> usize {
+        self.peak_block_bytes
+    }
+
+    fn fresh_bytes(&self) -> usize {
+        0
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::rng::Rng;
 
-    fn tiny() -> Weights {
-        let cfg = ModelConfig {
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
             name: "t".into(),
             d: 4,
             n_layers: 1,
@@ -249,7 +789,11 @@ mod tests {
             ffn: 8,
             vocab: 16,
             seq: 8,
-        };
+        }
+    }
+
+    fn tiny() -> Weights {
+        let cfg = tiny_cfg();
         let mut map = HashMap::new();
         map.insert("embed".into(), Tensor::ones(&[16, 4]));
         for k in BLOCK_PARAMS {
@@ -263,7 +807,7 @@ mod tests {
         }
         map.insert("ln_f".into(), Tensor::ones(&[4]));
         map.insert("head".into(), Tensor::ones(&[16, 4]));
-        Weights { cfg, map }
+        Weights::from_map(cfg, map)
     }
 
     #[test]
@@ -289,5 +833,165 @@ mod tests {
         // wq contributes 8 zeros of 16; total prunable = 4*16 + 2*32 + 32
         let total = w.prunable_count() as f64;
         assert_eq!(w.prunable_sparsity(), 8.0 / total);
+    }
+
+    #[test]
+    fn cfg_counts_match_tensor_sums() {
+        let w = tiny();
+        assert_eq!(w.cfg.param_count(), w.param_count());
+        assert_eq!(w.cfg.prunable_count(), w.prunable_count());
+        assert_eq!(w.cfg.n_tensors(), w.iter().count());
+    }
+
+    #[test]
+    fn block_slice_matches_name_lookups() {
+        let w = tiny();
+        for (k, name) in BLOCK_PARAMS.iter().enumerate() {
+            let by_slice = &w.block(0)[k];
+            let by_name = w.get(&Weights::block_name(0, name));
+            assert!(by_slice.shares_data(by_name), "{name}");
+        }
+    }
+
+    #[test]
+    fn canonical_shapes_match_real_tensors() {
+        let w = tiny();
+        for (idx, (_, t)) in w.iter().enumerate() {
+            assert_eq!(w.cfg.canonical_shape(idx), t.shape, "idx {idx}");
+        }
+    }
+
+    #[test]
+    fn clone_is_zero_copy_per_tensor() {
+        let w = tiny();
+        let before = crate::tensor::deep_copied_bytes();
+        let c = w.clone();
+        assert_eq!(crate::tensor::deep_copied_bytes(), before);
+        for ((_, a), (_, b)) in w.iter().zip(c.iter()) {
+            assert!(a.shares_data(b));
+        }
+    }
+
+    /// Satellite: a multi-megabyte model must roundtrip bit-exactly
+    /// through the chunked decode path (tensor sizes straddle many
+    /// IO_CHUNK windows) and through per-block lazy loads.
+    #[test]
+    fn large_file_roundtrip_and_lazy_block_loads() {
+        let cfg = ModelConfig {
+            name: "big".into(),
+            d: 96,
+            n_layers: 3,
+            n_heads: 4,
+            ffn: 256,
+            vocab: 512,
+            seq: 64,
+        };
+        let mut rng = Rng::seed_from_u64(42);
+        let mut map = HashMap::new();
+        let mut rand = |shape: &[usize]| {
+            Tensor::new(
+                shape.to_vec(),
+                (0..shape.iter().product::<usize>())
+                    .map(|_| rng.gen_normal())
+                    .collect(),
+            )
+        };
+        map.insert("embed".into(), rand(&[512, 96]));
+        for i in 0..3 {
+            for k in BLOCK_PARAMS {
+                let shape: Vec<usize> = match k {
+                    "ln1" | "ln2" => vec![96],
+                    "wg" | "wu" => vec![256, 96],
+                    "wd" => vec![96, 256],
+                    _ => vec![96, 96],
+                };
+                map.insert(format!("blocks.{i}.{k}"), rand(&shape));
+            }
+        }
+        map.insert("ln_f".into(), rand(&[96]));
+        map.insert("head".into(), rand(&[512, 96]));
+        let w = Weights::from_map(cfg, map);
+        assert!(
+            w.param_count() * 4 > 2 * (1 << 20),
+            "test model should exceed 2 MiB ({} bytes)",
+            w.param_count() * 4
+        );
+
+        let tmp = std::env::temp_dir().join("wppw_large_roundtrip.bin");
+        w.save(&tmp).unwrap();
+
+        let r = Weights::load(&tmp).unwrap();
+        assert_eq!(r.cfg, w.cfg);
+        for ((na, a), (nb, b)) in w.iter().zip(r.iter()) {
+            assert_eq!(na, nb);
+            assert_eq!(a.shape, b.shape, "{na}");
+            assert_eq!(a.data, b.data, "{na}");
+        }
+
+        // Lazy per-block loads see the same bytes without load_all.
+        let mut store = WeightStore::open(&tmp).unwrap();
+        for i in (0..3).rev() {
+            let bp = store.load_block(i).unwrap();
+            for (k, t) in bp.iter().enumerate() {
+                assert_eq!(t.data, w.block(i)[k].data, "block {i} param {k}");
+            }
+        }
+        assert_eq!(
+            store.load_tensor("head").unwrap().data,
+            w.get("head").data
+        );
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn streaming_writer_enforces_order_and_completeness() {
+        let w = tiny();
+        let tmp = std::env::temp_dir().join("wppw_stream_order.bin");
+        let shapes: Vec<(String, Vec<usize>)> = w
+            .iter()
+            .map(|(n, t)| (n.to_string(), t.shape.clone()))
+            .collect();
+        let mut wr =
+            StreamingWeightWriter::create(&tmp, &w.cfg, shapes.clone())
+                .unwrap();
+        assert_eq!(wr.expected(), Some("embed"));
+        // wrong shape for `embed` is rejected
+        assert!(wr.write_next(&Tensor::zeros(&[2, 2])).is_err());
+        wr.write_next(w.get("embed")).unwrap();
+        // finishing early is rejected
+        assert!(wr.finish().is_err());
+
+        // a complete canonical pass roundtrips
+        let mut wr =
+            StreamingWeightWriter::create(&tmp, &w.cfg, shapes).unwrap();
+        for (_, t) in w.iter() {
+            wr.write_next(t).unwrap();
+        }
+        wr.finish().unwrap();
+        let r = Weights::load(&tmp).unwrap();
+        assert_eq!(r.get("blocks.0.wd").data, w.get("blocks.0.wd").data);
+        std::fs::remove_file(tmp).ok();
+    }
+
+    #[test]
+    fn streaming_fabric_passes_untouched_model_through() {
+        let w = tiny();
+        let src = std::env::temp_dir().join("wppw_fab_src.bin");
+        let dst = std::env::temp_dir().join("wppw_fab_dst.bin");
+        w.save(&src).unwrap();
+        let store = WeightStore::open(&src).unwrap();
+        let mut fab = StreamingFabric::create(store, &dst, None).unwrap();
+        // prune nothing: check the single block out and straight back in
+        let bp = fab.checkout_block(0).unwrap();
+        fab.checkin_block(0, &bp).unwrap();
+        fab.finish().unwrap();
+        assert_eq!(fab.final_sparsity().unwrap(), 0.0);
+        assert!(fab.resident_model_bytes() < w.param_count() * 4);
+        let r = Weights::load(&dst).unwrap();
+        for ((_, a), (_, b)) in w.iter().zip(r.iter()) {
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_file(src).ok();
+        std::fs::remove_file(dst).ok();
     }
 }

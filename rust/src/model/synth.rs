@@ -60,7 +60,7 @@ impl Weights {
             "head".to_string(),
             normal_tensor(&mut rng, &[cfg.vocab, d], s_d),
         );
-        Weights { cfg: cfg.clone(), map }
+        Weights::from_map(cfg.clone(), map)
     }
 }
 

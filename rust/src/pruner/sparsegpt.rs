@@ -24,14 +24,21 @@ pub fn sparsegpt_prune(
     let (rows, cols) = (w.rows(), w.cols());
     assert_eq!(hessian.shape, vec![cols, cols]);
 
+    let mut mask = Tensor::ones(&w.shape);
+    // One up-front copy-on-write materialization for the whole sweep
+    // (the weight is rewritten wholesale anyway); the Hessian working
+    // copy is a plain `to_vec` since it is always mutated.
+    let wd = w.data.make_mut();
+    let md = mask.data.make_mut();
+
     // Dead inputs (H_jj == 0) are handled like the reference: the weight
     // column is zeroed outright and the diagonal patched before inversion.
-    let mut h = hessian.data.clone();
+    let mut h = hessian.data.to_vec();
     for j in 0..cols {
         if h[j * cols + j] == 0.0 {
             h[j * cols + j] = 1.0;
             for r in 0..rows {
-                w.data[r * cols + j] = 0.0;
+                wd[r * cols + j] = 0.0;
             }
         }
     }
@@ -39,8 +46,6 @@ pub fn sparsegpt_prune(
     let u = hessian_inv_chol(&h, cols, PERCDAMP)
         .expect("hessian not invertible even after damping");
     let diag: Vec<f64> = (0..cols).map(|j| u[j * cols + j]).collect();
-
-    let mut mask = Tensor::ones(&w.shape);
 
     // For the structured/unstructured patterns the keep-set is decided
     // up-front from the OBS saliency w^2 / diag(Hinv_chol)^2; for N:M it is
@@ -56,14 +61,14 @@ pub fn sparsegpt_prune(
             let keep = ((cols as f64) * (1.0 - s)).round() as usize;
             for r in 0..rows {
                 let mut idx: Vec<usize> = (0..cols).collect();
-                let row = &w.data[r * cols..(r + 1) * cols];
+                let row = &wd[r * cols..(r + 1) * cols];
                 idx.sort_by(|&a, &b| {
                     saliency(row[b], b)
                         .total_cmp(&saliency(row[a], a))
                         .then(a.cmp(&b))
                 });
                 for &j in idx.iter().skip(keep) {
-                    mask.data[r * cols + j] = 0.0;
+                    md[r * cols + j] = 0.0;
                 }
             }
         }
@@ -71,7 +76,7 @@ pub fn sparsegpt_prune(
             let mut row_scores: Vec<(usize, f64)> = (0..rows)
                 .map(|r| {
                     let s: f64 = (0..cols)
-                        .map(|j| saliency(w.data[r * cols + j], j))
+                        .map(|j| saliency(wd[r * cols + j], j))
                         .sum();
                     (r, s / cols as f64)
                 })
@@ -80,7 +85,7 @@ pub fn sparsegpt_prune(
             let n_prune = ((rows as f64) * frac).round() as usize;
             for &(r, _) in row_scores.iter().take(n_prune) {
                 for j in 0..cols {
-                    mask.data[r * cols + j] = 0.0;
+                    md[r * cols + j] = 0.0;
                 }
             }
         }
@@ -96,12 +101,12 @@ pub fn sparsegpt_prune(
                     let base = r * cols + j;
                     let mut order: Vec<usize> = (0..m).collect();
                     order.sort_by(|&a, &b| {
-                        saliency(w.data[base + b], j + b)
-                            .total_cmp(&saliency(w.data[base + a], j + a))
+                        saliency(wd[base + b], j + b)
+                            .total_cmp(&saliency(wd[base + a], j + a))
                             .then(a.cmp(&b))
                     });
                     for &i in order.iter().skip(n) {
-                        mask.data[base + i] = 0.0;
+                        md[base + i] = 0.0;
                     }
                 }
             }
@@ -109,23 +114,22 @@ pub fn sparsegpt_prune(
         let djj = diag[j];
         for r in 0..rows {
             let idx = r * cols + j;
-            if mask.data[idx] == 0.0 && w.data[idx] != 0.0 {
-                let err = w.data[idx] as f64 / djj;
-                w.data[idx] = 0.0;
+            if md[idx] == 0.0 && wd[idx] != 0.0 {
+                let err = wd[idx] as f64 / djj;
+                wd[idx] = 0.0;
                 // fold the error into the remaining columns of this row
                 for k in j + 1..cols {
-                    w.data[r * cols + k] -=
-                        (err * u[j * cols + k]) as f32;
+                    wd[r * cols + k] -= (err * u[j * cols + k]) as f32;
                 }
-            } else if mask.data[idx] == 0.0 {
-                w.data[idx] = 0.0;
+            } else if md[idx] == 0.0 {
+                wd[idx] = 0.0;
             }
         }
     }
 
     // Ensure exact zeros where masked (error folding never writes there,
     // but keep the invariant explicit).
-    for (wv, mv) in w.data.iter_mut().zip(&mask.data) {
+    for (wv, mv) in wd.iter_mut().zip(md.iter()) {
         if *mv == 0.0 {
             *wv = 0.0;
         }

@@ -123,7 +123,7 @@ pub fn compress_model(w: &Weights, value_bytes: usize) -> Result<CompressedModel
     let mut per_layer = Vec::new();
     let mut dense_total = 0usize;
     let mut compressed_total = 0usize;
-    for (name, t) in &w.map {
+    for (name, t) in w.iter() {
         let dense = t.numel() * value_bytes;
         dense_total += dense;
         let is_prunable = crate::PRUNABLE
@@ -133,7 +133,7 @@ pub fn compress_model(w: &Weights, value_bytes: usize) -> Result<CompressedModel
             let c = compress_24(t)?;
             let cb = c.bytes(value_bytes);
             compressed_total += cb;
-            per_layer.push((name.clone(), dense, cb));
+            per_layer.push((name.to_string(), dense, cb));
         } else {
             compressed_total += dense;
         }

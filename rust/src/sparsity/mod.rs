@@ -81,13 +81,14 @@ pub fn nm_mask_native(scores: &Tensor, n: usize, m: usize) -> Tensor {
     let (rows, cols) = (scores.rows(), scores.cols());
     assert_eq!(cols % m, 0, "d_in {cols} not divisible by M={m}");
     let mut mask = Tensor::zeros(&scores.shape);
+    let md = mask.data.make_mut(); // fresh buffer: one no-op CoW check
     for r in 0..rows {
         for g in 0..cols / m {
             let base = r * cols + g * m;
             group_keep(
                 &scores.data[base..base + m],
                 n,
-                &mut mask.data[base..base + m],
+                &mut md[base..base + m],
             );
         }
     }
@@ -99,6 +100,7 @@ pub fn unstructured_mask(scores: &Tensor, sparsity: f64) -> Tensor {
     let (rows, cols) = (scores.rows(), scores.cols());
     let keep = ((cols as f64) * (1.0 - sparsity)).round() as usize;
     let mut mask = Tensor::zeros(&scores.shape);
+    let md = mask.data.make_mut();
     let mut idx: Vec<usize> = Vec::with_capacity(cols);
     for r in 0..rows {
         let row = &scores.data[r * cols..(r + 1) * cols];
@@ -108,7 +110,7 @@ pub fn unstructured_mask(scores: &Tensor, sparsity: f64) -> Tensor {
             row[b].total_cmp(&row[a]).then(a.cmp(&b))
         });
         for &j in idx.iter().take(keep) {
-            mask.data[r * cols + j] = 1.0;
+            md[r * cols + j] = 1.0;
         }
     }
     mask
@@ -127,9 +129,10 @@ pub fn structured_row_mask(scores: &Tensor, fraction: f64) -> Tensor {
     row_scores.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
     let n_prune = ((rows as f64) * fraction).round() as usize;
     let mut mask = Tensor::ones(&scores.shape);
+    let md = mask.data.make_mut();
     for &(r, _) in row_scores.iter().take(n_prune) {
         for j in 0..cols {
-            mask.data[r * cols + j] = 0.0;
+            md[r * cols + j] = 0.0;
         }
     }
     mask

@@ -5,14 +5,141 @@
 //! Everything on the rust side is f32 (weights, scores, masks, hidden
 //! states) or i32 (token ids); shapes are row-major and validated against
 //! the manifest key before every backend execution.
+//!
+//! ## The shared buffer (DESIGN.md §11)
+//!
+//! [`Tensor`] data lives in a [`TensorBuf`] — an `Arc`-backed shared
+//! buffer with copy-on-write semantics. Cloning a tensor (and therefore a
+//! whole model) is a pointer bump per tensor; the first **mutable** access
+//! to a *shared* buffer materializes a private copy (`Arc::make_mut`).
+//! Read access is a plain `Deref` to `[f32]`, so call sites index and
+//! iterate exactly as they would a `Vec<f32>`. Every copy-on-write
+//! materialization is accounted in a thread-local byte counter
+//! ([`deep_copied_bytes`]) that the pruning pipeline snapshots to prove
+//! its runs never deep-copy the model template.
+
+use std::cell::Cell;
+use std::ops::{Deref, DerefMut};
+use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
+
+thread_local! {
+    /// Bytes materialized by copy-on-write on this thread (see
+    /// [`deep_copied_bytes`]).
+    static COW_BYTES: Cell<usize> = const { Cell::new(0) };
+}
+
+/// Total bytes this thread has deep-copied through [`TensorBuf`]
+/// copy-on-write since the thread started. Monotone; callers snapshot a
+/// before/after delta. Thread-local so parallel tests (and parallel
+/// kernel workers, which only ever allocate *fresh* buffers) never
+/// pollute each other's accounting.
+pub fn deep_copied_bytes() -> usize {
+    COW_BYTES.with(|c| c.get())
+}
+
+/// Shared f32 buffer with copy-on-write mutation — the storage behind
+/// [`Tensor`].
+///
+/// ```
+/// use wandapp::tensor::Tensor;
+/// let a = Tensor::ones(&[1024]);
+/// let mut b = a.clone(); // O(1): both share one buffer
+/// assert!(a.data.shares_buffer(&b.data));
+/// b.data[0] = 2.0; // first mutation materializes b's private copy
+/// assert!(!a.data.shares_buffer(&b.data));
+/// assert_eq!(a.data[0], 1.0);
+/// ```
+#[derive(Clone)]
+pub struct TensorBuf(Arc<Vec<f32>>);
+
+impl TensorBuf {
+    pub fn from_vec(v: Vec<f32>) -> Self {
+        Self(Arc::new(v))
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.0
+    }
+
+    /// Mutable access, copy-on-write: if the buffer is shared, a private
+    /// copy is materialized first (and accounted in
+    /// [`deep_copied_bytes`]).
+    pub fn make_mut(&mut self) -> &mut [f32] {
+        if Arc::strong_count(&self.0) > 1 || Arc::weak_count(&self.0) > 0 {
+            COW_BYTES.with(|c| c.set(c.get() + self.0.len() * 4));
+        }
+        Arc::make_mut(&mut self.0)
+    }
+
+    /// Whether two tensors share one underlying allocation (i.e. cloning
+    /// never copied and neither side has written since).
+    pub fn shares_buffer(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.0, &other.0)
+    }
+}
+
+impl Deref for TensorBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.0
+    }
+}
+
+impl DerefMut for TensorBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        self.make_mut()
+    }
+}
+
+impl From<Vec<f32>> for TensorBuf {
+    fn from(v: Vec<f32>) -> Self {
+        Self::from_vec(v)
+    }
+}
+
+/// `for x in &t.data { .. }` / `.zip(&t.data)` keep working exactly as
+/// they did when the field was a `Vec<f32>`.
+impl<'a> IntoIterator for &'a TensorBuf {
+    type Item = &'a f32;
+    type IntoIter = std::slice::Iter<'a, f32>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.0.iter()
+    }
+}
+
+impl std::fmt::Debug for TensorBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.0.fmt(f)
+    }
+}
+
+impl PartialEq for TensorBuf {
+    fn eq(&self, other: &Self) -> bool {
+        Arc::ptr_eq(&self.0, &other.0) || *self.0 == *other.0
+    }
+}
+
+impl PartialEq<Vec<f32>> for TensorBuf {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        *self.0 == *other
+    }
+}
+
+impl PartialEq<[f32]> for TensorBuf {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.0.as_slice() == other
+    }
+}
 
 /// Dense row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    pub data: TensorBuf,
 }
 
 /// Dense row-major i32 tensor (token ids / targets).
@@ -41,7 +168,7 @@ impl Tensor {
     /// ```
     pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
         debug_assert_eq!(shape.iter().product::<usize>(), data.len());
-        Self { shape, data }
+        Self { shape, data: data.into() }
     }
 
     /// All-zeros tensor of the given shape.
@@ -53,7 +180,7 @@ impl Tensor {
     /// assert_eq!(z.zero_fraction(), 1.0);
     /// ```
     pub fn zeros(shape: &[usize]) -> Self {
-        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+        Self::new(shape.to_vec(), vec![0.0; shape.iter().product()])
     }
 
     /// All-ones tensor of the given shape.
@@ -63,7 +190,7 @@ impl Tensor {
     /// assert_eq!(Tensor::ones(&[3]).data, vec![1.0, 1.0, 1.0]);
     /// ```
     pub fn ones(shape: &[usize]) -> Self {
-        Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+        Self::new(shape.to_vec(), vec![1.0; shape.iter().product()])
     }
 
     /// Constant-filled tensor of the given shape.
@@ -73,7 +200,7 @@ impl Tensor {
     /// assert_eq!(Tensor::filled(&[2], 0.5).data, vec![0.5, 0.5]);
     /// ```
     pub fn filled(shape: &[usize], v: f32) -> Self {
-        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+        Self::new(shape.to_vec(), vec![v; shape.iter().product()])
     }
 
     /// Rank-0 scalar tensor (the shape of artifact loss outputs).
@@ -85,7 +212,7 @@ impl Tensor {
     /// assert_eq!(s.item(), 3.5);
     /// ```
     pub fn scalar(v: f32) -> Self {
-        Self { shape: vec![], data: vec![v] }
+        Self::new(vec![], vec![v])
     }
 
     pub fn numel(&self) -> usize {
@@ -107,22 +234,29 @@ impl Tensor {
         self.shape[self.shape.len() - 1]
     }
 
+    /// Whether this tensor and `other` share one underlying buffer (their
+    /// clone never deep-copied). The zero-copy tests in the coordinator
+    /// assert this across whole models.
+    pub fn shares_data(&self, other: &Tensor) -> bool {
+        self.data.shares_buffer(&other.data)
+    }
+
     /// Element-wise product into a new tensor (used to realize masks).
     pub fn hadamard(&self, other: &Tensor) -> Tensor {
         debug_assert_eq!(self.shape, other.shape);
-        let data = self
+        let data: Vec<f32> = self
             .data
             .iter()
-            .zip(&other.data)
+            .zip(other.data.iter())
             .map(|(a, b)| a * b)
             .collect();
-        Tensor { shape: self.shape.clone(), data }
+        Tensor::new(self.shape.clone(), data)
     }
 
-    /// In-place accumulate: self += other.
+    /// In-place accumulate: self += other (copy-on-write if shared).
     pub fn add_assign(&mut self, other: &Tensor) {
         debug_assert_eq!(self.shape, other.shape);
-        for (a, b) in self.data.iter_mut().zip(&other.data) {
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
             *a += b;
         }
     }
@@ -163,7 +297,7 @@ impl Tensor {
                 shape
             ));
         }
-        Ok(Self { shape: shape.to_vec(), data })
+        Ok(Self::new(shape.to_vec(), data))
     }
 }
 
@@ -330,5 +464,44 @@ mod tests {
         a.add_assign(&Tensor::new(vec![3], vec![1.0, 2.0, 3.0]));
         a.add_assign(&Tensor::new(vec![3], vec![1.0, 1.0, 1.0]));
         assert_eq!(a.data, vec![2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn clone_is_zero_copy_until_written() {
+        let a = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let before = deep_copied_bytes();
+        let b = a.clone();
+        assert!(a.shares_data(&b), "clone must share the buffer");
+        assert_eq!(
+            deep_copied_bytes(),
+            before,
+            "cloning must not deep-copy"
+        );
+    }
+
+    #[test]
+    fn first_write_to_shared_buffer_copies_once_and_is_accounted() {
+        let a = Tensor::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut b = a.clone();
+        let before = deep_copied_bytes();
+        b.data[2] = 9.0;
+        assert_eq!(deep_copied_bytes() - before, 4 * 4, "one 16-byte copy");
+        assert!(!a.shares_data(&b), "write must unshare");
+        assert_eq!(a.data, vec![1.0, 2.0, 3.0, 4.0], "original untouched");
+        assert_eq!(b.data, vec![1.0, 2.0, 9.0, 4.0]);
+        // a second write to the now-private buffer copies nothing
+        let mid = deep_copied_bytes();
+        b.data[0] = 7.0;
+        assert_eq!(deep_copied_bytes(), mid);
+    }
+
+    #[test]
+    fn unique_buffer_mutation_is_free() {
+        let mut a = Tensor::zeros(&[1024]);
+        let before = deep_copied_bytes();
+        for v in a.data.iter_mut() {
+            *v = 1.0;
+        }
+        assert_eq!(deep_copied_bytes(), before);
     }
 }

@@ -440,6 +440,132 @@ fn stade_and_ria_prune_to_target_sparsity() {
     assert_eq!(session.calib_builds(), 1);
 }
 
+/// Golden parity for the weight fabric: the streaming file→file path
+/// (lazy `WeightStore` check-outs, incremental writer) must produce
+/// bit-identical pruned weights and reports to the resident
+/// copy-on-write path for every streaming-capable paper method on fixed
+/// seeds — while holding at most one block of model weights resident.
+#[test]
+fn streaming_prune_matches_resident_bit_exact() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let src = std::env::temp_dir().join("wandapp_stream_parity_src.bin");
+    let template = load_size(rt, "s0").unwrap();
+    template.save(&src).unwrap();
+    let model_bytes = template.param_count() * 4;
+
+    for method in [
+        Method::Magnitude,
+        Method::Wanda,
+        Method::SparseGpt,
+        Method::WandaPPRgs,
+        Method::WandaPPRo,
+        Method::WandaPP,
+    ] {
+        let opts = quick_opts(method, Pattern::NofM(2, 4));
+        let mut resident = load_size(rt, "s0").unwrap();
+        let r1 = Coordinator::new(rt).prune(&mut resident, &opts).unwrap();
+
+        let dst = std::env::temp_dir().join(format!(
+            "wandapp_stream_parity_{}.bin",
+            method.label().replace(|c: char| !c.is_alphanumeric(), "_")
+        ));
+        let r2 = Coordinator::new(rt)
+            .prune_streaming(&src, &dst, &opts)
+            .unwrap();
+        let streamed = Weights::load(&dst).unwrap();
+
+        for (name, t) in resident.iter() {
+            assert_eq!(
+                t.data,
+                streamed.get(name).data,
+                "{} diverged at {name}",
+                method.label()
+            );
+        }
+        assert_eq!(r1.final_sparsity, r2.final_sparsity, "{}", method.label());
+        assert_eq!(
+            r1.blocks.len(),
+            r2.blocks.len(),
+            "{}",
+            method.label()
+        );
+        // The streaming fabric held one block, not the model.
+        assert!(
+            r2.memory.model_resident < model_bytes / 2,
+            "{}: streaming resident {} vs model {model_bytes}",
+            method.label(),
+            r2.memory.model_resident
+        );
+        assert_eq!(r1.memory.model_resident, model_bytes);
+        std::fs::remove_file(dst).ok();
+    }
+
+    // GBLM's full-model backward cannot stream — clean refusal, not a
+    // truncated output file.
+    let dst = std::env::temp_dir().join("wandapp_stream_parity_gblm.bin");
+    let err = Coordinator::new(rt)
+        .prune_streaming(&src, &dst, &quick_opts(Method::Gblm, Pattern::NofM(2, 4)))
+        .unwrap_err();
+    assert!(err.to_string().contains("full-model"), "{err}");
+
+    // Streaming onto the input would truncate the source before the
+    // first block loads — refused, and the source survives intact.
+    let err = Coordinator::new(rt)
+        .prune_streaming(&src, &src, &quick_opts(Method::Wanda, Pattern::NofM(2, 4)))
+        .unwrap_err();
+    assert!(err.to_string().contains("input file"), "{err}");
+    let survived = Weights::load(&src).unwrap();
+    assert_eq!(survived.param_count(), template.param_count());
+    std::fs::remove_file(src).ok();
+}
+
+/// Satellite: across a 2-method session sweep, each run's freshly
+/// materialized model bytes stay within one model's prunable bytes —
+/// the pre-fabric path deep-copied the full model (plus the calibration
+/// stream) on every run.
+#[test]
+fn sweep_deep_copies_at_most_the_prunable_bytes_per_run() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let mut session = PruneSession::builder(rt).size("s0").build().unwrap();
+    let prunable_bytes = session.weights().prunable_count() * 4;
+    let model_bytes = session.weights().param_count() * 4;
+    assert!(prunable_bytes < model_bytes);
+    for method in [Method::Magnitude, Method::Wanda] {
+        let out = session
+            .run(&quick_opts(method, Pattern::NofM(2, 4)))
+            .unwrap();
+        assert!(
+            out.report.bytes_deep_copied > 0,
+            "{}: pruning must rewrite something",
+            method.label()
+        );
+        assert!(
+            out.report.bytes_deep_copied <= prunable_bytes,
+            "{}: deep-copied {} vs prunable {prunable_bytes}",
+            method.label(),
+            out.report.bytes_deep_copied
+        );
+    }
+    // RO rewrites all nine per-block params (the RMSProp step refreshes
+    // the norm vectors too) — bounded by the block-parameter bytes, still
+    // nowhere near a model deep copy.
+    let cfg = session.weights().cfg.clone();
+    let block_bytes = cfg.n_layers * cfg.block_param_count() * 4;
+    let out = session
+        .run(&quick_opts(Method::WandaPP, Pattern::NofM(2, 4)))
+        .unwrap();
+    assert!(out.report.bytes_deep_copied > prunable_bytes);
+    assert!(
+        out.report.bytes_deep_copied <= block_bytes,
+        "wanda++: deep-copied {} vs block params {block_bytes}",
+        out.report.bytes_deep_copied
+    );
+    assert!(block_bytes < model_bytes);
+    assert_eq!(session.calib_builds(), 1);
+}
+
 #[test]
 fn generate_produces_text_on_any_backend() {
     let rt = rt();

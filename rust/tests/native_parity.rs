@@ -197,7 +197,7 @@ fn rgs_grad_matches_finite_differences() {
             .collect()
     };
 
-    let bp: Vec<Tensor> = w.block(0).into_iter().cloned().collect();
+    let bp: Vec<Tensor> = w.block(0).to_vec();
     // wq is block param 1 / prunable 0; wd is block param 8 / prunable 6.
     for (bp_idx, pr_idx, coord) in [(1usize, 0usize, 5usize), (8, 6, 17)] {
         let eps = 1e-2;
@@ -239,7 +239,7 @@ fn ro_steps_descend_on_fixed_mask() {
 
     // Dense targets from the unmasked block.
     let mut inp: Vec<Value> = vec![x.clone().into()];
-    let bp: Vec<Tensor> = w.block(0).into_iter().cloned().collect();
+    let bp: Vec<Tensor> = w.block(0).to_vec();
     for p in &bp {
         inp.push(p.clone().into());
     }
