@@ -1,8 +1,9 @@
 //! End-to-end pipeline benches (in-tree harness): one per paper table
 //! family — full pruning under each method (Table 1 / Table 3 cost), the
 //! SparseGPT OBS solve, perplexity evaluation (every table's readout), the
-//! zero-shot task suite (Table 2), and the latency simulator sweep
-//! (Tables 7/9).
+//! zero-shot task suite (Table 2), the sparse execution engine (2:4 GEMM
+//! vs dense, end-to-end sparse-exec ppl; DESIGN.md §12), and the latency
+//! simulator sweep (Tables 7/9).
 //!
 //! Run with `cargo bench --bench pipeline`.
 
@@ -10,12 +11,13 @@ use wandapp::bench::Group;
 use wandapp::coordinator::{Coordinator, PruneSession};
 use wandapp::eval::perplexity_split;
 use wandapp::latency::{
-    sparsity_reduction, Format, HwProfile, LlmGeometry, Workload,
+    measured::gemm_24_fixture, sparsity_reduction, Format, HwProfile,
+    LlmGeometry, Workload,
 };
 use wandapp::model::load_size;
 use wandapp::pruner::{sparsegpt::sparsegpt_prune, Method, PruneOptions};
-use wandapp::runtime::Backend;
-use wandapp::sparsity::Pattern;
+use wandapp::runtime::{native::math::matmul_nt, native::sparse::matmul_nt_24, Backend};
+use wandapp::sparsity::{Pattern, SparseModel};
 use wandapp::tensor::Tensor;
 
 fn main() {
@@ -157,6 +159,40 @@ fn main() {
     let mut grp = Group::new("zero-shot tasks (s0)").budget(5.0);
     grp.bench("tasks_10ex", || {
         wandapp::eval::run_tasks(rt, &w, 10).unwrap();
+    });
+
+    // --- sparse execution engine: 2:4 GEMM vs dense -------------------------
+    // The acceptance shape for DESIGN.md §12: at d >= 512 the sparse
+    // kernel (half the multiply-adds, cheap nibble decodes) must beat the
+    // dense scalar reduction on the same pruned matrix. The fixture is
+    // shared with `latency --measured` so the two sites measure the same
+    // thing.
+    for d in [512usize, 1024] {
+        let n = 64;
+        let (wp, c, x) = gemm_24_fixture(d, n, 42);
+        let mut grp =
+            Group::new(&format!("sparse GEMM ({n}x{d} @ {d}x{d}, 2:4)"))
+                .budget(2.0);
+        grp.bench("dense_kernel", || {
+            std::hint::black_box(matmul_nt(&x, &wp.data, n, d, d));
+        });
+        grp.bench("sparse24_kernel", || {
+            std::hint::black_box(matmul_nt_24(&x, &c, n));
+        });
+    }
+
+    // --- sparse execution engine: end-to-end perplexity ---------------------
+    let mut pruned = load_size(rt, "s0").unwrap();
+    let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+    opts.n_calib = 16;
+    Coordinator::new(rt).prune(&mut pruned, &opts).unwrap();
+    let sm = SparseModel::pack(&pruned);
+    let mut grp = Group::new("sparse-exec ppl (s0 wanda 2:4, 4 batches)").budget(4.0);
+    grp.bench("dense_path", || {
+        perplexity_split(rt, &pruned, "val", 4).unwrap();
+    });
+    grp.bench("sparse_exec", || {
+        perplexity_split(rt, &sm, "val", 4).unwrap();
     });
 
     // --- latency simulator --------------------------------------------------

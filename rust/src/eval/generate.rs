@@ -1,6 +1,8 @@
 //! Byte-level text generation from a (possibly pruned) model — the
 //! qualitative check that a 2:4 model is still a language model, and the
-//! serving-shaped workload the latency simulator abstracts.
+//! serving-shaped workload the latency simulator abstracts. Generic over
+//! [`EvalModel`], so it runs on dense weights or on the sparse execution
+//! engine's packed representation (`generate --sparse-exec`).
 //!
 //! The artifacts bake a fixed context T, so generation runs a sliding
 //! window: each step re-embeds the last T tokens, forwards the full
@@ -9,25 +11,30 @@
 
 use anyhow::Result;
 
-use crate::eval::forward_hidden;
-use crate::model::Weights;
+use crate::eval::{forward_hidden, EvalModel};
 use crate::rng::Rng;
 use crate::runtime::Backend;
 use crate::tensor::TensorI32;
 
 /// Sample `n_tokens` continuation bytes after `prompt`.
-pub fn generate(
+pub fn generate<'a>(
     rt: &dyn Backend,
-    w: &Weights,
+    m: impl Into<EvalModel<'a>>,
     prompt: &str,
     n_tokens: usize,
     temperature: f32,
     seed: u64,
 ) -> Result<String> {
+    let m = m.into();
+    let cfg = m.cfg();
     let b = rt.manifest().consts.b_eval;
-    let t = w.cfg.seq;
-    let v = w.cfg.vocab;
-    let size = &w.cfg.name;
+    let t = cfg.seq;
+    let v = cfg.vocab;
+    // The output is a byte stream: sampling is clamped to the byte range
+    // so a vocab wider than 256 can never wrap a sampled id through
+    // `next as u8` (ids >= 256 would silently alias other bytes).
+    let n_sample = v.min(256);
+    let size = &cfg.name;
     let logits_key = format!("{size}_logits_t{t}");
     let mut rng = Rng::seed_from_u64(seed);
 
@@ -37,27 +44,28 @@ pub fn generate(
     }
     let mut out = Vec::with_capacity(n_tokens);
 
+    // One reusable batch buffer: the batch dim is baked at B_EVAL (row 0
+    // is read back), so each step writes the padded window into row 0
+    // and replicates it in place — no per-step allocation.
+    let mut toks = TensorI32::new(vec![b, t], vec![0i32; b * t]);
     for _ in 0..n_tokens {
         // last T tokens, right-padded; `pos` is the last occupied index
         let start = tokens.len().saturating_sub(t);
         let window = &tokens[start..];
         let pos = window.len() - 1;
-        let mut padded = window.to_vec();
-        padded.resize(t, 0);
-        // batch dim is baked at B_EVAL: replicate (row 0 is read back)
-        let mut batch = Vec::with_capacity(b * t);
-        for _ in 0..b {
-            batch.extend_from_slice(&padded);
+        toks.data[..window.len()].copy_from_slice(window);
+        toks.data[window.len()..t].fill(0);
+        for r in 1..b {
+            toks.data.copy_within(0..t, r * t);
         }
-        let toks = TensorI32::new(vec![b, t], batch);
-        let h = forward_hidden(rt, w, &toks)?;
+        let h = forward_hidden(rt, m, &toks)?;
         let logits = rt
             .exec_fv(
                 &logits_key,
-                &[(&h).into(), w.get("ln_f").into(), w.get("head").into()],
+                &[(&h).into(), m.ln_f().into(), m.head().into()],
             )?
             .remove(0);
-        let row = &logits.data[pos * v..(pos + 1) * v];
+        let row = &logits.data[pos * v..pos * v + n_sample];
 
         // temperature softmax sample
         let inv_t = 1.0 / temperature.max(1e-3);
@@ -69,7 +77,7 @@ pub fn generate(
             *p /= z;
         }
         let mut u = rng.gen_f32();
-        let mut next = v - 1;
+        let mut next = n_sample - 1;
         for (i, p) in probs.iter().enumerate() {
             if u < *p {
                 next = i;

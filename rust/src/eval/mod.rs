@@ -1,5 +1,8 @@
 //! Evaluation: perplexity (the paper's primary metric) and the zero-shot
-//! likelihood-ranking task suite (Table 2 substitute).
+//! likelihood-ranking task suite (Table 2 substitute). Every eval path is
+//! generic over [`EvalModel`] — dense [`Weights`] through the backend's
+//! block kernels, or a packed [`SparseModel`] through the sparse
+//! execution engine (DESIGN.md §12) — and the two are bit-identical.
 
 mod generate;
 mod ppl;
@@ -11,18 +14,74 @@ pub use tasks::{load_tasks, run_tasks, Task, TaskResult};
 
 use anyhow::Result;
 
-use crate::model::Weights;
+use crate::model::{ModelConfig, Weights};
 use crate::runtime::Backend;
+use crate::sparsity::SparseModel;
+use crate::tensor::Tensor;
+
+/// A model the eval paths can forward. `&Weights` and `&SparseModel`
+/// convert implicitly, so `perplexity(rt, &w, ..)` and
+/// `perplexity(rt, &sparse_model, ..)` both read naturally.
+#[derive(Clone, Copy)]
+pub enum EvalModel<'a> {
+    /// Dense weights through the backend's `block_fwd` kernels.
+    Dense(&'a Weights),
+    /// Packed compressed weights through `Backend::block_fwd_sparse`.
+    Sparse(&'a SparseModel),
+}
+
+impl<'a> From<&'a Weights> for EvalModel<'a> {
+    fn from(w: &'a Weights) -> Self {
+        EvalModel::Dense(w)
+    }
+}
+
+impl<'a> From<&'a SparseModel> for EvalModel<'a> {
+    fn from(m: &'a SparseModel) -> Self {
+        EvalModel::Sparse(m)
+    }
+}
+
+impl<'a> EvalModel<'a> {
+    pub fn cfg(&self) -> &ModelConfig {
+        match self {
+            EvalModel::Dense(w) => &w.cfg,
+            EvalModel::Sparse(m) => &m.cfg,
+        }
+    }
+
+    pub(crate) fn embed(&self) -> &'a Tensor {
+        match self {
+            EvalModel::Dense(w) => w.get("embed"),
+            EvalModel::Sparse(m) => &m.embed,
+        }
+    }
+
+    pub(crate) fn ln_f(&self) -> &'a Tensor {
+        match self {
+            EvalModel::Dense(w) => w.get("ln_f"),
+            EvalModel::Sparse(m) => &m.ln_f,
+        }
+    }
+
+    pub(crate) fn head(&self) -> &'a Tensor {
+        match self {
+            EvalModel::Dense(w) => w.get("head"),
+            EvalModel::Sparse(m) => &m.head,
+        }
+    }
+}
 
 /// The (test, val) perplexity pair every paper table reports — the
 /// "WikiText" and "C4 validation" columns.
-pub fn ppl_pair(
+pub fn ppl_pair<'a>(
     rt: &dyn Backend,
-    w: &Weights,
+    m: impl Into<EvalModel<'a>>,
     max_batches: usize,
 ) -> Result<(f64, f64)> {
+    let m = m.into();
     Ok((
-        perplexity_split(rt, w, "test", max_batches)?,
-        perplexity_split(rt, w, "val", max_batches)?,
+        perplexity_split(rt, m, "test", max_batches)?,
+        perplexity_split(rt, m, "val", max_batches)?,
     ))
 }

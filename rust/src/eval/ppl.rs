@@ -1,77 +1,104 @@
 //! Perplexity evaluation through the backend kernels: embed ->
 //! N x block_fwd -> head_loss, accumulated over contiguous eval batches.
+//! Generic over [`EvalModel`]: dense weights run the `block_fwd` kernel
+//! per block; a packed [`crate::sparsity::SparseModel`] runs
+//! [`Backend::block_fwd_sparse`] on the compressed representation —
+//! same op order, bit-identical perplexity.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::model::{load_corpus, CorpusData, EvalBatches, Weights};
+use crate::eval::EvalModel;
+use crate::model::{load_corpus, CorpusData, EvalBatches};
 use crate::runtime::Backend;
 use crate::tensor::{Tensor, TensorI32, ValueView};
 
 /// Run embedding + all decoder blocks, returning the final hidden states.
-pub fn forward_hidden(
+pub fn forward_hidden<'a>(
     rt: &dyn Backend,
-    w: &Weights,
+    m: impl Into<EvalModel<'a>>,
     tokens: &TensorI32,
 ) -> Result<Tensor> {
-    let size = &w.cfg.name;
-    let t = w.cfg.seq;
+    let m = m.into();
+    let cfg = m.cfg();
+    let size = &cfg.name;
+    let t = cfg.seq;
     let mut h = rt
         .exec_fv(
             &format!("{size}_embed_t{t}"),
-            &[tokens.into(), w.get("embed").into()],
+            &[tokens.into(), m.embed().into()],
         )?
         .remove(0);
     let fwd_key = format!("{size}_block_fwd_t{t}");
-    for i in 0..w.cfg.n_layers {
-        let mut inputs: Vec<ValueView> = Vec::with_capacity(10);
-        inputs.push((&h).into());
-        for p in w.block(i) {
-            inputs.push(p.into());
+    match m {
+        EvalModel::Dense(w) => {
+            for i in 0..cfg.n_layers {
+                let mut inputs: Vec<ValueView> = Vec::with_capacity(10);
+                inputs.push((&h).into());
+                for p in w.block(i) {
+                    inputs.push(p.into());
+                }
+                let y = rt.exec_fv(&fwd_key, &inputs)?.remove(0);
+                h = y;
+            }
         }
-        let y = rt.exec_fv(&fwd_key, &inputs)?.remove(0);
-        h = y;
+        EvalModel::Sparse(sm) => {
+            for blk in &sm.blocks {
+                h = rt.block_fwd_sparse(&fwd_key, &h, blk)?;
+            }
+        }
     }
     Ok(h)
 }
 
 /// Perplexity over up to `max_batches` contiguous eval batches.
-pub fn perplexity(
+///
+/// Errors when the corpus yields no batch at all — an empty eval must
+/// not report `exp(0) = 1.0`, a perfect perplexity.
+pub fn perplexity<'a>(
     rt: &dyn Backend,
-    w: &Weights,
+    m: impl Into<EvalModel<'a>>,
     corpus: &CorpusData,
     max_batches: usize,
 ) -> Result<f64> {
+    let m = m.into();
+    let cfg = m.cfg();
     let b = rt.manifest().consts.b_eval;
-    let t = w.cfg.seq;
-    let size = &w.cfg.name;
+    let t = cfg.seq;
+    let size = &cfg.name;
     let head_key = format!("{size}_head_loss_t{t}");
     let mut total_nll = 0.0f64;
     let mut total_cnt = 0.0f64;
     for (inp, tgt) in EvalBatches::new(corpus, b, t, max_batches) {
-        let h = forward_hidden(rt, w, &inp)?;
+        let h = forward_hidden(rt, m, &inp)?;
         let out = rt.exec_fv(
             &head_key,
             &[
                 (&h).into(),
                 (&tgt).into(),
-                w.get("ln_f").into(),
-                w.get("head").into(),
+                m.ln_f().into(),
+                m.head().into(),
             ],
         )?;
         total_nll += out[0].item() as f64;
         total_cnt += out[1].item() as f64;
     }
-    Ok((total_nll / total_cnt.max(1.0)).exp())
+    if total_cnt == 0.0 {
+        bail!(
+            "perplexity: no eval tokens (corpus shorter than one {b}x{t} \
+             batch, or max_batches is 0)"
+        );
+    }
+    Ok((total_nll / total_cnt).exp())
 }
 
 /// Convenience: perplexity on a named corpus split from the artifacts dir
 /// (synthetic fallback when the split file is absent).
-pub fn perplexity_split(
+pub fn perplexity_split<'a>(
     rt: &dyn Backend,
-    w: &Weights,
+    m: impl Into<EvalModel<'a>>,
     split: &str,
     max_batches: usize,
 ) -> Result<f64> {
     let corpus = load_corpus(rt, split)?;
-    perplexity(rt, w, &corpus, max_batches)
+    perplexity(rt, m.into(), &corpus, max_batches)
 }

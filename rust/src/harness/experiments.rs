@@ -378,6 +378,84 @@ pub fn table7_table9() {
     }
 }
 
+/// `latency --measured`: the roofline's reality check (DESIGN.md §12).
+/// Times the native dense GEMM vs the 2:4 sparse kernel on this machine
+/// and an end-to-end perplexity pass on a pruned model (dense path vs the
+/// sparse execution engine), printing measured wall-clock reduction next
+/// to the analytic prediction. `smoke` shrinks sizes/budgets for CI.
+pub fn latency_measured(rt: &dyn Backend, smoke: bool) -> Result<()> {
+    use crate::eval::perplexity_split;
+    use crate::latency::{
+        measured::measure_gemm_24, weight_bytes, Format, HwProfile,
+        LlmGeometry,
+    };
+    use crate::sparsity::SparseModel;
+    use std::time::Instant;
+
+    let hw = HwProfile::h100();
+    println!("== Measured sparse execution (this machine, native kernels) ==");
+    println!("(analytic columns are the {} roofline prediction)", hw.name);
+
+    // --- GEMM: dense vs 2:4 on identical pruned matrices ----------------
+    let (ds, n, budget): (&[usize], usize, f64) = if smoke {
+        (&[512], 8, 0.15)
+    } else {
+        (&[512, 1024, 2048], 64, 1.0)
+    };
+    println!("\n  d     measured 2:4 GEMM   analytic compute   analytic weight-bytes");
+    for &d in ds {
+        let m = measure_gemm_24(d, n, budget, 7);
+        // Analytic, f32 on-disk format: compute bound = 1 - 1/speedup;
+        // weight traffic = 2:4 packed bytes vs dense at 4B values.
+        let compute_pct = 100.0 * (1.0 - 1.0 / hw.sparse_speedup);
+        let weight_pct = 100.0 * (1.0 - (0.5 * 4.0 + 0.125) / 4.0);
+        println!(
+            "{d:>5} {:>12.1}% ({:.2}x) {compute_pct:>13.1}% {weight_pct:>18.1}%",
+            m.reduction_pct(),
+            m.speedup()
+        );
+    }
+
+    // --- end-to-end: ppl on a pruned s0, dense path vs sparse engine ----
+    let mut w = crate::model::load_size(rt, "s0")?;
+    let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+    opts.n_calib = 16;
+    crate::coordinator::Coordinator::new(rt).prune(&mut w, &opts)?;
+    let sm = SparseModel::pack(&w);
+    let batches = if smoke { 2 } else { EVAL_BATCHES };
+    let t0 = Instant::now();
+    let dense = perplexity_split(rt, &w, "test", batches)?;
+    let t_dense = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let sparse = perplexity_split(rt, &sm, "test", batches)?;
+    let t_sparse = t1.elapsed().as_secs_f64();
+    println!("\n  end-to-end ppl, s0 wanda 2:4, {batches} batches:");
+    println!(
+        "  dense {t_dense:.3}s -> sparse-exec {t_sparse:.3}s \
+         ({:+.1}% wall-clock reduction)",
+        100.0 * (t_dense - t_sparse) / t_dense
+    );
+    println!(
+        "  ppl {dense:.6} vs {sparse:.6} (bit-identical: {})",
+        dense.to_bits() == sparse.to_bits()
+    );
+    println!("  {}", sm.report.summary());
+    // The simulator's whole-model weight story at FP16, for contrast.
+    let g = LlmGeometry::llama7b();
+    let wd = weight_bytes(&g, Format::FP16, false);
+    let ws = weight_bytes(&g, Format::FP16, true);
+    println!(
+        "  analytic 7B FP16 weight bytes: {:.1} -> {:.1} GB ({:.1}% reduction)",
+        wd / 1e9,
+        ws / 1e9,
+        100.0 * (wd - ws) / wd
+    );
+    if dense.to_bits() != sparse.to_bits() {
+        anyhow::bail!("sparse-exec perplexity diverged from the dense path");
+    }
+    Ok(())
+}
+
 /// Table 8: the RGS alpha ablation. Alpha is not part of the calibration
 /// key, so the whole sweep shares one calibration build.
 pub fn table8(rt: &dyn Backend, size: &str) -> Result<Vec<(f32, f64)>> {

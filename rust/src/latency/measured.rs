@@ -1,0 +1,106 @@
+//! Measured wall-clock counterpart of the analytic roofline: time the
+//! native dense GEMM against the 2:4 sparse kernel on identical pruned
+//! inputs, on **this** machine (`wandapp latency --measured`). The paper
+//! contrasts TensorRT-LLM measurements with bandwidth arithmetic
+//! (Table 7 / Appendix B); we contrast our own kernels with our own
+//! simulator so the predicted speedup can't silently rot.
+
+use crate::bench::bench_with;
+use crate::rng::Rng;
+use crate::runtime::native::math::matmul_nt;
+use crate::runtime::native::sparse::matmul_nt_24;
+use crate::sparsity::compress::{compress_24, Compressed24};
+use crate::sparsity::nm_mask_native;
+use crate::tensor::Tensor;
+
+/// Build the dense-vs-sparse GEMM fixture both `latency --measured` and
+/// the pipeline bench time: a magnitude-2:4-pruned `(d, d)` matrix (as
+/// dense tensor and packed form, the *same* values) plus an `(n, d)`
+/// input, deterministic in `seed`. One definition so the two
+/// measurement sites can never drift apart.
+pub fn gemm_24_fixture(
+    d: usize,
+    n: usize,
+    seed: u64,
+) -> (Tensor, Compressed24, Vec<f32>) {
+    let mut rng = Rng::seed_from_u64(seed);
+    let w = Tensor::new(
+        vec![d, d],
+        (0..d * d).map(|_| rng.gen_normal()).collect(),
+    );
+    let scores =
+        Tensor::new(w.shape.clone(), w.data.iter().map(|v| v.abs()).collect());
+    let wp = w.hadamard(&nm_mask_native(&scores, 2, 4));
+    let c = compress_24(&wp).expect("magnitude-2:4 matrix must pack");
+    let x: Vec<f32> = (0..n * d).map(|_| rng.gen_normal()).collect();
+    (wp, c, x)
+}
+
+/// One dense-vs-sparse GEMM timing at a given hidden size.
+#[derive(Debug, Clone, Copy)]
+pub struct GemmMeasurement {
+    pub d: usize,
+    /// Input rows (tokens) per GEMM.
+    pub n: usize,
+    pub dense_secs: f64,
+    pub sparse_secs: f64,
+}
+
+impl GemmMeasurement {
+    /// Measured latency reduction (%), the roofline tables' convention
+    /// (positive = sparse is faster).
+    pub fn reduction_pct(&self) -> f64 {
+        100.0 * (self.dense_secs - self.sparse_secs) / self.dense_secs
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.dense_secs / self.sparse_secs
+    }
+}
+
+/// Time `x(n,d) @ w(d,d)^T` dense vs 2:4-compressed on the native
+/// kernels. `w` is magnitude-pruned to exact 2:4 so both kernels see the
+/// same pruned matrix; timings are min-of-iterations within
+/// `budget_secs` per side, deterministic inputs from `seed`.
+pub fn measure_gemm_24(
+    d: usize,
+    n: usize,
+    budget_secs: f64,
+    seed: u64,
+) -> GemmMeasurement {
+    let (wp, c, x) = gemm_24_fixture(d, n, seed);
+
+    let label_d = format!("dense  gemm {n}x{d} @ {d}x{d}");
+    let dense = bench_with(&label_d, 1, budget_secs, &mut || {
+        std::hint::black_box(matmul_nt(&x, &wp.data, n, d, d));
+    });
+    let label_s = format!("2:4    gemm {n}x{d} @ {d}x{d}");
+    let sparse = bench_with(&label_s, 1, budget_secs, &mut || {
+        std::hint::black_box(matmul_nt_24(&x, &c, n));
+    });
+    GemmMeasurement {
+        d,
+        n,
+        dense_secs: dense.min_secs,
+        sparse_secs: sparse.min_secs,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_runs_and_reports_consistently() {
+        // Tiny + fast: only the structure is asserted, not the speedup
+        // (d=64 is too small for the sparse win to be reliable in CI).
+        let m = measure_gemm_24(64, 4, 0.02, 1);
+        assert_eq!(m.d, 64);
+        assert!(m.dense_secs > 0.0 && m.sparse_secs > 0.0);
+        assert!((m.reduction_pct()
+            - 100.0 * (1.0 - m.sparse_secs / m.dense_secs))
+            .abs()
+            < 1e-9);
+        assert!((m.speedup() - m.dense_secs / m.sparse_secs).abs() < 1e-12);
+    }
+}

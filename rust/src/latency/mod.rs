@@ -16,6 +16,13 @@
 //! already runs at doubled rate; sparse FP8 kernels barely add), and
 //! (c) a fixed decode-engine overhead that dilutes the TPOT benefit.
 //! Only MLP modules are pruned, as in the paper's deployment experiment.
+//!
+//! The [`measured`] submodule is the analytic model's reality check: it
+//! times the native dense GEMM against the 2:4 sparse kernel on this
+//! machine (`wandapp latency --measured`), so the predicted and measured
+//! reductions print side by side (DESIGN.md §12).
+
+pub mod measured;
 
 /// Numeric format of weights/activations/KV-cache.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -21,7 +21,11 @@
 //!   [`model::WeightFabric`] check-out/check-in trait; DESIGN.md §11),
 //!   calibration/eval data, and deterministic synthetic fallbacks for
 //!   artifact-free runs.
-//! - [`sparsity`] — mask algebra: unstructured, 2:4, 4:8, structured rows.
+//! - [`sparsity`] — mask algebra (unstructured, 2:4, 4:8, structured
+//!   rows), the compressed formats ([`sparsity::compress`]) and the
+//!   sparse execution engine ([`sparsity::SparseModel`] — eval and
+//!   generation on packed 2:4/CSR weights, bit-identical to the dense
+//!   path; DESIGN.md §12).
 //! - [`pruner`] — the pluggable [`pruner::Scorer`] trait and
 //!   [`pruner::ScorerRegistry`]: magnitude, Wanda, SparseGPT, GBLM,
 //!   Wanda++ (RGS / RO / full) plus STADE and RIA ship as built-in
@@ -32,7 +36,9 @@
 //!   [`coordinator::PruneSession`] that shares one calibration build
 //!   across many method runs.
 //! - [`eval`] — perplexity + the zero-shot likelihood-ranking task suite.
-//! - [`latency`] — roofline latency simulator for the 2:4 deployment tables.
+//! - [`latency`] — roofline latency simulator for the 2:4 deployment
+//!   tables, plus measured dense-vs-sparse kernel timings
+//!   ([`latency::measured`], `wandapp latency --measured`).
 //! - [`lora`] — sparsity-aware LoRA fine-tuning (paper §5.6).
 //! - [`harness`] — one driver per paper table/figure (DESIGN.md §7).
 

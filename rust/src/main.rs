@@ -34,15 +34,21 @@ COMMANDS
            Prune a model; report ppl before/after. --stream-to prunes
            file-to-file with O(one block) fresh residency: blocks load
            lazily from the weight file and stream out as they finish.
-  eval     --size s2 [--weights FILE]
+  eval     --size s2 [--weights FILE] [--sparse-exec]
            Perplexity of a weight file (or the pristine size).
+           --sparse-exec packs a pruned model once and evaluates on the
+           compressed 2:4 / row-sparse representation (bit-identical).
   tasks    --size s2 [--weights FILE] [--max-examples 50]
            Zero-shot task suite.
   repro    <fig1|fig3|fig4|table1..table9|all> [--sizes s0,s1] [--runs 10]
            Regenerate a paper table/figure.
-  latency  Roofline latency simulation (Tables 7 & 9).
+  latency  [--measured [--smoke]]
+           Roofline latency simulation (Tables 7 & 9). --measured also
+           times dense vs 2:4-sparse kernels on this machine and prints
+           the measured reduction next to the analytic prediction.
   generate --size s2 [--weights FILE] [--prompt STR] [--tokens 200]
-           [--temp 0.8] Sample text from a (pruned) model.
+           [--temp 0.8] [--sparse-exec]
+           Sample text from a (pruned) model.
   inspect  --weights FILE [--fmt fp16|f32]
            Per-layer sparsity + 2:4 compressed-size report of a pruned model.
   profile  [--size s0]  Execution profile of a short Wanda++ run.
@@ -54,7 +60,12 @@ METHODS  magnitude wanda sparsegpt gblm wanda++rgs wanda++ro wanda++
 PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
-/// Tiny flag parser: positional args + `--key value` pairs.
+/// Valueless switches: `--sparse-exec`, `--measured`, `--smoke` take no
+/// argument (everything else is a `--key value` pair).
+const BOOL_FLAGS: [&str; 3] = ["sparse-exec", "measured", "smoke"];
+
+/// Tiny flag parser: positional args + `--key value` pairs + boolean
+/// switches.
 struct Args {
     positional: Vec<String>,
     flags: std::collections::HashMap<String, String>,
@@ -67,6 +78,11 @@ impl Args {
         let mut i = 0;
         while i < argv.len() {
             if let Some(key) = argv[i].strip_prefix("--") {
+                if BOOL_FLAGS.contains(&key) {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                    continue;
+                }
                 let val = argv
                     .get(i + 1)
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
@@ -86,6 +102,10 @@ impl Args {
 
     fn get_opt(&self, key: &str) -> Option<String> {
         self.flags.get(key).cloned()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
     }
 
     fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
@@ -214,7 +234,13 @@ fn main() -> Result<()> {
                 Some(p) => wandapp::model::Weights::load(p)?,
                 None => load_size(rt, &args.get("size", "s2"))?,
             };
-            let (test, val) = ppl_pair(rt, &w, harness::EVAL_BATCHES)?;
+            let (test, val) = if args.has("sparse-exec") {
+                let sm = wandapp::sparsity::SparseModel::pack(&w);
+                println!("{}", sm.report.summary());
+                ppl_pair(rt, &sm, harness::EVAL_BATCHES)?
+            } else {
+                ppl_pair(rt, &w, harness::EVAL_BATCHES)?
+            };
             println!(
                 "{} ({:.2}M params, sparsity {:.3}): test {test:.3}  val {val:.3}",
                 w.cfg.name,
@@ -245,7 +271,12 @@ fn main() -> Result<()> {
             let runs = args.get_parse("runs", 10)?;
             harness::run_experiment(rt, exp, sizes.as_deref(), runs)?;
         }
-        "latency" => harness::table7_table9(),
+        "latency" => {
+            harness::table7_table9();
+            if args.has("measured") {
+                harness::latency_measured(rt, args.has("smoke"))?;
+            }
+        }
         "generate" => {
             let w = match args.get_opt("weights") {
                 Some(p) => wandapp::model::Weights::load(p)?,
@@ -255,7 +286,12 @@ fn main() -> Result<()> {
             let n = args.get_parse("tokens", 200)?;
             let temp = args.get_parse("temp", 0.8f32)?;
             let seed = args.get_parse("seed", 0u64)?;
-            let text = wandapp::eval::generate(rt, &w, &prompt, n, temp, seed)?;
+            let text = if args.has("sparse-exec") {
+                let sm = wandapp::sparsity::SparseModel::pack(&w);
+                wandapp::eval::generate(rt, &sm, &prompt, n, temp, seed)?
+            } else {
+                wandapp::eval::generate(rt, &w, &prompt, n, temp, seed)?
+            };
             println!("{prompt}{text}");
         }
         "inspect" => {
@@ -279,10 +315,14 @@ fn main() -> Result<()> {
             } else {
                 let rep = wandapp::sparsity::compress::compress_model(&w, vb)?;
                 println!("{:<16} {:>10} {:>12} {:>7}", "tensor", "dense B", "2:4 packed B", "ratio");
-                for (name, dense, packed) in &rep.per_layer {
+                for l in &rep.per_layer {
                     println!(
-                        "{name:<16} {dense:>10} {packed:>12} {:>6.3}",
-                        *packed as f64 / *dense as f64
+                        "{:<16} {:>10} {:>12} {:>6.3}{}",
+                        l.name,
+                        l.dense_bytes,
+                        l.bytes,
+                        l.bytes as f64 / l.dense_bytes as f64,
+                        if l.packed { "" } else { "  (not 2:4 — kept dense)" }
                     );
                 }
                 println!(

@@ -40,6 +40,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::sparsity::SparseBlock;
 use crate::tensor::{Tensor, Value, ValueView};
 
 /// A compute backend: maps manifest keys to typed kernel executions.
@@ -93,6 +94,31 @@ pub trait Backend {
             .into_iter()
             .map(|v| v.into_f32())
             .collect()
+    }
+
+    /// Forward one decoder block on packed sparse weights (the sparse
+    /// execution engine, DESIGN.md §12). `key` is the same
+    /// `{size}_block_fwd_t{t}` manifest key as the dense kernel; `x` is
+    /// the `(b, t, d)` block input.
+    ///
+    /// The default implementation decompresses the block and runs the
+    /// dense `block_fwd` kernel — correct on any backend (this is the
+    /// PJRT path, which has no sparse artifacts). The native backend
+    /// overrides it to execute directly on the compressed representation;
+    /// both produce bit-identical outputs (same op order, zeros skipped).
+    fn block_fwd_sparse(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: &SparseBlock,
+    ) -> Result<Tensor> {
+        let dense = blk.dense_params();
+        let mut inputs: Vec<ValueView> = Vec::with_capacity(10);
+        inputs.push(x.into());
+        for t in &dense {
+            inputs.push(t.into());
+        }
+        Ok(self.exec_fv(key, &inputs)?.remove(0))
     }
 }
 

@@ -147,17 +147,51 @@ impl BlockCache {
 }
 
 /// Forward one decoder block over `x` of shape `(b, t, d)`; returns the
-/// output and the cache of intermediates.
+/// output and the cache of intermediates. Thin dense wrapper over
+/// [`block_forward_with`] — the seven projections are plain `matmul_nt`
+/// calls on the dense weight slices.
 pub fn block_forward(x: &[f32], w: BlockWeights, dims: Dims) -> (Vec<f32>, BlockCache) {
+    let (d, f) = (dims.d, dims.ffn);
+    block_forward_with(x, w.ln1, w.ln2, dims, |pi, input| {
+        // `PRUNABLE` order: wq wk wv wo wg wu wd.
+        match pi {
+            0 => matmul_nt(input, w.wq, input.len() / d, d, d),
+            1 => matmul_nt(input, w.wk, input.len() / d, d, d),
+            2 => matmul_nt(input, w.wv, input.len() / d, d, d),
+            3 => matmul_nt(input, w.wo, input.len() / d, d, d),
+            4 => matmul_nt(input, w.wg, input.len() / d, d, f),
+            5 => matmul_nt(input, w.wu, input.len() / d, d, f),
+            _ => matmul_nt(input, w.wd, input.len() / f, f, d),
+        }
+    })
+}
+
+/// Forward one decoder block with the seven prunable projections supplied
+/// by `proj(prunable_idx, input) -> rows @ w^T` (indices in `PRUNABLE`
+/// order: wq wk wv wo wg wu wd). Everything that is *not* a prunable
+/// GEMM — norms, RoPE, the attention core, residuals, SwiGLU — runs here,
+/// so the dense path ([`block_forward`]) and the sparse execution engine
+/// (`runtime::native::sparse`, DESIGN.md §12) share one op order and stay
+/// bit-identical by construction.
+pub fn block_forward_with<F>(
+    x: &[f32],
+    ln1: &[f32],
+    ln2: &[f32],
+    dims: Dims,
+    proj: F,
+) -> (Vec<f32>, BlockCache)
+where
+    F: Fn(usize, &[f32]) -> Vec<f32>,
+{
     let n = dims.positions();
-    let (t, d, h, f) = (dims.t, dims.d, dims.h, dims.ffn);
+    let (t, d, h) = (dims.t, dims.d, dims.h);
     let hd = dims.head_dim();
     let (cos, sin) = rope_tables(t, hd);
 
-    let (xn, r1) = rmsnorm(x, w.ln1, d);
-    let mut q = matmul_nt(&xn, w.wq, n, d, d);
-    let mut k = matmul_nt(&xn, w.wk, n, d, d);
-    let v = matmul_nt(&xn, w.wv, n, d, d);
+    let (xn, r1) = rmsnorm(x, ln1, d);
+    let mut q = proj(0, &xn);
+    let mut k = proj(1, &xn);
+    let v = proj(2, &xn);
     apply_rope(&mut q, dims, &cos, &sin, false);
     apply_rope(&mut k, dims, &cos, &sin, false);
 
@@ -192,21 +226,21 @@ pub fn block_forward(x: &[f32], w: BlockWeights, dims: Dims) -> (Vec<f32>, Block
         }
     }
 
-    let o = matmul_nt(&attn, w.wo, n, d, d);
+    let o = proj(3, &attn);
     let mut x2 = x.to_vec();
     for (a, b) in x2.iter_mut().zip(&o) {
         *a += b;
     }
 
-    let (xm, r2) = rmsnorm(&x2, w.ln2, d);
-    let gpre = matmul_nt(&xm, w.wg, n, d, f);
-    let up = matmul_nt(&xm, w.wu, n, d, f);
+    let (xm, r2) = rmsnorm(&x2, ln2, d);
+    let gpre = proj(4, &xm);
+    let up = proj(5, &xm);
     let act: Vec<f32> = gpre
         .iter()
         .zip(&up)
         .map(|(g, u)| silu(*g) * u)
         .collect();
-    let down = matmul_nt(&act, w.wd, n, f, d);
+    let down = proj(6, &act);
     let mut y = x2.clone();
     for (a, b) in y.iter_mut().zip(&down) {
         *a += b;

@@ -15,6 +15,7 @@
 pub mod block;
 pub mod math;
 pub mod model;
+pub mod sparse;
 
 use std::cell::RefCell;
 use std::path::{Path, PathBuf};
@@ -23,7 +24,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::{Backend, ExecStats, Manifest, SizeInfo};
-use crate::sparsity::nm_mask_native;
+use crate::sparsity::{nm_mask_native, SparseBlock};
 use crate::tensor::{Tensor, TensorI32, Value, ValueView};
 
 use block::{
@@ -901,6 +902,37 @@ impl Backend for NativeBackend {
             .borrow_mut()
             .record_exec(key, t0.elapsed().as_secs_f64());
         Ok(out)
+    }
+
+    /// True sparse execution: the shared block core with each prunable
+    /// projection running on its packed representation
+    /// (`runtime::native::sparse`, DESIGN.md §12) — no decompression, no
+    /// dense zero-multiplies. Bit-identical to the dense `block_fwd`.
+    fn block_fwd_sparse(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: &SparseBlock,
+    ) -> Result<Tensor> {
+        let (_, info, kernel) = self
+            .split_key(key)
+            .ok_or_else(|| anyhow!("unknown kernel key `{key}`"))?;
+        let Some(Kernel::BlockFwd(t)) = Self::parse_kernel(kernel) else {
+            bail!("{key}: block_fwd_sparse expects a block_fwd key");
+        };
+        if !self.supports(key) {
+            return Err(anyhow!("native backend does not support `{key}`"));
+        }
+        let dims = Self::block_dims(key, info, x, t)?;
+        blk.check_dims(info.d, info.ffn)?;
+        let t0 = Instant::now();
+        let y = sparse::sparse_block_forward(&x.data, blk, dims);
+        // Accounted under a distinct key so `profile` output separates
+        // sparse from dense block time.
+        self.stats
+            .borrow_mut()
+            .record_exec(&format!("{key}#sparse"), t0.elapsed().as_secs_f64());
+        Ok(Tensor::new(x.shape.clone(), y))
     }
 }
 

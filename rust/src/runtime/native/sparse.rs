@@ -1,0 +1,198 @@
+//! Sparse GEMM kernels: `x @ w^T` computed directly on compressed weight
+//! representations (DESIGN.md §12) — the execution half of the 2:4 story
+//! that `sparsity/compress.rs` packs and the roofline simulator predicts.
+//!
+//! Bit-exactness contract: both kernels visit the surviving weights of
+//! each output row in ascending column order — exactly the dense
+//! `matmul_nt` accumulation order with the zero terms skipped. Adding
+//! `0.0 * x[j]` never changes a finite f32 accumulation, so for finite
+//! inputs these kernels return the same values as the dense kernel, and
+//! the eval parity tests assert that bit-for-bit.
+//!
+//! Performance model: the dense inner loop is a strict-FP scalar
+//! reduction (no reassociation, hence no SIMD), i.e. `k` multiply-adds
+//! per output element. The 2:4 kernel does `k/2` multiply-adds plus
+//! cheap integer nibble decodes that dual-issue with the FP pipeline —
+//! the measured counterpart of the simulator's `sparse_speedup`
+//! (`wandapp latency --measured`).
+
+use crate::sparsity::compress::{Compressed24, RowCompressed};
+use crate::sparsity::exec::SparseBlock;
+
+use super::block::{block_forward_with, Dims};
+use super::math::par_rows;
+
+/// `y = x @ w^T` with `w` in 2:4-compressed form: x is `(n, k)`, w is
+/// `(m, k)` packed as 2 values + one metadata nibble per group of 4
+/// columns, y is `(n, m)`. Iterates only the kept values, reading their
+/// in-group positions from the metadata — the zeros are never touched.
+pub fn matmul_nt_24(x: &[f32], c: &Compressed24, n: usize) -> Vec<f32> {
+    let (m, k) = (c.shape[0], c.shape[1]);
+    debug_assert_eq!(x.len(), n * k);
+    let gpr = k / 4; // groups per weight row
+    let values = &c.values;
+    let meta = &c.meta;
+    let mut y = vec![0.0f32; n * m];
+    par_rows(&mut y, m, |i, row| {
+        let xi = &x[i * k..(i + 1) * k];
+        if gpr % 2 == 0 {
+            // Fast path (k % 8 == 0, every real model dim): each weight
+            // row starts byte-aligned in the metadata, so one byte load
+            // decodes two groups (8 columns, 4 kept values).
+            for (o, out) in row.iter_mut().enumerate() {
+                let mb = o * gpr / 2;
+                let mut v = o * gpr * 2;
+                let mut acc = 0.0f32;
+                for (byte, xg) in
+                    meta[mb..mb + gpr / 2].iter().zip(xi.chunks_exact(8))
+                {
+                    let b = *byte as usize;
+                    acc += values[v] * xg[b & 3];
+                    acc += values[v + 1] * xg[(b >> 2) & 3];
+                    acc += values[v + 2] * xg[4 + ((b >> 4) & 3)];
+                    acc += values[v + 3] * xg[4 + ((b >> 6) & 3)];
+                    v += 4;
+                }
+                *out = acc;
+            }
+        } else {
+            // General path: per-group nibble decode (handles k % 8 != 0,
+            // where a metadata byte can straddle a row boundary).
+            for (o, out) in row.iter_mut().enumerate() {
+                let mut g = o * gpr;
+                let mut acc = 0.0f32;
+                for xg in xi.chunks_exact(4) {
+                    let nib = (meta[g >> 1] >> ((g & 1) * 4)) & 0x0F;
+                    acc += values[2 * g] * xg[(nib & 3) as usize];
+                    acc += values[2 * g + 1] * xg[((nib >> 2) & 3) as usize];
+                    g += 1;
+                }
+                *out = acc;
+            }
+        }
+    });
+    y
+}
+
+/// `y = x @ w^T` with `w` row-compressed (CSR): x is `(n, k)`, w is
+/// `(m, k)` as per-row (column, value) pairs in ascending column order.
+/// The executable path for unstructured masks — work scales with the
+/// kept-weight count, not the dense shape.
+pub fn matmul_nt_rows(x: &[f32], c: &RowCompressed, n: usize) -> Vec<f32> {
+    let (m, k) = (c.shape[0], c.shape[1]);
+    debug_assert_eq!(x.len(), n * k);
+    let mut y = vec![0.0f32; n * m];
+    par_rows(&mut y, m, |i, row| {
+        let xi = &x[i * k..(i + 1) * k];
+        for (o, out) in row.iter_mut().enumerate() {
+            let lo = c.row_ptr[o] as usize;
+            let hi = c.row_ptr[o + 1] as usize;
+            let mut acc = 0.0f32;
+            for (col, v) in c.cols[lo..hi].iter().zip(&c.values[lo..hi]) {
+                acc += v * xi[*col as usize];
+            }
+            *out = acc;
+        }
+    });
+    y
+}
+
+/// Forward one decoder block on packed sparse weights: the shared
+/// [`block_forward_with`] core with each prunable projection dispatched
+/// to its packed representation's kernel. Same op order as the dense
+/// [`super::block::block_forward`], so outputs are bit-identical.
+pub fn sparse_block_forward(x: &[f32], blk: &SparseBlock, dims: Dims) -> Vec<f32> {
+    let (y, _) = block_forward_with(
+        x,
+        &blk.ln1.data,
+        &blk.ln2.data,
+        dims,
+        |pi, input| blk.mats[pi].matmul_nt(input, input.len() / blk.mats[pi].cols()),
+    );
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::runtime::native::math::matmul_nt;
+    use crate::sparsity::compress::{compress_24, compress_rows};
+    use crate::sparsity::{nm_mask_native, unstructured_mask};
+    use crate::tensor::Tensor;
+
+    fn rand_tensor(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+        Tensor::new(
+            vec![rows, cols],
+            (0..rows * cols).map(|_| rng.gen_normal()).collect(),
+        )
+    }
+
+    fn pruned_24(rng: &mut Rng, rows: usize, cols: usize) -> Tensor {
+        let w = rand_tensor(rng, rows, cols);
+        let scores =
+            Tensor::new(w.shape.clone(), w.data.iter().map(|v| v.abs()).collect());
+        w.hadamard(&nm_mask_native(&scores, 2, 4))
+    }
+
+    #[test]
+    fn sparse24_matches_dense_bit_exactly() {
+        let mut rng = Rng::seed_from_u64(11);
+        // cols=16 hits the byte-aligned fast path, cols=12 the nibble path
+        for (m, k) in [(8usize, 16usize), (5, 12), (16, 8), (3, 4)] {
+            let w = pruned_24(&mut rng, m, k);
+            let c = compress_24(&w).unwrap();
+            for n in [1usize, 4, 7] {
+                let x: Vec<f32> =
+                    (0..n * k).map(|_| rng.gen_normal()).collect();
+                let dense = matmul_nt(&x, &w.data, n, k, m);
+                let sparse = matmul_nt_24(&x, &c, n);
+                assert_eq!(dense, sparse, "m={m} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse24_handles_groups_with_extra_zeros() {
+        let mut rng = Rng::seed_from_u64(12);
+        let mut w = pruned_24(&mut rng, 4, 16);
+        // zero a kept weight and a whole group
+        let pos = w.data.iter().position(|v| *v != 0.0).unwrap();
+        let wd = w.data.make_mut();
+        wd[pos] = 0.0;
+        for v in &mut wd[16..20] {
+            *v = 0.0;
+        }
+        let c = compress_24(&w).unwrap();
+        let x: Vec<f32> = (0..3 * 16).map(|_| rng.gen_normal()).collect();
+        assert_eq!(matmul_nt(&x, &w.data, 3, 16, 4), matmul_nt_24(&x, &c, 3));
+    }
+
+    #[test]
+    fn csr_matches_dense_bit_exactly() {
+        let mut rng = Rng::seed_from_u64(13);
+        for sparsity in [0.3, 0.5, 0.8] {
+            let w = rand_tensor(&mut rng, 9, 24);
+            let scores = Tensor::new(
+                w.shape.clone(),
+                w.data.iter().map(|v| v.abs()).collect(),
+            );
+            let wp = w.hadamard(&unstructured_mask(&scores, sparsity));
+            let c = compress_rows(&wp);
+            let x: Vec<f32> = (0..5 * 24).map(|_| rng.gen_normal()).collect();
+            assert_eq!(
+                matmul_nt(&x, &wp.data, 5, 24, 9),
+                matmul_nt_rows(&x, &c, 5),
+                "sparsity {sparsity}"
+            );
+        }
+    }
+
+    #[test]
+    fn csr_empty_rows_give_zero_outputs() {
+        let w = Tensor::zeros(&[3, 8]);
+        let c = compress_rows(&w);
+        let x: Vec<f32> = (0..2 * 8).map(|i| i as f32).collect();
+        assert_eq!(matmul_nt_rows(&x, &c, 2), vec![0.0; 6]);
+    }
+}

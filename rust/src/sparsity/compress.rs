@@ -2,14 +2,16 @@
 //! simulator's weight-traffic arithmetic assumes (NVIDIA's sparse tensor
 //! core layout: per group of 4, the 2 surviving values plus a 2-bit
 //! column index each, i.e. 4 metadata bits per group = 12.5% overhead on
-//! FP16 values).
+//! FP16 values) — plus a row-compressed (CSR) format for unstructured
+//! masks.
 //!
 //! This is the deployment half of the pipeline: after `Coordinator::prune`
 //! produces an exact-2:4 model, [`compress_24`] packs every prunable
 //! matrix, [`decompress_24`] reconstructs it bit-exactly, and
 //! [`CompressedModel`] reports the end-to-end size reduction (Table 7/9's
 //! "weight memory" column, measured on our own weights instead of
-//! simulated).
+//! simulated). The sparse execution engine (`sparsity::exec`,
+//! DESIGN.md §12) runs block forwards directly on these representations.
 
 use anyhow::{bail, Result};
 
@@ -100,12 +102,83 @@ pub fn decompress_24(c: &Compressed24) -> Tensor {
     Tensor::new(c.shape.clone(), data)
 }
 
+/// One row-compressed (CSR) matrix: per output row, the surviving values
+/// and their absolute column indices — the executable format for
+/// `Pattern::Unstructured` masks, where no group structure exists for the
+/// 2:4 layout to exploit.
+#[derive(Debug, Clone)]
+pub struct RowCompressed {
+    pub shape: Vec<usize>, // original (d_out, d_in)
+    /// `row_ptr[o]..row_ptr[o+1]` indexes row `o`'s entries. `u32` keeps
+    /// the index arrays at half the pointer width (d_in < 4B always).
+    pub row_ptr: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub values: Vec<f32>,
+}
+
+impl RowCompressed {
+    /// Compressed size in bytes at `value_bytes` per element (index
+    /// arrays are u32 regardless of the value width).
+    pub fn bytes(&self, value_bytes: usize) -> usize {
+        self.values.len() * value_bytes + 4 * (self.cols.len() + self.row_ptr.len())
+    }
+
+    /// Stored non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// Pack any matrix into row-compressed form (exact zeros dropped,
+/// ascending column order within each row — the same accumulation order
+/// as the dense kernel, so sparse execution stays bit-identical).
+pub fn compress_rows(w: &Tensor) -> RowCompressed {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut row_ptr = Vec::with_capacity(rows + 1);
+    let mut col_idx = Vec::new();
+    let mut values = Vec::new();
+    row_ptr.push(0u32);
+    for r in 0..rows {
+        for (j, v) in w.data[r * cols..(r + 1) * cols].iter().enumerate() {
+            if *v != 0.0 {
+                col_idx.push(j as u32);
+                values.push(*v);
+            }
+        }
+        row_ptr.push(values.len() as u32);
+    }
+    RowCompressed { shape: w.shape.clone(), row_ptr, cols: col_idx, values }
+}
+
+/// Exact inverse of [`compress_rows`].
+pub fn decompress_rows(c: &RowCompressed) -> Tensor {
+    let (rows, cols) = (c.shape[0], c.shape[1]);
+    let mut data = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for p in c.row_ptr[r] as usize..c.row_ptr[r + 1] as usize {
+            data[r * cols + c.cols[p] as usize] = c.values[p];
+        }
+    }
+    Tensor::new(c.shape.clone(), data)
+}
+
+/// Per-tensor outcome inside a [`CompressedModel`].
+#[derive(Debug, Clone)]
+pub struct LayerCompression {
+    pub name: String,
+    pub dense_bytes: usize,
+    pub bytes: usize,
+    /// False when the tensor was not exact-2:4 and stayed dense (the
+    /// report degrades per layer instead of failing the whole model).
+    pub packed: bool,
+}
+
 /// Whole-model compression report (prunable matrices packed 2:4, the rest
 /// dense) — the measured counterpart of the latency module's analytic
 /// `weight_bytes`.
 #[derive(Debug, Clone)]
 pub struct CompressedModel {
-    pub per_layer: Vec<(String, usize, usize)>, // (name, dense, compressed)
+    pub per_layer: Vec<LayerCompression>,
     pub dense_total: usize,
     pub compressed_total: usize,
 }
@@ -115,30 +188,47 @@ impl CompressedModel {
         100.0 * (self.dense_total - self.compressed_total) as f64
             / self.dense_total as f64
     }
+
+    /// Prunable tensors that could not be packed (not exact-2:4).
+    pub fn unpacked(&self) -> impl Iterator<Item = &LayerCompression> {
+        self.per_layer.iter().filter(|l| !l.packed)
+    }
 }
 
 /// Compress every prunable matrix of a pruned model at `value_bytes` per
 /// element; non-prunable tensors (norms, embeddings, head) stay dense.
+/// A prunable tensor that is not exact-2:4 also stays dense and is
+/// flagged in `per_layer` — one unpruned layer degrades the reduction,
+/// it does not error the whole model.
 pub fn compress_model(w: &Weights, value_bytes: usize) -> Result<CompressedModel> {
+    // Precomputed suffix table: one allocation per prunable name, not one
+    // per (tensor, prunable) pair.
+    let suffixes: Vec<String> =
+        crate::PRUNABLE.iter().map(|p| format!(".{p}")).collect();
     let mut per_layer = Vec::new();
     let mut dense_total = 0usize;
     let mut compressed_total = 0usize;
     for (name, t) in w.iter() {
         let dense = t.numel() * value_bytes;
         dense_total += dense;
-        let is_prunable = crate::PRUNABLE
-            .iter()
-            .any(|p| name.ends_with(&format!(".{p}")));
+        let is_prunable = suffixes.iter().any(|s| name.ends_with(s.as_str()));
         if is_prunable {
-            let c = compress_24(t)?;
-            let cb = c.bytes(value_bytes);
-            compressed_total += cb;
-            per_layer.push((name.to_string(), dense, cb));
+            let (bytes, packed) = match compress_24(t) {
+                Ok(c) => (c.bytes(value_bytes), true),
+                Err(_) => (dense, false),
+            };
+            compressed_total += bytes;
+            per_layer.push(LayerCompression {
+                name: name.to_string(),
+                dense_bytes: dense,
+                bytes,
+                packed,
+            });
         } else {
             compressed_total += dense;
         }
     }
-    per_layer.sort();
+    per_layer.sort_by(|a, b| a.name.cmp(&b.name));
     Ok(CompressedModel { per_layer, dense_total, compressed_total })
 }
 
@@ -205,5 +295,40 @@ mod tests {
     fn odd_cols_rejected() {
         let w = Tensor::zeros(&[4, 6]);
         assert!(compress_24(&w).is_err());
+    }
+
+    #[test]
+    fn row_compression_roundtrips_and_counts() {
+        let w = Tensor::new(
+            vec![3, 4],
+            vec![
+                0.0, 1.5, 0.0, -2.0, // 2 nnz
+                0.0, 0.0, 0.0, 0.0, // empty row
+                3.0, 0.0, 0.5, 0.0, // 2 nnz
+            ],
+        );
+        let c = compress_rows(&w);
+        assert_eq!(c.nnz(), 4);
+        assert_eq!(c.row_ptr, vec![0, 2, 2, 4]);
+        assert_eq!(decompress_rows(&c).data, w.data);
+        // bytes: 4 values*4 + 4 cols*4 + 4 row_ptr*4
+        assert_eq!(c.bytes(4), 16 + 16 + 16);
+    }
+
+    #[test]
+    fn compress_model_degrades_gracefully_on_non_24_layers() {
+        // A dense (unpruned) model: every prunable tensor fails the 2:4
+        // check, stays dense, and is flagged — no error.
+        let rt = crate::runtime::NativeBackend::new(
+            std::env::temp_dir().join("wandapp_compress_test"),
+        )
+        .unwrap();
+        let w = crate::model::load_size(&rt, "s0").unwrap();
+        let rep = compress_model(&w, 2).unwrap();
+        assert!(!rep.per_layer.is_empty());
+        assert!(rep.per_layer.iter().all(|l| !l.packed));
+        assert_eq!(rep.unpacked().count(), rep.per_layer.len());
+        assert_eq!(rep.compressed_total, rep.dense_total);
+        assert!(rep.reduction_pct().abs() < 1e-12);
     }
 }

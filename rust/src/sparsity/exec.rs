@@ -1,0 +1,385 @@
+//! The sparse execution engine's model layer (DESIGN.md §12): pack a
+//! pruned [`Weights`] **once** into executable compressed form, then
+//! serve block forwards from it — eval and generation run on the
+//! compressed representation instead of dense kernels over zero-filled
+//! tensors.
+//!
+//! Three pieces:
+//! - [`ExecutableWeights`] — one prunable matrix in its packed form:
+//!   2:4 ([`Compressed24`]), row-compressed CSR ([`RowCompressed`],
+//!   unstructured masks), or dense (unpruned / not worth packing).
+//! - [`SparseBlock`] — one decoder block: dense norm vectors + the seven
+//!   prunable projections as [`ExecutableWeights`]. Backends execute it
+//!   via [`crate::runtime::Backend::block_fwd_sparse`] — the native
+//!   backend on true sparse kernels, others through a dense fallback.
+//! - [`SparseModel`] — the packed whole model (embed/norms/head stay
+//!   dense) plus a [`PackReport`] of what each layer packed into.
+
+use std::cell::OnceCell;
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::native::{math::matmul_nt, sparse as kernels};
+use crate::sparsity::compress::{
+    compress_24, compress_rows, decompress_24, decompress_rows, Compressed24,
+    RowCompressed,
+};
+use crate::tensor::Tensor;
+
+use crate::{PRUNABLE, PRUNABLE_PARAM_IDX};
+
+/// Minimum zero fraction at which an inexact-2:4 matrix is packed as CSR
+/// instead of kept dense: below this the skipped multiply-adds no longer
+/// pay for the per-value index load.
+const MIN_ROW_SPARSITY: f64 = 0.25;
+
+/// One prunable matrix in executable packed form.
+#[derive(Debug, Clone)]
+pub enum ExecutableWeights {
+    /// Exact 2:4 — two kept values + a metadata nibble per group of 4.
+    Sparse24(Compressed24),
+    /// Row-compressed (CSR) — unstructured or structured-row masks.
+    RowSparse(RowCompressed),
+    /// Dense fallback — unpruned, or too dense for packing to pay.
+    Dense(Tensor),
+}
+
+impl ExecutableWeights {
+    /// Pack one matrix, picking the format its sparsity structure
+    /// supports: exact 2:4 → [`ExecutableWeights::Sparse24`], otherwise
+    /// CSR when at least `MIN_ROW_SPARSITY` of it is zero, otherwise
+    /// dense. Never fails — a tensor that fits no sparse format degrades
+    /// to the dense representation.
+    pub fn pack(t: &Tensor) -> Self {
+        let zf = t.zero_fraction();
+        if zf >= 0.5 && t.cols() % 4 == 0 {
+            if let Ok(c) = compress_24(t) {
+                return ExecutableWeights::Sparse24(c);
+            }
+        }
+        if zf >= MIN_ROW_SPARSITY {
+            return ExecutableWeights::RowSparse(compress_rows(t));
+        }
+        ExecutableWeights::Dense(t.clone())
+    }
+
+    /// Short format label for reports ("2:4", "rows", "dense").
+    pub fn format(&self) -> &'static str {
+        match self {
+            ExecutableWeights::Sparse24(_) => "2:4",
+            ExecutableWeights::RowSparse(_) => "rows",
+            ExecutableWeights::Dense(_) => "dense",
+        }
+    }
+
+    /// Original (dense) shape `(d_out, d_in)`.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            ExecutableWeights::Sparse24(c) => (c.shape[0], c.shape[1]),
+            ExecutableWeights::RowSparse(c) => (c.shape[0], c.shape[1]),
+            ExecutableWeights::Dense(t) => (t.rows(), t.cols()),
+        }
+    }
+
+    /// Input dimension (`d_in`).
+    pub fn cols(&self) -> usize {
+        self.shape().1
+    }
+
+    /// Bytes this representation occupies at f32 values (what the
+    /// engine executes on; index/metadata bytes included).
+    pub fn bytes(&self) -> usize {
+        match self {
+            ExecutableWeights::Sparse24(c) => c.bytes(4),
+            ExecutableWeights::RowSparse(c) => c.bytes(4),
+            ExecutableWeights::Dense(t) => t.numel() * 4,
+        }
+    }
+
+    /// `y = x @ w^T` on the packed representation: x is `(n, d_in)`,
+    /// y is `(n, d_out)`. Bit-identical to the dense kernel on the
+    /// decompressed matrix (see `runtime::native::sparse`).
+    pub fn matmul_nt(&self, x: &[f32], n: usize) -> Vec<f32> {
+        match self {
+            ExecutableWeights::Sparse24(c) => kernels::matmul_nt_24(x, c, n),
+            ExecutableWeights::RowSparse(c) => kernels::matmul_nt_rows(x, c, n),
+            ExecutableWeights::Dense(t) => {
+                matmul_nt(x, &t.data, n, t.cols(), t.rows())
+            }
+        }
+    }
+
+    /// Reconstruct the dense tensor (the backends' dense-fallback path;
+    /// exact inverse of packing).
+    pub fn to_tensor(&self) -> Tensor {
+        match self {
+            ExecutableWeights::Sparse24(c) => decompress_24(c),
+            ExecutableWeights::RowSparse(c) => decompress_rows(c),
+            ExecutableWeights::Dense(t) => t.clone(),
+        }
+    }
+}
+
+/// One decoder block in executable form: dense norms + packed prunable
+/// projections in [`PRUNABLE`] order (wq wk wv wo wg wu wd).
+#[derive(Debug, Clone)]
+pub struct SparseBlock {
+    pub ln1: Tensor,
+    pub ln2: Tensor,
+    pub mats: [ExecutableWeights; 7],
+    /// Dense reconstruction, built lazily on the first fallback call —
+    /// a backend without sparse kernels decompresses each block once
+    /// per pack, not once per forward.
+    dense: OnceCell<Vec<Tensor>>,
+}
+
+impl SparseBlock {
+    /// Pack one block from its nine canonical parameters.
+    pub fn pack(bp: &[Tensor]) -> Self {
+        assert_eq!(bp.len(), 9, "a block has 9 parameters");
+        Self {
+            ln1: bp[0].clone(),
+            ln2: bp[5].clone(),
+            mats: PRUNABLE_PARAM_IDX.map(|k| ExecutableWeights::pack(&bp[k])),
+            dense: OnceCell::new(),
+        }
+    }
+
+    /// The nine dense parameters in canonical order (norms are Arc
+    /// clones; packed matrices are decompressed on first use and cached)
+    /// — the input list for a backend's dense `block_fwd` kernel.
+    pub fn dense_params(&self) -> Vec<Tensor> {
+        self.dense
+            .get_or_init(|| {
+                vec![
+                    self.ln1.clone(),
+                    self.mats[0].to_tensor(),
+                    self.mats[1].to_tensor(),
+                    self.mats[2].to_tensor(),
+                    self.mats[3].to_tensor(),
+                    self.ln2.clone(),
+                    self.mats[4].to_tensor(),
+                    self.mats[5].to_tensor(),
+                    self.mats[6].to_tensor(),
+                ]
+            })
+            .clone()
+    }
+
+    /// Validate the block's shapes against a model geometry before
+    /// kernel dispatch (mirrors the dense kernels' input validation).
+    pub fn check_dims(&self, d: usize, ffn: usize) -> Result<()> {
+        if self.ln1.numel() != d || self.ln2.numel() != d {
+            bail!(
+                "sparse block norms have {}/{} elements, model d is {d}",
+                self.ln1.numel(),
+                self.ln2.numel()
+            );
+        }
+        for (pi, mat) in self.mats.iter().enumerate() {
+            // PRUNABLE order: wq wk wv wo (d,d); wg wu (ffn,d); wd (d,ffn)
+            let want = match pi {
+                0..=3 => (d, d),
+                4 | 5 => (ffn, d),
+                _ => (d, ffn),
+            };
+            if mat.shape() != want {
+                bail!(
+                    "sparse block {} has shape {:?}, model implies {want:?}",
+                    PRUNABLE[pi],
+                    mat.shape()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Per-matrix row of a [`PackReport`].
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    /// "2:4", "rows", or "dense".
+    pub format: &'static str,
+    pub dense_bytes: usize,
+    pub packed_bytes: usize,
+}
+
+/// What each prunable matrix packed into, plus whole-model totals at f32
+/// (the measured counterpart of the roofline's `weight_bytes`).
+#[derive(Debug, Clone, Default)]
+pub struct PackReport {
+    pub per_layer: Vec<PackedLayer>,
+    /// All model tensors, dense, at f32.
+    pub dense_bytes: usize,
+    /// Dense non-prunable tensors + packed prunable matrices, at f32.
+    pub packed_bytes: usize,
+}
+
+impl PackReport {
+    /// Whole-model byte reduction (%). Can be negative: CSR packing of a
+    /// barely-sparse matrix trades bytes for skipped multiply-adds.
+    pub fn reduction_pct(&self) -> f64 {
+        100.0 * (self.dense_bytes as f64 - self.packed_bytes as f64)
+            / self.dense_bytes.max(1) as f64
+    }
+
+    /// How many prunable matrices landed in each format.
+    pub fn format_counts(&self) -> (usize, usize, usize) {
+        let count = |f: &str| {
+            self.per_layer.iter().filter(|l| l.format == f).count()
+        };
+        (count("2:4"), count("rows"), count("dense"))
+    }
+
+    pub fn summary(&self) -> String {
+        let (s24, rows, dense) = self.format_counts();
+        format!(
+            "packed {} prunable matrices ({s24}x 2:4, {rows}x rows, \
+             {dense}x dense): {} -> {} bytes ({:.1}% reduction)",
+            self.per_layer.len(),
+            self.dense_bytes,
+            self.packed_bytes,
+            self.reduction_pct()
+        )
+    }
+}
+
+/// A whole model packed for sparse execution: embed/norms/head stay
+/// dense (they are never pruned), each block's prunable projections are
+/// packed once, and eval/generation serve every forward from the packed
+/// form via [`crate::eval::EvalModel`].
+#[derive(Debug, Clone)]
+pub struct SparseModel {
+    pub cfg: ModelConfig,
+    pub embed: Tensor,
+    pub ln_f: Tensor,
+    pub head: Tensor,
+    pub blocks: Vec<SparseBlock>,
+    pub report: PackReport,
+}
+
+impl SparseModel {
+    /// Pack a (pruned) model. Dense tensors are Arc clones — the only
+    /// fresh allocations are the compressed buffers themselves.
+    pub fn pack(w: &Weights) -> Self {
+        let cfg = w.cfg.clone();
+        let mut report = PackReport::default();
+        for (_, t) in w.iter() {
+            report.dense_bytes += t.numel() * 4;
+        }
+        report.packed_bytes = report.dense_bytes;
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let blk = SparseBlock::pack(w.block(i));
+            for (pi, mat) in blk.mats.iter().enumerate() {
+                let dense = {
+                    let (r, c) = mat.shape();
+                    r * c * 4
+                };
+                report.packed_bytes -= dense;
+                report.packed_bytes += mat.bytes();
+                report.per_layer.push(PackedLayer {
+                    name: Weights::block_name(i, PRUNABLE[pi]),
+                    format: mat.format(),
+                    dense_bytes: dense,
+                    packed_bytes: mat.bytes(),
+                });
+            }
+            blocks.push(blk);
+        }
+        Self {
+            cfg,
+            embed: w.get("embed").clone(),
+            ln_f: w.get("ln_f").clone(),
+            head: w.get("head").clone(),
+            blocks,
+            report,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::load_size;
+    use crate::rng::Rng;
+    use crate::runtime::NativeBackend;
+    use crate::sparsity::{nm_mask_native, unstructured_mask};
+
+    fn rand_pruned(rows: usize, cols: usize, seed: u64, pattern24: bool) -> Tensor {
+        let mut rng = Rng::seed_from_u64(seed);
+        let w = Tensor::new(
+            vec![rows, cols],
+            (0..rows * cols).map(|_| rng.gen_normal()).collect(),
+        );
+        let scores =
+            Tensor::new(w.shape.clone(), w.data.iter().map(|v| v.abs()).collect());
+        let mask = if pattern24 {
+            nm_mask_native(&scores, 2, 4)
+        } else {
+            unstructured_mask(&scores, 0.6)
+        };
+        w.hadamard(&mask)
+    }
+
+    #[test]
+    fn pack_picks_the_right_format() {
+        let t24 = rand_pruned(8, 16, 1, true);
+        assert_eq!(ExecutableWeights::pack(&t24).format(), "2:4");
+        // 50% sparse but with a 3-dense group: not 2:4, so CSR
+        let tu = Tensor::new(
+            vec![2, 8],
+            vec![
+                1.0, 2.0, 3.0, 0.0, 0.0, 0.0, 0.0, 4.0, //
+                0.0, 0.0, 0.0, 0.0, 5.0, 6.0, 7.0, 0.0,
+            ],
+        );
+        assert_eq!(ExecutableWeights::pack(&tu).format(), "rows");
+        let dense = Tensor::ones(&[4, 8]);
+        assert_eq!(ExecutableWeights::pack(&dense).format(), "dense");
+    }
+
+    #[test]
+    fn pack_roundtrips_exactly() {
+        for (seed, p24) in [(3u64, true), (4, false)] {
+            let t = rand_pruned(6, 20, seed, p24);
+            let packed = ExecutableWeights::pack(&t);
+            assert_eq!(packed.to_tensor().data, t.data);
+            assert_eq!(packed.shape(), (6, 20));
+        }
+    }
+
+    #[test]
+    fn dense_model_packs_all_dense_with_zero_reduction() {
+        let rt = NativeBackend::new(
+            std::env::temp_dir().join("wandapp_exec_test"),
+        )
+        .unwrap();
+        let w = load_size(&rt, "s0").unwrap();
+        let sm = SparseModel::pack(&w);
+        let (s24, rows, dense) = sm.report.format_counts();
+        assert_eq!((s24, rows), (0, 0));
+        assert_eq!(dense, 7 * w.cfg.n_layers);
+        assert_eq!(sm.report.packed_bytes, sm.report.dense_bytes);
+        // dense tensors are Arc clones of the source model
+        assert!(sm.embed.shares_data(w.get("embed")));
+    }
+
+    #[test]
+    fn check_dims_rejects_mismatched_geometry() {
+        let bp: Vec<Tensor> = (0..9)
+            .map(|k| match k {
+                0 | 5 => Tensor::ones(&[8]),
+                1..=4 => rand_pruned(8, 8, k as u64, true),
+                6 | 7 => rand_pruned(12, 8, k as u64, true),
+                _ => rand_pruned(8, 12, k as u64, true),
+            })
+            .collect();
+        let blk = SparseBlock::pack(&bp);
+        assert!(blk.check_dims(8, 12).is_ok());
+        assert!(blk.check_dims(8, 16).is_err());
+        assert!(blk.check_dims(16, 12).is_err());
+    }
+}

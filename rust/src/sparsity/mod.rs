@@ -6,6 +6,9 @@
 //! compiled artifact.
 
 pub mod compress;
+pub mod exec;
+
+pub use exec::{ExecutableWeights, PackReport, SparseBlock, SparseModel};
 
 use crate::tensor::Tensor;
 

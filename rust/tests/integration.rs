@@ -574,3 +574,16 @@ fn generate_produces_text_on_any_backend() {
         wandapp::eval::generate(rt.as_ref(), &w, "the cat ", 16, 0.8, 3).unwrap();
     assert!(!text.is_empty(), "16 sampled bytes must decode to something");
 }
+
+#[test]
+fn perplexity_refuses_an_empty_eval() {
+    // max_batches = 0 yields no batches: reporting exp(0) = 1.0 (a
+    // perfect perplexity) would be a silent lie — it must error.
+    let rt = rt();
+    let w = load_size(rt.as_ref(), "s0").unwrap();
+    let err = perplexity_split(rt.as_ref(), &w, "test", 0).unwrap_err();
+    assert!(
+        err.to_string().contains("no eval tokens"),
+        "unexpected error: {err}"
+    );
+}

@@ -400,3 +400,70 @@ fn prop_backend_score_kernel_matches_formula() {
         }
     }
 }
+
+#[test]
+fn prop_compress24_roundtrips_random_nm_masks() {
+    // Random N:M-masked matrices — including groups forced entirely to
+    // zero — must survive compress_24/decompress_24 bit-exactly.
+    use wandapp::sparsity::compress::{compress_24, decompress_24};
+    let mut rng = Rng::seed_from_u64(900);
+    for case in 0..CASES {
+        let rows = 1 + rng.gen_range(12);
+        let groups = 1 + rng.gen_range(12);
+        let cols = groups * 4;
+        let n = 1 + rng.gen_range(2); // 1:4 or 2:4 — both fit the format
+        let w = Tensor::new(
+            vec![rows, cols],
+            (0..rows * cols).map(|_| rng.gen_normal()).collect(),
+        );
+        let scores = Tensor::new(
+            w.shape.clone(),
+            w.data.iter().map(|v| v.abs()).collect(),
+        );
+        let mut wp = w.hadamard(&nm_mask_native(&scores, n, 4));
+        // knock out entire groups (all kept values exactly zero)
+        {
+            let wd = wp.data.make_mut();
+            for g in 0..rows * groups {
+                if rng.gen_range(5) == 0 {
+                    for v in &mut wd[g * 4..g * 4 + 4] {
+                        *v = 0.0;
+                    }
+                }
+            }
+        }
+        let c = compress_24(&wp).expect("masked matrix must pack");
+        let back = decompress_24(&c);
+        assert_eq!(back.shape, wp.shape, "case {case}");
+        assert_eq!(back.data, wp.data, "case {case}: n={n} {rows}x{cols}");
+        // the format's size law holds regardless of content
+        assert_eq!(c.values.len(), rows * cols / 2);
+        assert_eq!(c.meta.len(), (rows * cols / 4).div_ceil(2));
+    }
+}
+
+#[test]
+fn prop_row_compression_roundtrips_any_mask() {
+    use wandapp::sparsity::compress::{compress_rows, decompress_rows};
+    let mut rng = Rng::seed_from_u64(950);
+    for case in 0..CASES {
+        let rows = 1 + rng.gen_range(16);
+        let cols = 1 + rng.gen_range(40);
+        let sparsity = [0.0, 0.3, 0.5, 0.8, 1.0][rng.gen_range(5)];
+        let data: Vec<f32> = (0..rows * cols)
+            .map(|_| {
+                if rng.gen_f32() < sparsity {
+                    0.0
+                } else {
+                    rng.gen_normal()
+                }
+            })
+            .collect();
+        let w = Tensor::new(vec![rows, cols], data);
+        let c = compress_rows(&w);
+        let nnz_want = w.data.iter().filter(|v| **v != 0.0).count();
+        assert_eq!(c.nnz(), nnz_want, "case {case}");
+        assert_eq!(c.row_ptr.len(), rows + 1);
+        assert_eq!(decompress_rows(&c).data, w.data, "case {case}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Sparse execution engine parity (tier 1): forwards, perplexity and
+//! generation on packed compressed weights must be **bit-identical** to
+//! the dense kernel path — same f32 op order, zeros skipped (DESIGN.md
+//! §12). Runs on a bare checkout (synthetic weights/corpus).
+
+use std::path::Path;
+
+use wandapp::coordinator::Coordinator;
+use wandapp::eval::{forward_hidden, perplexity_split};
+use wandapp::model::{load_corpus, load_size, EvalBatches, Weights};
+use wandapp::pruner::{Method, PruneOptions};
+use wandapp::runtime::{Backend, ExecStats, Manifest, NativeBackend};
+use wandapp::sparsity::{Pattern, SparseModel};
+use wandapp::tensor::{Value, ValueView};
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+fn rt() -> Box<dyn Backend> {
+    wandapp::runtime::open(artifacts_dir(), "auto").expect("backend")
+}
+
+fn pruned(rt: &dyn Backend, method: Method, pattern: Pattern) -> Weights {
+    let mut w = load_size(rt, "s0").unwrap();
+    let mut opts = PruneOptions::new(method, pattern);
+    opts.n_calib = 16;
+    opts.k_iters = 2;
+    Coordinator::new(rt).prune(&mut w, &opts).unwrap();
+    w
+}
+
+/// One eval batch of real (synthetic-corpus) tokens.
+fn eval_batch(rt: &dyn Backend, w: &Weights) -> wandapp::tensor::TensorI32 {
+    let corpus = load_corpus(rt, "test").unwrap();
+    let b = rt.manifest().consts.b_eval;
+    let (inp, _) = EvalBatches::new(&corpus, b, w.cfg.seq, 1)
+        .next()
+        .expect("synthetic corpus yields at least one batch");
+    inp
+}
+
+#[test]
+fn sparse24_ppl_bit_identical_across_methods() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    for method in [Method::Magnitude, Method::Wanda, Method::WandaPPRgs] {
+        let w = pruned(rt, method, Pattern::NofM(2, 4));
+        let sm = SparseModel::pack(&w);
+        // every prunable matrix of an exact-2:4 model must pack as 2:4
+        let (s24, rows, dense) = sm.report.format_counts();
+        assert_eq!(
+            (s24, rows, dense),
+            (7 * w.cfg.n_layers, 0, 0),
+            "{method:?}: pack formats"
+        );
+        assert!(sm.report.packed_bytes < sm.report.dense_bytes);
+        let dense_ppl = perplexity_split(rt, &w, "test", 4).unwrap();
+        let sparse_ppl = perplexity_split(rt, &sm, "test", 4).unwrap();
+        assert_eq!(
+            dense_ppl.to_bits(),
+            sparse_ppl.to_bits(),
+            "{method:?}: dense {dense_ppl} vs sparse {sparse_ppl}"
+        );
+    }
+}
+
+#[test]
+fn sparse_forward_hidden_bit_identical() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let w = pruned(rt, Method::Wanda, Pattern::NofM(2, 4));
+    let sm = SparseModel::pack(&w);
+    let toks = eval_batch(rt, &w);
+    let hd = forward_hidden(rt, &w, &toks).unwrap();
+    let hs = forward_hidden(rt, &sm, &toks).unwrap();
+    assert_eq!(hd.shape, hs.shape);
+    assert_eq!(hd.data, hs.data, "hidden states must match bit-for-bit");
+}
+
+#[test]
+fn row_sparse_ppl_bit_identical_for_unstructured() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let w = pruned(rt, Method::Wanda, Pattern::Unstructured(0.6));
+    let sm = SparseModel::pack(&w);
+    let (_, rows, _) = sm.report.format_counts();
+    assert!(rows > 0, "unstructured masks should pack row-sparse");
+    let dense_ppl = perplexity_split(rt, &w, "test", 4).unwrap();
+    let sparse_ppl = perplexity_split(rt, &sm, "test", 4).unwrap();
+    assert_eq!(dense_ppl.to_bits(), sparse_ppl.to_bits());
+}
+
+#[test]
+fn generate_on_sparse_exec_matches_dense() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let w = pruned(rt, Method::Wanda, Pattern::NofM(2, 4));
+    let sm = SparseModel::pack(&w);
+    let a = wandapp::eval::generate(rt, &w, "the cat ", 12, 0.8, 3).unwrap();
+    let b = wandapp::eval::generate(rt, &sm, "the cat ", 12, 0.8, 3).unwrap();
+    assert_eq!(a, b, "same seed must sample the same bytes on both paths");
+}
+
+#[test]
+fn dense_model_still_evaluates_identically_through_pack() {
+    // Packing an unpruned model degrades every matrix to the dense
+    // representation — and the engine must still agree with the dense path.
+    let rt = rt();
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    let sm = SparseModel::pack(&w);
+    let dense_ppl = perplexity_split(rt, &w, "test", 2).unwrap();
+    let sparse_ppl = perplexity_split(rt, &sm, "test", 2).unwrap();
+    assert_eq!(dense_ppl.to_bits(), sparse_ppl.to_bits());
+}
+
+/// A backend that delegates everything to the native one but does NOT
+/// override `block_fwd_sparse` — it exercises the trait's default
+/// decompress-and-run-dense fallback, the path a PJRT build takes.
+struct DenseFallback(NativeBackend);
+
+impl Backend for DenseFallback {
+    fn name(&self) -> &'static str {
+        "dense-fallback"
+    }
+    fn manifest(&self) -> &Manifest {
+        self.0.manifest()
+    }
+    fn artifacts_dir(&self) -> &Path {
+        self.0.artifacts_dir()
+    }
+    fn supports(&self, key: &str) -> bool {
+        self.0.supports(key)
+    }
+    fn warmup(&self, key: &str) -> anyhow::Result<()> {
+        self.0.warmup(key)
+    }
+    fn exec_v(&self, key: &str, inputs: &[ValueView]) -> anyhow::Result<Vec<Value>> {
+        self.0.exec_v(key, inputs)
+    }
+    fn stats(&self) -> ExecStats {
+        self.0.stats()
+    }
+    fn reset_stats(&self) {
+        self.0.reset_stats()
+    }
+}
+
+#[test]
+fn default_dense_fallback_matches_native_sparse_kernels() {
+    let native = NativeBackend::new(artifacts_dir()).unwrap();
+    let fallback = DenseFallback(NativeBackend::new(artifacts_dir()).unwrap());
+    let w = pruned(&native, Method::Wanda, Pattern::NofM(2, 4));
+    let sm = SparseModel::pack(&w);
+    let toks = eval_batch(&native, &w);
+    let via_sparse = forward_hidden(&native, &sm, &toks).unwrap();
+    let via_fallback = forward_hidden(&fallback, &sm, &toks).unwrap();
+    assert_eq!(via_sparse.data, via_fallback.data);
+}
+
+#[test]
+fn sparse_exec_rejects_mismatched_geometry() {
+    // Pinned to the native backend: these assertions are about the
+    // native override's validation (the trait default happily forwards
+    // any key to the dense kernel).
+    let rt = NativeBackend::new(artifacts_dir()).unwrap();
+    let w = pruned(&rt, Method::Wanda, Pattern::NofM(2, 4));
+    let sm = SparseModel::pack(&w);
+    let toks = eval_batch(&rt, &w);
+    let h = forward_hidden(&rt, &w, &toks).unwrap();
+    // an s1-shaped key against s0-packed blocks must error cleanly
+    let bad = rt.block_fwd_sparse("s1_block_fwd_t64", &h, &sm.blocks[0]);
+    assert!(bad.is_err());
+    // and a non-block_fwd key is refused
+    let bad = rt.block_fwd_sparse("s0_block_stats_t64", &h, &sm.blocks[0]);
+    assert!(bad.is_err());
+}
