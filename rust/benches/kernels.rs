@@ -8,6 +8,8 @@
 
 use wandapp::bench::Group;
 use wandapp::model::load_size;
+use wandapp::runtime::native::math::matmul_nt;
+use wandapp::runtime::native::tiled::matmul_nt_tiled;
 use wandapp::runtime::Backend;
 use wandapp::tensor::{Tensor, Value};
 
@@ -145,10 +147,29 @@ fn parity(native: &dyn Backend, pjrt: &dyn Backend) {
     );
 }
 
+/// Oracle vs tiled on a bare dense GEMM (no backend dispatch): the raw
+/// kernel contrast behind the DESIGN.md §13 fast path.
+fn bench_tiled_gemm(d: usize) {
+    let n = 16;
+    let x: Vec<f32> = (0..n * d).map(|i| (i as f32 * 0.13).sin()).collect();
+    let w: Vec<f32> = (0..d * d).map(|i| (i as f32 * 0.29).cos()).collect();
+    let mut grp =
+        Group::new(&format!("dense GEMM oracle vs tiled ({n}x{d} @ {d}x{d})"))
+            .budget(2.0);
+    grp.bench("oracle", || {
+        std::hint::black_box(matmul_nt(&x, &w, n, d, d));
+    });
+    grp.bench("tiled", || {
+        std::hint::black_box(matmul_nt_tiled(&x, &w, n, d, d));
+    });
+}
+
 fn main() {
     let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
     let native = wandapp::runtime::open(dir, "native").unwrap();
     bench_backend(native.as_ref());
+    bench_tiled_gemm(512);
+    bench_tiled_gemm(1024);
 
     match wandapp::runtime::open(dir, "pjrt") {
         Ok(pjrt) => {

@@ -16,6 +16,7 @@ use wandapp::latency::{
 };
 use wandapp::model::load_size;
 use wandapp::pruner::{sparsegpt::sparsegpt_prune, Method, PruneOptions};
+use wandapp::runtime::native::tiled::{matmul_nt_24_tiled, matmul_nt_tiled};
 use wandapp::runtime::{native::math::matmul_nt, native::sparse::matmul_nt_24, Backend};
 use wandapp::sparsity::{Pattern, SparseModel};
 use wandapp::tensor::Tensor;
@@ -178,6 +179,15 @@ fn main() {
         });
         grp.bench("sparse24_kernel", || {
             std::hint::black_box(matmul_nt_24(&x, &c, n));
+        });
+        // The DESIGN.md §13 fast path on the same fixture: the ratios
+        // against the two oracle rows above are what `bench --json`
+        // records and CI gates.
+        grp.bench("dense_tiled_kernel", || {
+            std::hint::black_box(matmul_nt_tiled(&x, &wp.data, n, d, d));
+        });
+        grp.bench("sparse24_tiled_kernel", || {
+            std::hint::black_box(matmul_nt_24_tiled(&x, &c, n));
         });
     }
 

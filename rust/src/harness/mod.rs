@@ -4,8 +4,10 @@
 
 mod experiments;
 mod runs;
+mod trajectory;
 
 pub use experiments::*;
 pub use runs::{
     dense_ppl, prune_and_eval, prune_and_eval_in, PruneEval, EVAL_BATCHES,
 };
+pub use trajectory::{bench_trajectory, BenchConfig, DEFAULT_BENCH_SEED};

@@ -1,0 +1,296 @@
+//! The perf-trajectory emitter behind `wandapp bench` (DESIGN.md §13):
+//! run the oracle-vs-tiled GEMM matrix plus a short end-to-end pruned
+//! perplexity pass, print the scalar-vs-tiled-vs-roofline table, and —
+//! with `--json` — write the structured results to `BENCH_<date>.json`
+//! so CI can upload every run as an artifact and gate the tiled/oracle
+//! throughput ratio against the committed `BENCH_baseline.json`.
+//!
+//! The JSON schema (`schema: 1`) is intentionally small and flat:
+//!
+//! ```json
+//! {
+//!   "schema": 1, "date": "2026-02-03", "smoke": true, "seed": 7,
+//!   "gemm": [{"d": 512, "n": 8,
+//!             "dense_oracle_secs": ..., "dense_tiled_secs": ...,
+//!             "sparse24_oracle_secs": ..., "sparse24_tiled_secs": ...,
+//!             "tiled_speedup": ..., "sparse24_tiled_speedup": ...,
+//!             "sparse24_speedup": ...}],
+//!   "e2e": {"prune_secs": ..., "ppl_dense_secs": ...,
+//!           "ppl_sparse_secs": ..., "ppl": ...}
+//! }
+//! ```
+//!
+//! A baseline file is the same document with an optional
+//! `max_regression_pct` (default 20): the gate fails when a measured
+//! `tiled_speedup` / `sparse24_tiled_speedup` falls more than that far
+//! below the baseline entry for the same `d`.
+
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use anyhow::{bail, Result};
+
+use crate::eval::perplexity_split;
+use crate::json::Json;
+use crate::latency::measured::{measure_gemm_24, print_gemm_table, GemmMeasurement};
+use crate::pruner::{Method, PruneOptions};
+use crate::runtime::Backend;
+use crate::sparsity::{Pattern, SparseModel};
+
+/// Default fixture seed for `bench` and `latency --measured` — explicit
+/// (and recorded in the JSON) so numbers are comparable across runs and
+/// machines.
+pub const DEFAULT_BENCH_SEED: u64 = 7;
+
+/// Baseline gate default: fail CI when a tiled/oracle throughput ratio
+/// drops more than this far below the committed baseline.
+const DEFAULT_MAX_REGRESSION_PCT: f64 = 20.0;
+
+/// Configuration for one `bench` run (parsed from the CLI).
+pub struct BenchConfig {
+    /// Shrink sizes and budgets for CI.
+    pub smoke: bool,
+    /// Fixture seed (GEMM inputs and the e2e calibration sample).
+    pub seed: u64,
+    /// Write `BENCH_<date>.json` (or `out`) even without `--out`.
+    pub write_json: bool,
+    /// Explicit output path, overriding the dated default.
+    pub out: Option<String>,
+    /// Baseline file to gate the tiled/oracle ratios against.
+    pub baseline: Option<String>,
+}
+
+/// Run the bench matrix, print the table, optionally emit JSON and check
+/// the baseline gate. Errors when a baseline is given and any tracked
+/// ratio regressed beyond the baseline's `max_regression_pct`.
+pub fn bench_trajectory(rt: &dyn Backend, cfg: &BenchConfig) -> Result<()> {
+    let (ds, n, budget): (&[usize], usize, f64) = if cfg.smoke {
+        (&[512, 1024], 8, 0.1)
+    } else {
+        (&[512, 1024, 2048], 64, 0.5)
+    };
+    println!(
+        "== bench: oracle vs tiled GEMMs (seed {}, {} mode) ==",
+        cfg.seed,
+        if cfg.smoke { "smoke" } else { "full" }
+    );
+    let rows: Vec<GemmMeasurement> = ds
+        .iter()
+        .map(|&d| measure_gemm_24(d, n, budget, cfg.seed))
+        .collect();
+    print_gemm_table(&rows);
+
+    // End-to-end: prune s0 to 2:4, then time dense-path vs sparse-engine
+    // perplexity — the whole-pipeline number the GEMM ratios feed into.
+    let mut w = crate::model::load_size(rt, "s0")?;
+    let mut opts = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+    opts.n_calib = 16;
+    opts.seed = cfg.seed;
+    let t0 = Instant::now();
+    crate::coordinator::Coordinator::new(rt).prune(&mut w, &opts)?;
+    let prune_secs = t0.elapsed().as_secs_f64();
+    let sm = SparseModel::pack(&w);
+    let batches = if cfg.smoke { 2 } else { 8 };
+    let t1 = Instant::now();
+    let ppl = perplexity_split(rt, &w, "test", batches)?;
+    let ppl_dense_secs = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    perplexity_split(rt, &sm, "test", batches)?;
+    let ppl_sparse_secs = t2.elapsed().as_secs_f64();
+    println!(
+        "  e2e s0 wanda 2:4: prune {prune_secs:.3}s, ppl dense \
+         {ppl_dense_secs:.3}s, ppl sparse-exec {ppl_sparse_secs:.3}s \
+         (ppl {ppl:.4})"
+    );
+
+    if cfg.write_json || cfg.out.is_some() {
+        let doc = build_json(cfg, &rows, prune_secs, ppl_dense_secs, ppl_sparse_secs, ppl);
+        let path = match &cfg.out {
+            Some(p) => p.clone(),
+            None => format!("BENCH_{}.json", today_utc()),
+        };
+        std::fs::write(&path, doc.write() + "\n")?;
+        println!("  wrote {path}");
+    }
+
+    if let Some(baseline) = &cfg.baseline {
+        check_baseline(&rows, baseline)?;
+    }
+    Ok(())
+}
+
+fn gemm_json(m: &GemmMeasurement) -> Json {
+    Json::obj(vec![
+        ("d", Json::Num(m.d as f64)),
+        ("n", Json::Num(m.n as f64)),
+        ("dense_oracle_secs", Json::Num(m.dense_secs)),
+        ("dense_tiled_secs", Json::Num(m.dense_tiled_secs)),
+        ("sparse24_oracle_secs", Json::Num(m.sparse_secs)),
+        ("sparse24_tiled_secs", Json::Num(m.sparse_tiled_secs)),
+        ("tiled_speedup", Json::Num(m.tiled_speedup())),
+        ("sparse24_tiled_speedup", Json::Num(m.sparse_tiled_speedup())),
+        ("sparse24_speedup", Json::Num(m.speedup())),
+    ])
+}
+
+fn build_json(
+    cfg: &BenchConfig,
+    rows: &[GemmMeasurement],
+    prune_secs: f64,
+    ppl_dense_secs: f64,
+    ppl_sparse_secs: f64,
+    ppl: f64,
+) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Num(1.0)),
+        ("date", Json::str(&today_utc())),
+        ("smoke", Json::Bool(cfg.smoke)),
+        ("seed", Json::Num(cfg.seed as f64)),
+        ("gemm", Json::Arr(rows.iter().map(gemm_json).collect())),
+        (
+            "e2e",
+            Json::obj(vec![
+                ("prune_secs", Json::Num(prune_secs)),
+                ("ppl_dense_secs", Json::Num(ppl_dense_secs)),
+                ("ppl_sparse_secs", Json::Num(ppl_sparse_secs)),
+                ("ppl", Json::Num(ppl)),
+            ]),
+        ),
+    ])
+}
+
+/// Gate the measured tiled/oracle ratios against a committed baseline.
+/// Only ratio fields are compared — absolute seconds vary with the
+/// runner, but the oracle and tiled kernels share each run's noise, so
+/// their ratio is the stable signal.
+fn check_baseline(rows: &[GemmMeasurement], path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let base = Json::parse(&text)?;
+    let max_pct = match base.opt("max_regression_pct") {
+        Some(v) => v.as_f64()?,
+        None => DEFAULT_MAX_REGRESSION_PCT,
+    };
+    let mut failures = Vec::new();
+    for entry in base.get("gemm")?.as_arr()? {
+        let d = entry.get("d")?.as_usize()?;
+        let Some(m) = rows.iter().find(|m| m.d == d) else {
+            continue; // baseline covers sizes this mode didn't run
+        };
+        for (name, measured) in [
+            ("tiled_speedup", m.tiled_speedup()),
+            ("sparse24_tiled_speedup", m.sparse_tiled_speedup()),
+        ] {
+            let Some(want) = entry.opt(name) else {
+                continue;
+            };
+            let want = want.as_f64()?;
+            let floor = want * (1.0 - max_pct / 100.0);
+            if measured < floor {
+                failures.push(format!(
+                    "d={d} {name}: measured {measured:.3}x < floor \
+                     {floor:.3}x (baseline {want:.3}x - {max_pct}%)"
+                ));
+            }
+        }
+    }
+    if !failures.is_empty() {
+        bail!(
+            "tiled throughput regressed vs {path}:\n  {}",
+            failures.join("\n  ")
+        );
+    }
+    println!(
+        "  baseline ok: ratios within {max_pct}% of {path} for all \
+         matching sizes"
+    );
+    Ok(())
+}
+
+/// Today's UTC date as `YYYY-MM-DD`, from the system clock — no chrono
+/// in the vendored dependency closure.
+fn today_utc() -> String {
+    let days = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| (d.as_secs() / 86_400) as i64)
+        .unwrap_or(0);
+    let (y, m, d) = civil_from_days(days);
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+/// Days-since-epoch to (year, month, day), Howard Hinnant's
+/// `civil_from_days` algorithm.
+fn civil_from_days(z: i64) -> (i64, u32, u32) {
+    let z = z + 719_468;
+    let era = if z >= 0 { z } else { z - 146_096 } / 146_097;
+    let doe = (z - era * 146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = (doy - (153 * mp + 2) / 5 + 1) as u32;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 } as u32;
+    (if m <= 2 { y + 1 } else { y }, m, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn civil_from_days_matches_known_dates() {
+        assert_eq!(civil_from_days(0), (1970, 1, 1));
+        assert_eq!(civil_from_days(19_723), (2024, 1, 1));
+        assert_eq!(civil_from_days(11_016), (2000, 2, 29));
+    }
+
+    #[test]
+    fn bench_json_roundtrips_and_gates() {
+        let m = GemmMeasurement {
+            d: 512,
+            n: 8,
+            dense_secs: 0.010,
+            dense_tiled_secs: 0.004,
+            sparse_secs: 0.006,
+            sparse_tiled_secs: 0.005,
+        };
+        let cfg = BenchConfig {
+            smoke: true,
+            seed: DEFAULT_BENCH_SEED,
+            write_json: false,
+            out: None,
+            baseline: None,
+        };
+        let doc = build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0);
+        let back = Json::parse(&doc.write()).unwrap();
+        assert_eq!(back.get("schema").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(back.get("seed").unwrap().as_usize().unwrap(), 7);
+        let g = &back.get("gemm").unwrap().as_arr().unwrap()[0];
+        assert_eq!(g.get("d").unwrap().as_usize().unwrap(), 512);
+        assert!(
+            (g.get("tiled_speedup").unwrap().as_f64().unwrap() - 2.5).abs()
+                < 1e-9
+        );
+
+        // Gate: measured 2.5x passes a 2.0x baseline, fails a 4.0x one.
+        let dir = std::env::temp_dir().join("wandapp_bench_gate");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ok = dir.join("base_ok.json");
+        std::fs::write(
+            &ok,
+            r#"{"gemm":[{"d":512,"tiled_speedup":2.0}],"max_regression_pct":20}"#,
+        )
+        .unwrap();
+        assert!(check_baseline(&[m], ok.to_str().unwrap()).is_ok());
+        let bad = dir.join("base_bad.json");
+        std::fs::write(
+            &bad,
+            r#"{"gemm":[{"d":512,"tiled_speedup":4.0}],"max_regression_pct":20}"#,
+        )
+        .unwrap();
+        assert!(check_baseline(&[m], bad.to_str().unwrap()).is_err());
+        // Baseline sizes the run didn't measure are skipped, not errors.
+        let other = dir.join("base_other.json");
+        std::fs::write(&other, r#"{"gemm":[{"d":4096,"tiled_speedup":9.0}]}"#)
+            .unwrap();
+        assert!(check_baseline(&[m], other.to_str().unwrap()).is_ok());
+    }
+}

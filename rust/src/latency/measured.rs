@@ -1,5 +1,6 @@
 //! Measured wall-clock counterpart of the analytic roofline: time the
-//! native dense GEMM against the 2:4 sparse kernel on identical pruned
+//! native dense GEMM against the 2:4 sparse kernel — and the scalar
+//! oracle against the register-tiled fast path — on identical pruned
 //! inputs, on **this** machine (`wandapp latency --measured`). The paper
 //! contrasts TensorRT-LLM measurements with bandwidth arithmetic
 //! (Table 7 / Appendix B); we contrast our own kernels with our own
@@ -9,9 +10,17 @@ use crate::bench::bench_with;
 use crate::rng::Rng;
 use crate::runtime::native::math::matmul_nt;
 use crate::runtime::native::sparse::matmul_nt_24;
+use crate::runtime::native::tiled::{matmul_nt_24_tiled, matmul_nt_tiled, LANES};
 use crate::sparsity::compress::{compress_24, Compressed24};
 use crate::sparsity::nm_mask_native;
 use crate::tensor::Tensor;
+
+/// Roofline for the tiled-vs-oracle dense contrast: the oracle reduces
+/// each dot through one serial FP-add chain, the tiled kernel through
+/// [`LANES`] independent lanes — so lane-width is the ceiling on the
+/// reassociation speedup (reached only when the GEMM is compute-bound
+/// and the adds were the only bottleneck).
+pub const TILED_ROOFLINE: f64 = LANES as f64;
 
 /// Build the dense-vs-sparse GEMM fixture both `latency --measured` and
 /// the pipeline bench time: a magnitude-2:4-pruned `(d, d)` matrix (as
@@ -36,32 +45,51 @@ pub fn gemm_24_fixture(
     (wp, c, x)
 }
 
-/// One dense-vs-sparse GEMM timing at a given hidden size.
+/// Dense-vs-sparse and oracle-vs-tiled GEMM timings at one hidden size.
 #[derive(Debug, Clone, Copy)]
 pub struct GemmMeasurement {
     pub d: usize,
     /// Input rows (tokens) per GEMM.
     pub n: usize,
+    /// Dense scalar oracle.
     pub dense_secs: f64,
+    /// Dense register-tiled fast path.
+    pub dense_tiled_secs: f64,
+    /// 2:4 scalar oracle.
     pub sparse_secs: f64,
+    /// 2:4 register-tiled fast path.
+    pub sparse_tiled_secs: f64,
 }
 
 impl GemmMeasurement {
-    /// Measured latency reduction (%), the roofline tables' convention
-    /// (positive = sparse is faster).
+    /// Measured latency reduction (%) of the 2:4 oracle vs the dense
+    /// oracle, the roofline tables' convention (positive = sparse is
+    /// faster).
     pub fn reduction_pct(&self) -> f64 {
         100.0 * (self.dense_secs - self.sparse_secs) / self.dense_secs
     }
 
+    /// Oracle dense / oracle 2:4 — the pre-tiled sparse-speedup metric.
     pub fn speedup(&self) -> f64 {
         self.dense_secs / self.sparse_secs
     }
+
+    /// Oracle / tiled on the dense GEMM (the number CI gates).
+    pub fn tiled_speedup(&self) -> f64 {
+        self.dense_secs / self.dense_tiled_secs
+    }
+
+    /// Oracle / tiled on the 2:4 GEMM.
+    pub fn sparse_tiled_speedup(&self) -> f64 {
+        self.sparse_secs / self.sparse_tiled_secs
+    }
 }
 
-/// Time `x(n,d) @ w(d,d)^T` dense vs 2:4-compressed on the native
-/// kernels. `w` is magnitude-pruned to exact 2:4 so both kernels see the
-/// same pruned matrix; timings are min-of-iterations within
-/// `budget_secs` per side, deterministic inputs from `seed`.
+/// Time `x(n,d) @ w(d,d)^T` on all four native kernels: dense and
+/// 2:4-compressed, each on the scalar oracle and the tiled fast path.
+/// `w` is magnitude-pruned to exact 2:4 so every kernel sees the same
+/// pruned matrix; timings are min-of-iterations within `budget_secs`
+/// per kernel, deterministic inputs from `seed`.
 pub fn measure_gemm_24(
     d: usize,
     n: usize,
@@ -70,19 +98,62 @@ pub fn measure_gemm_24(
 ) -> GemmMeasurement {
     let (wp, c, x) = gemm_24_fixture(d, n, seed);
 
-    let label_d = format!("dense  gemm {n}x{d} @ {d}x{d}");
-    let dense = bench_with(&label_d, 1, budget_secs, &mut || {
+    let shape = format!("gemm {n}x{d} @ {d}x{d}");
+    let dense = bench_with(&format!("dense/oracle {shape}"), 1, budget_secs, &mut || {
         std::hint::black_box(matmul_nt(&x, &wp.data, n, d, d));
     });
-    let label_s = format!("2:4    gemm {n}x{d} @ {d}x{d}");
-    let sparse = bench_with(&label_s, 1, budget_secs, &mut || {
+    let dense_tiled =
+        bench_with(&format!("dense/tiled  {shape}"), 1, budget_secs, &mut || {
+            std::hint::black_box(matmul_nt_tiled(&x, &wp.data, n, d, d));
+        });
+    let sparse = bench_with(&format!("2:4/oracle   {shape}"), 1, budget_secs, &mut || {
         std::hint::black_box(matmul_nt_24(&x, &c, n));
     });
+    let sparse_tiled =
+        bench_with(&format!("2:4/tiled    {shape}"), 1, budget_secs, &mut || {
+            std::hint::black_box(matmul_nt_24_tiled(&x, &c, n));
+        });
     GemmMeasurement {
         d,
         n,
         dense_secs: dense.min_secs,
+        dense_tiled_secs: dense_tiled.min_secs,
         sparse_secs: sparse.min_secs,
+        sparse_tiled_secs: sparse_tiled.min_secs,
+    }
+}
+
+/// Print the scalar-vs-tiled-vs-roofline table shared by
+/// `latency --measured` and `bench`: per size, the four kernel timings,
+/// the measured tiled and 2:4 speedups, and the [`TILED_ROOFLINE`]
+/// ceiling the tiled number should be read against.
+pub fn print_gemm_table(rows: &[GemmMeasurement]) {
+    println!(
+        "  {:>6} {:>4} {:>12} {:>12} {:>8} {:>12} {:>12} {:>8} {:>9}",
+        "d",
+        "n",
+        "dense-or(s)",
+        "dense-ti(s)",
+        "tiled-x",
+        "24-or(s)",
+        "24-ti(s)",
+        "24-x",
+        "roofline"
+    );
+    for m in rows {
+        println!(
+            "  {:>6} {:>4} {:>12.6} {:>12.6} {:>7.2}x {:>12.6} {:>12.6} \
+             {:>7.2}x {:>8.1}x",
+            m.d,
+            m.n,
+            m.dense_secs,
+            m.dense_tiled_secs,
+            m.tiled_speedup(),
+            m.sparse_secs,
+            m.sparse_tiled_secs,
+            m.sparse_tiled_speedup(),
+            TILED_ROOFLINE,
+        );
     }
 }
 
@@ -93,14 +164,30 @@ mod tests {
     #[test]
     fn measurement_runs_and_reports_consistently() {
         // Tiny + fast: only the structure is asserted, not the speedup
-        // (d=64 is too small for the sparse win to be reliable in CI).
+        // (d=64 is too small for either win to be reliable in CI).
         let m = measure_gemm_24(64, 4, 0.02, 1);
         assert_eq!(m.d, 64);
         assert!(m.dense_secs > 0.0 && m.sparse_secs > 0.0);
+        assert!(m.dense_tiled_secs > 0.0 && m.sparse_tiled_secs > 0.0);
         assert!((m.reduction_pct()
             - 100.0 * (1.0 - m.sparse_secs / m.dense_secs))
             .abs()
             < 1e-9);
         assert!((m.speedup() - m.dense_secs / m.sparse_secs).abs() < 1e-12);
+        assert!(
+            (m.tiled_speedup() - m.dense_secs / m.dense_tiled_secs).abs()
+                < 1e-12
+        );
+        print_gemm_table(&[m]); // shape-only smoke of the formatter
+    }
+
+    #[test]
+    fn fixture_is_deterministic_in_seed() {
+        let (w1, _, x1) = gemm_24_fixture(32, 2, 9);
+        let (w2, _, x2) = gemm_24_fixture(32, 2, 9);
+        let (w3, _, _) = gemm_24_fixture(32, 2, 10);
+        assert_eq!(w1.data, w2.data);
+        assert_eq!(x1, x2);
+        assert_ne!(w1.data, w3.data);
     }
 }

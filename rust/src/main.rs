@@ -13,19 +13,26 @@ use wandapp::eval::{ppl_pair, run_tasks};
 use wandapp::harness;
 use wandapp::model::load_size;
 use wandapp::pruner::{Method, PruneOptions, Recipe, ScorerRegistry};
-use wandapp::runtime::Backend;
+use wandapp::runtime::{Backend, KernelPolicy};
 use wandapp::sparsity::Pattern;
 
 const USAGE: &str = "\
 wandapp — Wanda++ pruning framework (ACL 2025 reproduction)
 
-USAGE: wandapp [--artifacts DIR] [--backend native|pjrt|auto] <command> [options]
+USAGE: wandapp [--artifacts DIR] [--backend native|pjrt|auto]
+               [--kernels oracle|tiled|auto] <command> [options]
 
 BACKENDS
   native   pure-Rust kernels; runs on a bare checkout (default via auto)
   pjrt     AOT HLO artifacts through PJRT (needs `make artifacts` and a
            build with --features pjrt)
   auto     pjrt when available, else native
+
+KERNELS (forward-path GEMMs only; scoring always runs on the oracle)
+  oracle   strict scalar kernels, bit-exact contract (default)
+  tiled    cache-blocked register-tiled fast path; parity with the
+           oracle within a documented ulp budget (DESIGN.md 13)
+  auto     tiled for large GEMMs, oracle below the size threshold
 
 COMMANDS
   prune    --size s2 --method wanda++ --pattern 2:4 [--calib 32]
@@ -42,10 +49,16 @@ COMMANDS
            Zero-shot task suite.
   repro    <fig1|fig3|fig4|table1..table9|all> [--sizes s0,s1] [--runs 10]
            Regenerate a paper table/figure.
-  latency  [--measured [--smoke]]
+  latency  [--measured [--smoke] [--seed 7]]
            Roofline latency simulation (Tables 7 & 9). --measured also
-           times dense vs 2:4-sparse kernels on this machine and prints
-           the measured reduction next to the analytic prediction.
+           times dense vs 2:4-sparse and oracle vs tiled kernels on this
+           machine (fixtures fixed by --seed) and prints the measured
+           reduction next to the analytic prediction.
+  bench    [--smoke] [--json] [--out FILE] [--baseline FILE] [--seed 7]
+           Perf trajectory: oracle-vs-tiled GEMM matrix + end-to-end
+           pruned-ppl timing. --json writes BENCH_<date>.json (or
+           --out FILE); --baseline gates the tiled/oracle throughput
+           ratios against a committed BENCH_baseline.json.
   generate --size s2 [--weights FILE] [--prompt STR] [--tokens 200]
            [--temp 0.8] [--sparse-exec]
            Sample text from a (pruned) model.
@@ -60,9 +73,9 @@ METHODS  magnitude wanda sparsegpt gblm wanda++rgs wanda++ro wanda++
 PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
-/// Valueless switches: `--sparse-exec`, `--measured`, `--smoke` take no
-/// argument (everything else is a `--key value` pair).
-const BOOL_FLAGS: [&str; 3] = ["sparse-exec", "measured", "smoke"];
+/// Valueless switches: `--sparse-exec`, `--measured`, `--smoke`,
+/// `--json` take no argument (everything else is a `--key value` pair).
+const BOOL_FLAGS: [&str; 4] = ["sparse-exec", "measured", "smoke", "json"];
 
 /// Tiny flag parser: positional args + `--key value` pairs + boolean
 /// switches.
@@ -170,6 +183,7 @@ fn main() -> Result<()> {
         .clone();
     let rt_box = wandapp::runtime::open(&artifacts, &args.get("backend", "auto"))?;
     let rt: &dyn Backend = rt_box.as_ref();
+    rt.set_kernel_policy(KernelPolicy::parse(&args.get("kernels", "oracle"))?)?;
 
     match cmd.as_str() {
         "prune" => {
@@ -274,8 +288,20 @@ fn main() -> Result<()> {
         "latency" => {
             harness::table7_table9();
             if args.has("measured") {
-                harness::latency_measured(rt, args.has("smoke"))?;
+                let seed =
+                    args.get_parse("seed", harness::DEFAULT_BENCH_SEED)?;
+                harness::latency_measured(rt, args.has("smoke"), seed)?;
             }
+        }
+        "bench" => {
+            let cfg = harness::BenchConfig {
+                smoke: args.has("smoke"),
+                seed: args.get_parse("seed", harness::DEFAULT_BENCH_SEED)?,
+                write_json: args.has("json"),
+                out: args.get_opt("out"),
+                baseline: args.get_opt("baseline"),
+            };
+            harness::bench_trajectory(rt, &cfg)?;
         }
         "generate" => {
             let w = match args.get_opt("weights") {

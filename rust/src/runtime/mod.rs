@@ -43,6 +43,66 @@ use anyhow::{anyhow, Result};
 use crate::sparsity::SparseBlock;
 use crate::tensor::{Tensor, Value, ValueView};
 
+/// Which GEMM implementation the forward-path kernels run on
+/// (DESIGN.md §13).
+///
+/// `Oracle` is the default everywhere: the strict scalar kernels whose
+/// unreassociated accumulation order the bit-exactness contract
+/// (DESIGN.md §12) is written against. `Tiled` selects the
+/// cache-blocked, register-tiled fast path — the same math with a
+/// reassociated reduction, so outputs agree with the oracle only within
+/// the documented ulp budget
+/// (`runtime::native::tiled::parity_tolerance`). `Auto` picks per GEMM
+/// by problem size. The policy covers the seven prunable block
+/// projections (dense `block_fwd` and the sparse execution engine);
+/// scoring, statistics and gradient kernels always run on the oracle,
+/// so pruning decisions are identical under every policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelPolicy {
+    #[default]
+    Oracle,
+    Tiled,
+    Auto,
+}
+
+impl KernelPolicy {
+    /// `Auto` takes the tiled path when a GEMM has at least this many
+    /// multiply-adds (`n * k * m`): below it the oracle's zero setup
+    /// cost wins, above it the tiled lane parallelism dominates.
+    /// 2^17 is an `(8, 128) @ (128, 128)^T` projection.
+    pub const AUTO_MIN_MACS: usize = 1 << 17;
+
+    /// Should an `(n, k) @ (m, k)^T` GEMM take the tiled path?
+    pub fn use_tiled(self, n: usize, k: usize, m: usize) -> bool {
+        match self {
+            KernelPolicy::Oracle => false,
+            KernelPolicy::Tiled => true,
+            KernelPolicy::Auto => n * k * m >= Self::AUTO_MIN_MACS,
+        }
+    }
+
+    /// Parse a `--kernels` value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "oracle" => Ok(KernelPolicy::Oracle),
+            "tiled" => Ok(KernelPolicy::Tiled),
+            "auto" => Ok(KernelPolicy::Auto),
+            other => Err(anyhow!(
+                "unknown kernel policy `{other}` (oracle|tiled|auto)"
+            )),
+        }
+    }
+
+    /// Label for logs and bench JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelPolicy::Oracle => "oracle",
+            KernelPolicy::Tiled => "tiled",
+            KernelPolicy::Auto => "auto",
+        }
+    }
+}
+
 /// A compute backend: maps manifest keys to typed kernel executions.
 ///
 /// Object-safe so the coordinator, pruner, harness and CLI can hold a
@@ -73,6 +133,26 @@ pub trait Backend {
 
     /// Clear the execution accounting.
     fn reset_stats(&self);
+
+    /// The active forward-path GEMM policy (DESIGN.md §13).
+    fn kernel_policy(&self) -> KernelPolicy {
+        KernelPolicy::Oracle
+    }
+
+    /// Select the forward-path GEMM implementation. Backends without a
+    /// tiled fast path (PJRT) accept `Oracle` and `Auto` — both resolve
+    /// to their only kernels — and reject an explicit `Tiled` request
+    /// instead of silently ignoring it.
+    fn set_kernel_policy(&self, policy: KernelPolicy) -> Result<()> {
+        if policy == KernelPolicy::Tiled {
+            return Err(anyhow!(
+                "the {} backend has no tiled kernels \
+                 (use --kernels oracle|auto)",
+                self.name()
+            ));
+        }
+        Ok(())
+    }
 
     /// Execute with owned inputs (convenience over [`Backend::exec_v`]).
     fn exec(&self, key: &str, inputs: &[Value]) -> Result<Vec<Value>> {
@@ -177,5 +257,14 @@ mod tests {
         let auto = open(&dir, "auto").unwrap();
         assert_eq!(auto.name(), "native");
         assert!(open(&dir, "bogus").is_err());
+    }
+
+    #[test]
+    fn kernel_policy_parses_and_labels() {
+        assert_eq!(KernelPolicy::parse("oracle").unwrap(), KernelPolicy::Oracle);
+        assert_eq!(KernelPolicy::parse("tiled").unwrap(), KernelPolicy::Tiled);
+        assert_eq!(KernelPolicy::parse("auto").unwrap().label(), "auto");
+        assert!(KernelPolicy::parse("fast").is_err());
+        assert_eq!(KernelPolicy::default(), KernelPolicy::Oracle);
     }
 }

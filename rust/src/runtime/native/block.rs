@@ -8,10 +8,13 @@
 //! softmax over `j <= i`, scale `1/sqrt(head_dim)`) → residual → RMSNorm →
 //! SwiGLU MLP → residual. All buffers are flat row-major `f32`.
 
+use crate::runtime::KernelPolicy;
+
 use super::math::{
     matmul_nn, matmul_nt, matmul_tn, rmsnorm, rmsnorm_backward, silu,
     silu_grad, softmax_inplace,
 };
+use super::tiled::matmul_nt_policy;
 
 /// Shape bundle for one block invocation.
 #[derive(Debug, Clone, Copy)]
@@ -149,19 +152,34 @@ impl BlockCache {
 /// Forward one decoder block over `x` of shape `(b, t, d)`; returns the
 /// output and the cache of intermediates. Thin dense wrapper over
 /// [`block_forward_with`] — the seven projections are plain `matmul_nt`
-/// calls on the dense weight slices.
+/// calls on the dense weight slices ([`block_forward_policy`] with the
+/// oracle policy, so every caller that needs the bit-exact scalar
+/// reduction keeps it by construction).
 pub fn block_forward(x: &[f32], w: BlockWeights, dims: Dims) -> (Vec<f32>, BlockCache) {
+    block_forward_policy(x, w, dims, KernelPolicy::Oracle)
+}
+
+/// [`block_forward`] with the seven projections dispatched through a
+/// [`KernelPolicy`] (DESIGN.md §13): `Oracle` is bit-identical to the
+/// pre-policy kernel, `Tiled`/`Auto` may route projections to the
+/// register-tiled fast path (tolerance-based parity).
+pub fn block_forward_policy(
+    x: &[f32],
+    w: BlockWeights,
+    dims: Dims,
+    policy: KernelPolicy,
+) -> (Vec<f32>, BlockCache) {
     let (d, f) = (dims.d, dims.ffn);
     block_forward_with(x, w.ln1, w.ln2, dims, |pi, input| {
         // `PRUNABLE` order: wq wk wv wo wg wu wd.
         match pi {
-            0 => matmul_nt(input, w.wq, input.len() / d, d, d),
-            1 => matmul_nt(input, w.wk, input.len() / d, d, d),
-            2 => matmul_nt(input, w.wv, input.len() / d, d, d),
-            3 => matmul_nt(input, w.wo, input.len() / d, d, d),
-            4 => matmul_nt(input, w.wg, input.len() / d, d, f),
-            5 => matmul_nt(input, w.wu, input.len() / d, d, f),
-            _ => matmul_nt(input, w.wd, input.len() / f, f, d),
+            0 => matmul_nt_policy(policy, input, w.wq, input.len() / d, d, d),
+            1 => matmul_nt_policy(policy, input, w.wk, input.len() / d, d, d),
+            2 => matmul_nt_policy(policy, input, w.wv, input.len() / d, d, d),
+            3 => matmul_nt_policy(policy, input, w.wo, input.len() / d, d, d),
+            4 => matmul_nt_policy(policy, input, w.wg, input.len() / d, d, f),
+            5 => matmul_nt_policy(policy, input, w.wu, input.len() / d, d, f),
+            _ => matmul_nt_policy(policy, input, w.wd, input.len() / f, f, d),
         }
     })
 }

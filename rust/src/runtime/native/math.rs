@@ -35,7 +35,7 @@ where
         }
         return;
     }
-    let rows_per = (rows + threads - 1) / threads;
+    let rows_per = rows.div_ceil(threads);
     let fref = &f;
     std::thread::scope(|s| {
         for (ti, chunk) in out.chunks_mut(rows_per * row_len).enumerate() {
@@ -44,6 +44,32 @@ where
                     fref(ti * rows_per + i, row);
                 }
             });
+        }
+    });
+}
+
+/// Like [`par_rows`], but hands each thread its whole contiguous strip
+/// of rows at once (`f(first_row_index, strip)`) so a kernel can
+/// re-tile the strip internally — the cache-blocked GEMMs in
+/// [`super::tiled`]. Same serial cutoff and determinism argument as
+/// [`par_rows`]: strips are disjoint, and callers must not let a row's
+/// result depend on where strip boundaries fall.
+pub fn par_strips<F>(out: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let threads = n_threads().min(rows.max(1));
+    if threads <= 1 || rows * row_len < 16_384 {
+        f(0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(threads);
+    let fref = &f;
+    std::thread::scope(|s| {
+        for (ti, strip) in out.chunks_mut(rows_per * row_len).enumerate() {
+            s.spawn(move || fref(ti * rows_per, strip));
         }
     });
 }
@@ -58,7 +84,7 @@ where
     if threads <= 1 {
         return (0..n).map(f).collect();
     }
-    let per = (n + threads - 1) / threads;
+    let per = n.div_ceil(threads);
     let fref = &f;
     let mut parts: Vec<Vec<T>> = Vec::new();
     std::thread::scope(|s| {
@@ -309,6 +335,22 @@ mod tests {
             }
         }
         assert_eq!(y, want, "threaded matmul must be bit-identical");
+    }
+
+    #[test]
+    fn par_strips_covers_every_row_once() {
+        let (rows, k) = (160, 110); // big enough for the threaded path
+        let mut out = vec![0.0f32; rows * k];
+        par_strips(&mut out, k, |first, strip| {
+            for (i, row) in strip.chunks_mut(k).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (first + i) as f32;
+                }
+            }
+        });
+        for r in 0..rows {
+            assert!(out[r * k..(r + 1) * k].iter().all(|v| *v == r as f32));
+        }
     }
 
     #[test]

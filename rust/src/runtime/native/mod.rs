@@ -16,20 +16,21 @@ pub mod block;
 pub mod math;
 pub mod model;
 pub mod sparse;
+pub mod tiled;
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::{Backend, ExecStats, Manifest, SizeInfo};
+use crate::runtime::{Backend, ExecStats, KernelPolicy, Manifest, SizeInfo};
 use crate::sparsity::{nm_mask_native, SparseBlock};
 use crate::tensor::{Tensor, TensorI32, Value, ValueView};
 
 use block::{
-    block_backward, block_forward, site_grams, site_squares, site_sums,
-    BlockWeights, Dims,
+    block_backward, block_forward, block_forward_policy, site_grams,
+    site_squares, site_sums, BlockWeights, Dims,
 };
 use math::{par_map, rmsprop_update};
 
@@ -40,6 +41,11 @@ pub struct NativeBackend {
     manifest: Manifest,
     dir: PathBuf,
     stats: RefCell<ExecStats>,
+    /// Forward-path GEMM selection (DESIGN.md §13). Only `block_fwd` and
+    /// the sparse execution engine consult it — statistics, gradient and
+    /// scoring kernels always run on the oracle, so pruning decisions are
+    /// policy-independent.
+    policy: Cell<KernelPolicy>,
 }
 
 /// A parsed kernel key.
@@ -77,6 +83,7 @@ impl NativeBackend {
             manifest,
             dir,
             stats: RefCell::new(ExecStats::default()),
+            policy: Cell::new(KernelPolicy::Oracle),
         })
     }
 
@@ -347,7 +354,8 @@ impl NativeBackend {
                 let bp = Self::f32_slice_range(key, inputs, 1, 9)?;
                 Self::check_block_params(key, info, &bp)?;
                 let w = BlockWeights::from_slices(&bp);
-                let (y, _) = block_forward(&x.data, w, dims);
+                let (y, _) =
+                    block_forward_policy(&x.data, w, dims, self.policy.get());
                 Ok(vec![Value::F32(Tensor::new(x.shape.clone(), y))])
             }
             Kernel::BlockStats(t) => {
@@ -887,6 +895,15 @@ impl Backend for NativeBackend {
         self.stats.borrow_mut().reset();
     }
 
+    fn kernel_policy(&self) -> KernelPolicy {
+        self.policy.get()
+    }
+
+    fn set_kernel_policy(&self, policy: KernelPolicy) -> Result<()> {
+        self.policy.set(policy);
+        Ok(())
+    }
+
     fn exec_v(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Value>> {
         let (name, info, kernel) = self
             .split_key(key)
@@ -907,7 +924,9 @@ impl Backend for NativeBackend {
     /// True sparse execution: the shared block core with each prunable
     /// projection running on its packed representation
     /// (`runtime::native::sparse`, DESIGN.md §12) — no decompression, no
-    /// dense zero-multiplies. Bit-identical to the dense `block_fwd`.
+    /// dense zero-multiplies. Bit-identical to the dense `block_fwd`
+    /// under the oracle policy; tiled parity is within the ulp budget
+    /// (DESIGN.md §13).
     fn block_fwd_sparse(
         &self,
         key: &str,
@@ -926,7 +945,12 @@ impl Backend for NativeBackend {
         let dims = Self::block_dims(key, info, x, t)?;
         blk.check_dims(info.d, info.ffn)?;
         let t0 = Instant::now();
-        let y = sparse::sparse_block_forward(&x.data, blk, dims);
+        let y = sparse::sparse_block_forward_policy(
+            &x.data,
+            blk,
+            dims,
+            self.policy.get(),
+        );
         // Accounted under a distinct key so `profile` output separates
         // sparse from dense block time.
         self.stats

@@ -16,6 +16,7 @@
 //! the measured counterpart of the simulator's `sparse_speedup`
 //! (`wandapp latency --measured`).
 
+use crate::runtime::KernelPolicy;
 use crate::sparsity::compress::{Compressed24, RowCompressed};
 use crate::sparsity::exec::SparseBlock;
 
@@ -102,12 +103,32 @@ pub fn matmul_nt_rows(x: &[f32], c: &RowCompressed, n: usize) -> Vec<f32> {
 /// to its packed representation's kernel. Same op order as the dense
 /// [`super::block::block_forward`], so outputs are bit-identical.
 pub fn sparse_block_forward(x: &[f32], blk: &SparseBlock, dims: Dims) -> Vec<f32> {
+    sparse_block_forward_policy(x, blk, dims, KernelPolicy::Oracle)
+}
+
+/// [`sparse_block_forward`] with each projection dispatched through a
+/// [`KernelPolicy`] (DESIGN.md §13). Under `Oracle` this is bit-identical
+/// to the dense block forward; under `Tiled`/`Auto` 2:4 projections may
+/// take the register-tiled kernel, whose reassociated reduction agrees
+/// with the oracle only within the documented ulp budget.
+pub fn sparse_block_forward_policy(
+    x: &[f32],
+    blk: &SparseBlock,
+    dims: Dims,
+    policy: KernelPolicy,
+) -> Vec<f32> {
     let (y, _) = block_forward_with(
         x,
         &blk.ln1.data,
         &blk.ln2.data,
         dims,
-        |pi, input| blk.mats[pi].matmul_nt(input, input.len() / blk.mats[pi].cols()),
+        |pi, input| {
+            blk.mats[pi].matmul_nt_policy(
+                input,
+                input.len() / blk.mats[pi].cols(),
+                policy,
+            )
+        },
     );
     y
 }

@@ -1,0 +1,304 @@
+//! Cache-blocked, register-tiled GEMM fast path (DESIGN.md §13): the
+//! throughput counterpart of the strict scalar oracle kernels in
+//! [`super::math`] and [`super::sparse`].
+//!
+//! The oracle kernels reduce each output element in ascending column
+//! order through a single accumulator — the bit-exactness contract of
+//! DESIGN.md §12 — which serializes every multiply-add behind the FP-add
+//! dependency chain. The tiled dense kernel reassociates each dot
+//! product into [`LANES`] independent partial sums (a fixed-size array
+//! LLVM turns into SIMD lanes) over an `MR x NR` register tile of
+//! outputs, with the weight rows walked in L2-sized panels. The tiled
+//! 2:4 kernel wins through instruction-level parallelism instead (the
+//! kept-value gathers do not vectorize): [`MR24`] input rows share each
+//! metadata decode and every dot runs in independent per-kept-value
+//! accumulator chains.
+//!
+//! Reassociation changes rounding, so parity with the oracle is
+//! tolerance-based: the documented ulp budget is [`parity_tolerance`].
+//! Selection between the paths is a [`KernelPolicy`]; the oracle stays
+//! the default, and pruning-score kernels never take the tiled path.
+//!
+//! Determinism: column `j` always lands in partial sum `j % LANES`, the
+//! final reduction tree is fixed, and the `k % LANES` tail is added
+//! last in ascending order — so a tiled result depends only on the
+//! operands, never on thread count, strip boundaries or panel size.
+
+use crate::runtime::KernelPolicy;
+use crate::sparsity::compress::Compressed24;
+
+use super::math::{matmul_nt, par_strips};
+use super::sparse::matmul_nt_24;
+
+/// Partial sums per dot product: 8 f32 = one AVX2 register (two NEON).
+pub const LANES: usize = 8;
+/// Register tile: `MR` input rows x `NR` weight rows of accumulators.
+const MR: usize = 2;
+const NR: usize = 4;
+/// 2:4 row tile: this many input rows share each metadata decode.
+const MR24: usize = 4;
+/// Target bytes of one weight panel (~half a typical 512 KiB L2 slice),
+/// so the register tile streams against cache-resident weight rows.
+const PANEL_BYTES: usize = 256 * 1024;
+
+/// Per-element parity tolerance between the tiled and oracle kernels —
+/// the documented ulp budget (DESIGN.md §13). Each kernel's rounding
+/// error on one dot product is bounded by `(k-1) * eps/2 * sum|x_j w_j|`
+/// (standard serial-summation analysis; reassociating into shorter
+/// chains only lowers the bound), so the difference between the two is
+/// within twice that. The budget doubles the bound again for slack and
+/// adds one eps as an absolute floor for near-zero dots.
+pub fn parity_tolerance(k: usize, abs_dot: f32) -> f32 {
+    2.0 * (k.max(1) as f32) * f32::EPSILON * abs_dot + f32::EPSILON
+}
+
+/// `y = x @ w^T` on the tiled fast path: x is `(n, k)`, w is `(m, k)`,
+/// y is `(n, m)` — the same shapes and layout as [`matmul_nt`], with
+/// values equal within [`parity_tolerance`].
+pub fn matmul_nt_tiled(
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), n * k);
+    debug_assert_eq!(w.len(), m * k);
+    let mut y = vec![0.0f32; n * m];
+    if n == 0 || m == 0 || k == 0 {
+        return y;
+    }
+    // Panel width: as many weight rows as fit the byte budget.
+    let oc = (PANEL_BYTES / (4 * k)).max(NR).min(m);
+    par_strips(&mut y, m, |i0, strip| {
+        let rows = strip.len() / m;
+        let mut ob = 0;
+        while ob < m {
+            let oe = (ob + oc).min(m);
+            let mut a = 0;
+            while a < rows {
+                let ri = (rows - a).min(MR);
+                let mut o = ob;
+                while o < oe {
+                    let rn = (oe - o).min(NR);
+                    micro_nt(x, w, k, m, i0 + a, ri, o, rn, &mut strip[a * m..]);
+                    o += rn;
+                }
+                a += ri;
+            }
+            ob = oe;
+        }
+    });
+    y
+}
+
+/// One `ri x rn` register tile (`ri <= MR`, `rn <= NR`):
+/// `out[r*m + o + c] = x[i+r] . w[o+c]`, each dot reduced in [`LANES`]
+/// fixed-assignment partial sums (column `j` to lane `j % LANES`), a
+/// fixed pairwise tree, then the scalar `k % LANES` tail — the one
+/// accumulation order every tiled call shares.
+#[inline]
+fn micro_nt(
+    x: &[f32],
+    w: &[f32],
+    k: usize,
+    m: usize,
+    i: usize,
+    ri: usize,
+    o: usize,
+    rn: usize,
+    out: &mut [f32],
+) {
+    let mut acc = [[[0.0f32; LANES]; NR]; MR];
+    let kb = k - k % LANES;
+    let mut j = 0;
+    while j < kb {
+        for r in 0..ri {
+            let xv = &x[(i + r) * k + j..][..LANES];
+            for c in 0..rn {
+                let wv = &w[(o + c) * k + j..][..LANES];
+                let lane = &mut acc[r][c];
+                for l in 0..LANES {
+                    lane[l] += xv[l] * wv[l];
+                }
+            }
+        }
+        j += LANES;
+    }
+    for r in 0..ri {
+        for c in 0..rn {
+            let v = acc[r][c];
+            let mut s = ((v[0] + v[4]) + (v[1] + v[5]))
+                + ((v[2] + v[6]) + (v[3] + v[7]));
+            for jt in kb..k {
+                s += x[(i + r) * k + jt] * w[(o + c) * k + jt];
+            }
+            out[r * m + o + c] = s;
+        }
+    }
+}
+
+/// `y = x @ w^T` with `w` 2:4-compressed, on the tiled fast path — same
+/// shapes as [`matmul_nt_24`]. [`MR24`] input rows share each metadata
+/// decode, and each row's dot product accumulates in independent chains
+/// (one per kept value of a metadata byte, reduced by a fixed tree), so
+/// the FP adds overlap instead of serializing.
+pub fn matmul_nt_24_tiled(x: &[f32], c: &Compressed24, n: usize) -> Vec<f32> {
+    let (m, k) = (c.shape[0], c.shape[1]);
+    debug_assert_eq!(x.len(), n * k);
+    let gpr = k / 4; // groups per weight row
+    let values = &c.values;
+    let meta = &c.meta;
+    let mut y = vec![0.0f32; n * m];
+    if n == 0 || m == 0 || gpr == 0 {
+        return y;
+    }
+    par_strips(&mut y, m, |i0, strip| {
+        let rows = strip.len() / m;
+        let mut a = 0;
+        while a < rows {
+            let ri = (rows - a).min(MR24);
+            if gpr % 2 == 0 {
+                // Byte-aligned fast path, as in `matmul_nt_24`: one byte
+                // decodes two groups (8 columns, 4 kept values).
+                for o in 0..m {
+                    let mb = o * gpr / 2;
+                    let mut v = o * gpr * 2;
+                    let mut acc = [[0.0f32; 4]; MR24];
+                    let mut j = 0;
+                    for byte in &meta[mb..mb + gpr / 2] {
+                        let b = *byte as usize;
+                        let (p0, p1) = (b & 3, (b >> 2) & 3);
+                        let (p2, p3) = (4 + ((b >> 4) & 3), 4 + ((b >> 6) & 3));
+                        let (v0, v1, v2, v3) = (
+                            values[v],
+                            values[v + 1],
+                            values[v + 2],
+                            values[v + 3],
+                        );
+                        for r in 0..ri {
+                            let xg = &x[(i0 + a + r) * k + j..][..8];
+                            let lane = &mut acc[r];
+                            lane[0] += v0 * xg[p0];
+                            lane[1] += v1 * xg[p1];
+                            lane[2] += v2 * xg[p2];
+                            lane[3] += v3 * xg[p3];
+                        }
+                        v += 4;
+                        j += 8;
+                    }
+                    for (r, lane) in acc.iter().enumerate().take(ri) {
+                        strip[(a + r) * m + o] =
+                            (lane[0] + lane[2]) + (lane[1] + lane[3]);
+                    }
+                }
+            } else {
+                // General nibble path (k % 8 != 0): two chains per row.
+                for o in 0..m {
+                    let mut g = o * gpr;
+                    let mut acc = [[0.0f32; 2]; MR24];
+                    let mut j = 0;
+                    while j < k {
+                        let nib = (meta[g >> 1] >> ((g & 1) * 4)) & 0x0F;
+                        let (p0, p1) =
+                            ((nib & 3) as usize, ((nib >> 2) & 3) as usize);
+                        let (v0, v1) = (values[2 * g], values[2 * g + 1]);
+                        for r in 0..ri {
+                            let xg = &x[(i0 + a + r) * k + j..][..4];
+                            acc[r][0] += v0 * xg[p0];
+                            acc[r][1] += v1 * xg[p1];
+                        }
+                        g += 1;
+                        j += 4;
+                    }
+                    for (r, lane) in acc.iter().enumerate().take(ri) {
+                        strip[(a + r) * m + o] = lane[0] + lane[1];
+                    }
+                }
+            }
+            a += ri;
+        }
+    });
+    y
+}
+
+/// Dense `x @ w^T` through a [`KernelPolicy`]: [`matmul_nt`] (oracle)
+/// or [`matmul_nt_tiled`].
+pub fn matmul_nt_policy(
+    policy: KernelPolicy,
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+) -> Vec<f32> {
+    if policy.use_tiled(n, k, m) {
+        matmul_nt_tiled(x, w, n, k, m)
+    } else {
+        matmul_nt(x, w, n, k, m)
+    }
+}
+
+/// 2:4 `x @ w^T` through a [`KernelPolicy`]: [`matmul_nt_24`] (oracle)
+/// or [`matmul_nt_24_tiled`].
+pub fn matmul_nt_24_policy(
+    policy: KernelPolicy,
+    x: &[f32],
+    c: &Compressed24,
+    n: usize,
+) -> Vec<f32> {
+    let (m, k) = (c.shape[0], c.shape[1]);
+    if policy.use_tiled(n, k, m) {
+        matmul_nt_24_tiled(x, c, n)
+    } else {
+        matmul_nt_24(x, c, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn tiled_is_deterministic_across_calls() {
+        let mut rng = Rng::seed_from_u64(21);
+        let (n, k, m) = (33, 100, 17); // none divisible by MR/NR/LANES
+        let x: Vec<f32> = (0..n * k).map(|_| rng.gen_normal()).collect();
+        let w: Vec<f32> = (0..m * k).map(|_| rng.gen_normal()).collect();
+        let a = matmul_nt_tiled(&x, &w, n, k, m);
+        let b = matmul_nt_tiled(&x, &w, n, k, m);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn short_dots_match_the_oracle_bit_exactly() {
+        // k < LANES: the lane array stays zero, so the tail accumulates
+        // in ascending order — exactly the oracle's reduction.
+        let mut rng = Rng::seed_from_u64(22);
+        let (n, k, m) = (5, 7, 9);
+        let x: Vec<f32> = (0..n * k).map(|_| rng.gen_normal()).collect();
+        let w: Vec<f32> = (0..m * k).map(|_| rng.gen_normal()).collect();
+        assert_eq!(
+            matmul_nt_tiled(&x, &w, n, k, m),
+            matmul_nt(&x, &w, n, k, m)
+        );
+    }
+
+    #[test]
+    fn policy_dispatch_routes_by_size() {
+        // Oracle never tiles; Tiled always does; Auto splits on MACs.
+        assert!(!KernelPolicy::Oracle.use_tiled(1 << 10, 1 << 10, 1 << 10));
+        assert!(KernelPolicy::Tiled.use_tiled(1, 1, 1));
+        assert!(!KernelPolicy::Auto.use_tiled(1, 64, 64));
+        assert!(KernelPolicy::Auto.use_tiled(8, 512, 512));
+    }
+
+    #[test]
+    fn empty_shapes_give_empty_or_zero_outputs() {
+        assert!(matmul_nt_tiled(&[], &[], 0, 4, 0).is_empty());
+        let y = matmul_nt_tiled(&[], &[], 2, 0, 3);
+        assert_eq!(y, vec![0.0; 6]);
+    }
+}

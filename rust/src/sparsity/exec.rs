@@ -20,7 +20,8 @@ use std::cell::OnceCell;
 use anyhow::{bail, Result};
 
 use crate::model::{ModelConfig, Weights};
-use crate::runtime::native::{math::matmul_nt, sparse as kernels};
+use crate::runtime::native::{sparse as kernels, tiled};
+use crate::runtime::KernelPolicy;
 use crate::sparsity::compress::{
     compress_24, compress_rows, decompress_24, decompress_rows, Compressed24,
     RowCompressed,
@@ -101,12 +102,34 @@ impl ExecutableWeights {
     /// y is `(n, d_out)`. Bit-identical to the dense kernel on the
     /// decompressed matrix (see `runtime::native::sparse`).
     pub fn matmul_nt(&self, x: &[f32], n: usize) -> Vec<f32> {
+        self.matmul_nt_policy(x, n, KernelPolicy::Oracle)
+    }
+
+    /// [`ExecutableWeights::matmul_nt`] through a [`KernelPolicy`]
+    /// (DESIGN.md §13): under `Tiled`/`Auto` the dense and 2:4 formats
+    /// may take the register-tiled fast path (ulp-budget parity with the
+    /// oracle). CSR has no tiled kernel — the gather-dominated inner
+    /// loop gains nothing from register tiling — so `RowSparse` always
+    /// runs the oracle kernel.
+    pub fn matmul_nt_policy(
+        &self,
+        x: &[f32],
+        n: usize,
+        policy: KernelPolicy,
+    ) -> Vec<f32> {
         match self {
-            ExecutableWeights::Sparse24(c) => kernels::matmul_nt_24(x, c, n),
-            ExecutableWeights::RowSparse(c) => kernels::matmul_nt_rows(x, c, n),
-            ExecutableWeights::Dense(t) => {
-                matmul_nt(x, &t.data, n, t.cols(), t.rows())
+            ExecutableWeights::Sparse24(c) => {
+                tiled::matmul_nt_24_policy(policy, x, c, n)
             }
+            ExecutableWeights::RowSparse(c) => kernels::matmul_nt_rows(x, c, n),
+            ExecutableWeights::Dense(t) => tiled::matmul_nt_policy(
+                policy,
+                x,
+                &t.data,
+                n,
+                t.cols(),
+                t.rows(),
+            ),
         }
     }
 

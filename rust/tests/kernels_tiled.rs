@@ -1,0 +1,226 @@
+//! Tiled fast-path parity (tier 1, DESIGN.md §13): the register-tiled
+//! GEMM kernels must agree with the scalar oracle within the documented
+//! ulp budget across awkward shapes (k % 8 != 0 remainders, dims not
+//! divisible by the tile size, all-zero 2:4 groups), and
+//! `KernelPolicy::Oracle` must stay bit-identical to the pre-policy
+//! kernels through the backend dispatch.
+
+// the shape-checking helper naturally takes the full GEMM signature
+#![allow(clippy::too_many_arguments)]
+
+use wandapp::model::load_size;
+use wandapp::rng::Rng;
+use wandapp::runtime::native::math::matmul_nt;
+use wandapp::runtime::native::sparse::matmul_nt_24;
+use wandapp::runtime::native::tiled::{
+    matmul_nt_24_tiled, matmul_nt_tiled, parity_tolerance,
+};
+use wandapp::runtime::{Backend, KernelPolicy, NativeBackend};
+use wandapp::sparsity::compress::compress_24;
+use wandapp::sparsity::nm_mask_native;
+use wandapp::tensor::{Tensor, Value};
+
+fn rand_vec(rng: &mut Rng, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.gen_normal()).collect()
+}
+
+/// Magnitude-2:4-pruned `(m, k)` tensor (k % 4 == 0).
+fn pruned_24(rng: &mut Rng, m: usize, k: usize) -> Tensor {
+    let w = Tensor::new(vec![m, k], rand_vec(rng, m * k));
+    let scores =
+        Tensor::new(w.shape.clone(), w.data.iter().map(|v| v.abs()).collect());
+    w.hadamard(&nm_mask_native(&scores, 2, 4))
+}
+
+/// Assert `a[i] == b[i]` within the per-element ulp budget, with the
+/// magnitude term taken from the actual |x_j * w_j| sums.
+fn assert_within_budget(
+    a: &[f32],
+    b: &[f32],
+    x: &[f32],
+    w: &[f32],
+    n: usize,
+    k: usize,
+    m: usize,
+    what: &str,
+) {
+    assert_eq!(a.len(), n * m, "{what}: output length");
+    for i in 0..n {
+        for o in 0..m {
+            let abs_dot: f32 = (0..k)
+                .map(|j| (x[i * k + j] * w[o * k + j]).abs())
+                .sum();
+            let tol = parity_tolerance(k, abs_dot);
+            let (va, vb) = (a[i * m + o], b[i * m + o]);
+            assert!(
+                (va - vb).abs() <= tol,
+                "{what}: ({i},{o}) oracle {va} vs tiled {vb} \
+                 (diff {}, budget {tol})",
+                (va - vb).abs()
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_dense_matches_oracle_within_ulp_budget() {
+    let mut rng = Rng::seed_from_u64(101);
+    // Shapes straddle every boundary: k % 8 != 0 tails, n/m smaller than
+    // and not divisible by the MR=2 / NR=4 register tile, k < LANES.
+    for (n, k, m) in [
+        (1usize, 1usize, 1usize),
+        (3, 5, 2),
+        (5, 12, 7),
+        (2, 8, 4),
+        (33, 100, 17),
+        (8, 131, 23),
+        (16, 256, 64),
+    ] {
+        let x = rand_vec(&mut rng, n * k);
+        let w = rand_vec(&mut rng, m * k);
+        let oracle = matmul_nt(&x, &w, n, k, m);
+        let tiled = matmul_nt_tiled(&x, &w, n, k, m);
+        assert_within_budget(
+            &oracle,
+            &tiled,
+            &x,
+            &w,
+            n,
+            k,
+            m,
+            &format!("dense ({n},{k},{m})"),
+        );
+    }
+}
+
+#[test]
+fn tiled_24_matches_oracle_within_ulp_budget() {
+    let mut rng = Rng::seed_from_u64(102);
+    // k=16/8: byte-aligned metadata path; k=12/20: nibble path
+    // (k % 8 != 0); m odd and below/above the MR24=4 row tile.
+    for (m, k) in [(8usize, 16usize), (5, 12), (3, 20), (16, 8), (1, 4), (7, 64)] {
+        let w = pruned_24(&mut rng, m, k);
+        let c = compress_24(&w).unwrap();
+        for n in [1usize, 3, 4, 9] {
+            let x = rand_vec(&mut rng, n * k);
+            let oracle = matmul_nt_24(&x, &c, n);
+            let tiled = matmul_nt_24_tiled(&x, &c, n);
+            assert_within_budget(
+                &oracle,
+                &tiled,
+                &x,
+                &w.data,
+                n,
+                k,
+                m,
+                &format!("2:4 ({n},{k},{m})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn tiled_24_handles_all_zero_groups() {
+    let mut rng = Rng::seed_from_u64(103);
+    let mut w = pruned_24(&mut rng, 6, 16);
+    {
+        let wd = w.data.make_mut();
+        // zero one kept weight, one whole group, and one whole row
+        let pos = wd.iter().position(|v| *v != 0.0).unwrap();
+        wd[pos] = 0.0;
+        for v in &mut wd[16..20] {
+            *v = 0.0;
+        }
+        for v in &mut wd[32..48] {
+            *v = 0.0;
+        }
+    }
+    let c = compress_24(&w).unwrap();
+    let x = rand_vec(&mut rng, 5 * 16);
+    let oracle = matmul_nt_24(&x, &c, 5);
+    let tiled = matmul_nt_24_tiled(&x, &c, 5);
+    assert_within_budget(&oracle, &tiled, &x, &w.data, 5, 16, 6, "zero groups");
+    // the all-zero row must be exactly zero on both paths
+    for i in 0..5 {
+        assert_eq!(oracle[i * 6 + 2], 0.0);
+        assert_eq!(tiled[i * 6 + 2], 0.0);
+    }
+}
+
+#[test]
+fn tiled_kernels_are_deterministic() {
+    let mut rng = Rng::seed_from_u64(104);
+    let (n, k, m) = (19, 72, 11);
+    let x = rand_vec(&mut rng, n * k);
+    let w = rand_vec(&mut rng, m * k);
+    assert_eq!(
+        matmul_nt_tiled(&x, &w, n, k, m),
+        matmul_nt_tiled(&x, &w, n, k, m)
+    );
+    let wp = pruned_24(&mut rng, 9, 24);
+    let c = compress_24(&wp).unwrap();
+    let x2 = rand_vec(&mut rng, 6 * 24);
+    assert_eq!(matmul_nt_24_tiled(&x2, &c, 6), matmul_nt_24_tiled(&x2, &c, 6));
+}
+
+fn backend() -> NativeBackend {
+    NativeBackend::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .unwrap()
+}
+
+/// `x(b, 8, d)` + block 0's nine params for `s0_block_fwd_t8`.
+fn block_inputs(rt: &dyn Backend, b: usize) -> Vec<Value> {
+    let w = load_size(rt, "s0").unwrap();
+    let d = w.cfg.d;
+    let x = Tensor::new(
+        vec![b, 8, d],
+        (0..b * 8 * d).map(|i| (i as f32 * 0.17).sin() * 0.1).collect(),
+    );
+    let mut inputs: Vec<Value> = vec![x.into()];
+    for p in w.block(0) {
+        inputs.push(p.clone().into());
+    }
+    inputs
+}
+
+#[test]
+fn oracle_policy_is_the_default_and_stays_bit_stable() {
+    let rt = backend();
+    assert_eq!(rt.kernel_policy(), KernelPolicy::Oracle);
+    let inputs = block_inputs(&rt, 2);
+    let before = rt.exec_f32("s0_block_fwd_t8", &inputs).unwrap().remove(0);
+
+    // Flip to tiled and back: the oracle result must be reproduced
+    // bit-for-bit — the policy is pure dispatch, no hidden state.
+    rt.set_kernel_policy(KernelPolicy::Tiled).unwrap();
+    let tiled = rt.exec_f32("s0_block_fwd_t8", &inputs).unwrap().remove(0);
+    rt.set_kernel_policy(KernelPolicy::Oracle).unwrap();
+    let after = rt.exec_f32("s0_block_fwd_t8", &inputs).unwrap().remove(0);
+    assert_eq!(before.data, after.data, "oracle must be bit-stable");
+
+    // The tiled forward agrees within a loose end-to-end tolerance (the
+    // per-GEMM ulp budget compounds across the block's seven GEMMs).
+    assert_eq!(before.shape, tiled.shape);
+    for (a, b) in before.data.iter().zip(&tiled.data) {
+        assert!(
+            (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+            "tiled block forward diverged: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn auto_policy_stays_oracle_below_the_mac_threshold() {
+    let rt = backend();
+    let inputs = block_inputs(&rt, 1);
+    let oracle = rt.exec_f32("s0_block_fwd_t8", &inputs).unwrap().remove(0);
+    rt.set_kernel_policy(KernelPolicy::Auto).unwrap();
+    // s0 at b=1, t=8 keeps every projection (8 rows x d=64 x ffn=176 at
+    // most) under AUTO_MIN_MACS, so Auto must resolve to the oracle
+    // kernels — bit-identical output.
+    let d = rt.manifest().sizes["s0"].d;
+    let ffn = rt.manifest().sizes["s0"].ffn;
+    assert!(8 * d * d.max(ffn) < KernelPolicy::AUTO_MIN_MACS);
+    let auto = rt.exec_f32("s0_block_fwd_t8", &inputs).unwrap().remove(0);
+    assert_eq!(oracle.data, auto.data);
+}
