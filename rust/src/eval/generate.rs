@@ -66,27 +66,55 @@ pub fn generate<'a>(
             )?
             .remove(0);
         let row = &logits.data[pos * v..pos * v + n_sample];
-
-        // temperature softmax sample
-        let inv_t = 1.0 / temperature.max(1e-3);
-        let maxv = row.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
-        let mut probs: Vec<f32> =
-            row.iter().map(|x| ((x - maxv) * inv_t).exp()).collect();
-        let z: f32 = probs.iter().sum();
-        for p in &mut probs {
-            *p /= z;
-        }
-        let mut u = rng.gen_f32();
-        let mut next = n_sample - 1;
-        for (i, p) in probs.iter().enumerate() {
-            if u < *p {
-                next = i;
-                break;
-            }
-            u -= p;
-        }
+        let next = sample_token(row, temperature, &mut rng);
         tokens.push(next as i32);
         out.push(next as u8);
     }
     Ok(String::from_utf8_lossy(&out).into_owned())
+}
+
+/// Temperature-softmax sampling of one token index from a logit row.
+///
+/// Shared by the sliding-window path above and the KV-cached decode
+/// path (`serve::generate_decoded`) — both must consume exactly one
+/// `rng.gen_f32()` per token so their streams stay aligned and the
+/// decode-parity tests can compare transcripts token-for-token.
+///
+/// Degenerate rows fall back to a NaN-safe argmax instead of producing
+/// NaN probabilities: a `+inf` logit makes the max shift compute
+/// `inf - inf = NaN`, and a row of all `-inf` (or stray NaNs) poisons
+/// the normalizer the same way — `z` goes NaN, every `u < NaN`
+/// comparison is false, and the CDF walk silently returned
+/// `row.len() - 1` regardless of the logits. When `z` is not a normal
+/// float the argmax of the raw row is the limit distribution of the
+/// softmax, so that is what we return.
+pub fn sample_token(row: &[f32], temperature: f32, rng: &mut Rng) -> usize {
+    let inv_t = 1.0 / temperature.max(1e-3);
+    let maxv = row.iter().fold(f32::NEG_INFINITY, |a, x| a.max(*x));
+    let mut probs: Vec<f32> =
+        row.iter().map(|x| ((x - maxv) * inv_t).exp()).collect();
+    let z: f32 = probs.iter().sum();
+    // Draw before branching so the rng stream is identical on both paths.
+    let mut u = rng.gen_f32();
+    if !z.is_normal() {
+        let mut best = 0;
+        for (i, x) in row.iter().enumerate() {
+            if *x > row[best] || row[best].is_nan() {
+                best = i;
+            }
+        }
+        return best;
+    }
+    for p in &mut probs {
+        *p /= z;
+    }
+    let mut next = row.len() - 1;
+    for (i, p) in probs.iter().enumerate() {
+        if u < *p {
+            next = i;
+            break;
+        }
+        u -= p;
+    }
+    next
 }

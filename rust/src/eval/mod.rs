@@ -8,7 +8,7 @@ mod generate;
 mod ppl;
 pub mod tasks;
 
-pub use generate::generate;
+pub use generate::{generate, sample_token};
 pub use ppl::{forward_hidden, perplexity, perplexity_split};
 pub use tasks::{load_tasks, run_tasks, Task, TaskResult};
 

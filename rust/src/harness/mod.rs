@@ -4,10 +4,12 @@
 
 mod experiments;
 mod runs;
+mod serving;
 mod trajectory;
 
 pub use experiments::*;
 pub use runs::{
     dense_ppl, prune_and_eval, prune_and_eval_in, PruneEval, EVAL_BATCHES,
 };
+pub use serving::{serve_trace, ServingConfig};
 pub use trajectory::{bench_trajectory, BenchConfig, DEFAULT_BENCH_SEED};

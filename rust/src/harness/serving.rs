@@ -1,0 +1,244 @@
+//! The serving harness behind `wandapp serve --trace` (DESIGN.md §14):
+//! replay a seeded synthetic many-user trace through the KV-cached
+//! decode engine *and* the sliding-window baseline, assert the two
+//! transcripts agree byte-for-byte under the oracle policy, print
+//! throughput / p50 / p99 / KV-residency for both, and — with `--json`
+//! — fold a `serving` section into the dated `BENCH_<date>.json` the
+//! bench-trajectory CI job uploads.
+//!
+//! The baseline gate mirrors the GEMM gate in [`super::trajectory`]:
+//! only the decode-vs-sliding throughput *ratio* is compared against
+//! the committed baseline (absolute tokens/s vary with the runner; the
+//! two paths share each run's noise, so their ratio is stable).
+
+use anyhow::{bail, Result};
+
+use crate::json::Json;
+use crate::model::load_size;
+use crate::runtime::{Backend, KernelPolicy};
+use crate::serve::{
+    run_trace, run_trace_sliding, seq_bytes, synthetic_trace, ServeConfig,
+    ServeReport,
+};
+use crate::sparsity::SparseModel;
+
+use super::trajectory::today_utc;
+
+/// Configuration for one `serve --trace` run (parsed from the CLI).
+pub struct ServingConfig {
+    /// Model size to serve (`s0`, `s1`, …).
+    pub size: String,
+    /// Optional pruned weight file (defaults to the pristine size).
+    pub weights: Option<String>,
+    /// Serve through the packed sparse execution engine.
+    pub sparse_exec: bool,
+    /// Shrink the trace for CI.
+    pub smoke: bool,
+    /// Requests in the trace (0 = 6 smoke / 24 full).
+    pub requests: usize,
+    /// Trace + sampling seed.
+    pub seed: u64,
+    /// KV pool budget in bytes (0 = auto: four worst-case sequences).
+    pub kv_budget_bytes: usize,
+    /// Sampling temperature.
+    pub temperature: f32,
+    /// Write / update `BENCH_<date>.json` (or `out`).
+    pub write_json: bool,
+    /// Explicit output path, overriding the dated default.
+    pub out: Option<String>,
+    /// Baseline file to gate the decode/sliding ratio against.
+    pub baseline: Option<String>,
+}
+
+fn print_report(label: &str, r: &ServeReport) {
+    println!(
+        "  {label:<8} {:>7.1} tok/s  p50 {:>7.3} ms  p99 {:>7.3} ms  \
+         kv peak {:>6.1} KiB  max batch {}",
+        r.tokens_per_sec,
+        r.p50_ms,
+        r.p99_ms,
+        r.kv_peak_bytes as f64 / 1024.0,
+        r.max_concurrent
+    );
+}
+
+fn report_json(r: &ServeReport) -> Json {
+    Json::obj(vec![
+        ("total_tokens", Json::Num(r.total_tokens as f64)),
+        ("wall_secs", Json::Num(r.wall_secs)),
+        ("tokens_per_sec", Json::Num(r.tokens_per_sec)),
+        ("p50_ms", Json::Num(r.p50_ms)),
+        ("p99_ms", Json::Num(r.p99_ms)),
+        ("kv_peak_bytes", Json::Num(r.kv_peak_bytes as f64)),
+        ("kv_budget_bytes", Json::Num(r.kv_budget_bytes as f64)),
+        ("max_concurrent", Json::Num(r.max_concurrent as f64)),
+    ])
+}
+
+/// Replay the trace on both paths, check parity, report, and gate.
+pub fn serve_trace(rt: &dyn Backend, cfg: &ServingConfig) -> Result<()> {
+    let w = match &cfg.weights {
+        Some(p) => crate::model::Weights::load(p)?,
+        None => load_size(rt, &cfg.size)?,
+    };
+    let sm = if cfg.sparse_exec {
+        Some(SparseModel::pack(&w))
+    } else {
+        None
+    };
+    let mcfg = &w.cfg;
+    let n_requests = match cfg.requests {
+        0 => {
+            if cfg.smoke {
+                6
+            } else {
+                24
+            }
+        }
+        n => n,
+    };
+    let n_gen = if cfg.smoke { 8 } else { 24 };
+    let kv_budget = if cfg.kv_budget_bytes == 0 {
+        4 * seq_bytes(mcfg.n_layers, mcfg.d, mcfg.seq)
+    } else {
+        cfg.kv_budget_bytes
+    };
+    let trace =
+        synthetic_trace(mcfg.vocab, mcfg.seq, n_requests, n_gen, cfg.seed);
+    let scfg = ServeConfig {
+        kv_budget_bytes: kv_budget,
+        max_batch: 0,
+        temperature: cfg.temperature,
+    };
+
+    println!(
+        "== serve: {} x {} tokens on {} ({}, kv budget {:.1} KiB, seed {}) ==",
+        n_requests,
+        n_gen,
+        mcfg.name,
+        if cfg.sparse_exec { "sparse-exec" } else { "dense" },
+        kv_budget as f64 / 1024.0,
+        cfg.seed
+    );
+
+    let (decode, sliding) = match &sm {
+        Some(sm) => (
+            run_trace(rt, sm, &trace, &scfg)?,
+            run_trace_sliding(rt, sm, &trace, &scfg)?,
+        ),
+        None => (
+            run_trace(rt, &w, &trace, &scfg)?,
+            run_trace_sliding(rt, &w, &trace, &scfg)?,
+        ),
+    };
+
+    // Parity wall: under the oracle policy the continuous-batching
+    // decode path must reproduce the sliding-window transcripts
+    // byte-for-byte (tiled policies reassociate reductions, so their
+    // transcripts may legitimately diverge after a near-tie sample).
+    if rt.kernel_policy() == KernelPolicy::Oracle {
+        for (a, b) in decode.outcomes.iter().zip(&sliding.outcomes) {
+            if a.id != b.id || a.tokens != b.tokens {
+                bail!(
+                    "decode parity violation on request {}: decode and \
+                     sliding-window transcripts differ under the oracle \
+                     policy",
+                    a.id
+                );
+            }
+        }
+        println!(
+            "  oracle parity: {} transcripts identical on both paths",
+            decode.outcomes.len()
+        );
+    }
+
+    print_report("decode", &decode);
+    print_report("sliding", &sliding);
+    let speedup = if sliding.tokens_per_sec > 0.0 {
+        decode.tokens_per_sec / sliding.tokens_per_sec
+    } else {
+        0.0
+    };
+    println!("  decode speedup: {speedup:.2}x over the sliding window");
+
+    if cfg.write_json || cfg.out.is_some() {
+        let path = match &cfg.out {
+            Some(p) => p.clone(),
+            None => format!("BENCH_{}.json", today_utc()),
+        };
+        write_serving_json(&path, cfg, n_requests, &decode, &sliding, speedup)?;
+        println!("  wrote serving section to {path}");
+    }
+
+    if let Some(baseline) = &cfg.baseline {
+        check_serving_baseline(speedup, baseline)?;
+    }
+    Ok(())
+}
+
+/// Insert (or replace) the `serving` section of `path`, preserving any
+/// sections the bench-trajectory run already wrote there.
+fn write_serving_json(
+    path: &str,
+    cfg: &ServingConfig,
+    n_requests: usize,
+    decode: &ServeReport,
+    sliding: &ServeReport,
+    speedup: f64,
+) -> Result<()> {
+    let serving = Json::obj(vec![
+        ("requests", Json::Num(n_requests as f64)),
+        ("trace_seed", Json::Num(cfg.seed as f64)),
+        ("smoke", Json::Bool(cfg.smoke)),
+        ("sparse_exec", Json::Bool(cfg.sparse_exec)),
+        ("decode", report_json(decode)),
+        ("sliding", report_json(sliding)),
+        ("decode_speedup", Json::Num(speedup)),
+    ]);
+    let mut doc = match std::fs::read_to_string(path) {
+        Ok(text) => Json::parse(&text)?,
+        Err(_) => Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("date", Json::str(&today_utc())),
+        ]),
+    };
+    match &mut doc {
+        Json::Obj(m) => {
+            m.insert("serving".to_string(), serving);
+        }
+        _ => bail!("{path}: existing bench JSON is not an object"),
+    }
+    std::fs::write(path, doc.write() + "\n")?;
+    Ok(())
+}
+
+/// Gate the decode/sliding throughput ratio against a committed
+/// baseline, mirroring the GEMM ratio gate. A baseline without a
+/// `serving` section skips the gate (older baselines stay valid).
+fn check_serving_baseline(speedup: f64, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let base = Json::parse(&text)?;
+    let Some(serving) = base.opt("serving") else {
+        println!("  baseline {path} has no serving section; gate skipped");
+        return Ok(());
+    };
+    let want = serving.get("decode_speedup")?.as_f64()?;
+    let max_pct = match base.opt("max_regression_pct") {
+        Some(v) => v.as_f64()?,
+        None => 20.0,
+    };
+    let floor = want * (1.0 - max_pct / 100.0);
+    if speedup < floor {
+        bail!(
+            "serving throughput regressed vs {path}: decode speedup \
+             {speedup:.3}x < floor {floor:.3}x (baseline {want:.3}x - \
+             {max_pct}%)"
+        );
+    }
+    println!(
+        "  baseline ok: decode speedup {speedup:.2}x within {max_pct}% of \
+         {path} ({want:.2}x)"
+    );
+    Ok(())
+}

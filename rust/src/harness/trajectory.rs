@@ -206,8 +206,9 @@ fn check_baseline(rows: &[GemmMeasurement], path: &str) -> Result<()> {
 }
 
 /// Today's UTC date as `YYYY-MM-DD`, from the system clock — no chrono
-/// in the vendored dependency closure.
-fn today_utc() -> String {
+/// in the vendored dependency closure. Shared with the serving harness
+/// so both append to the same dated `BENCH_<date>.json`.
+pub(crate) fn today_utc() -> String {
     let days = SystemTime::now()
         .duration_since(UNIX_EPOCH)
         .map(|d| (d.as_secs() / 86_400) as i64)

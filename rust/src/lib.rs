@@ -36,6 +36,10 @@
 //!   [`coordinator::PruneSession`] that shares one calibration build
 //!   across many method runs.
 //! - [`eval`] — perplexity + the zero-shot likelihood-ranking task suite.
+//! - [`serve`] — the KV-cached decode engine: paged per-sequence caches
+//!   under a byte budget, incremental `block_decode` through the
+//!   backend trait, and a continuous-batching scheduler with trace
+//!   replay (`wandapp serve --trace`; DESIGN.md §14).
 //! - [`latency`] — roofline latency simulator for the 2:4 deployment
 //!   tables, plus measured dense-vs-sparse kernel timings
 //!   ([`latency::measured`], `wandapp latency --measured`).
@@ -54,6 +58,7 @@ pub mod model;
 pub mod pruner;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod sparsity;
 pub mod tensor;
 

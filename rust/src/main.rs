@@ -1,4 +1,4 @@
-//! wandapp CLI: prune / eval / tasks / repro / latency / profile.
+//! wandapp CLI: prune / eval / tasks / repro / latency / serve / profile.
 //!
 //! The leader entrypoint for the Wanda++ reproduction. All compute goes
 //! through a [`wandapp::runtime::Backend`]: the pure-Rust native backend
@@ -60,8 +60,19 @@ COMMANDS
            --out FILE); --baseline gates the tiled/oracle throughput
            ratios against a committed BENCH_baseline.json.
   generate --size s2 [--weights FILE] [--prompt STR] [--tokens 200]
-           [--temp 0.8] [--sparse-exec]
-           Sample text from a (pruned) model.
+           [--temp 0.8] [--sparse-exec] [--decode]
+           Sample text from a (pruned) model. --decode generates through
+           the KV-cached decode engine (bit-identical to the sliding
+           window under the oracle policy, O(ctx) cheaper per token).
+  serve    --trace [--size s0] [--weights FILE] [--sparse-exec] [--smoke]
+           [--requests N] [--kv-budget-kib N] [--temp 0.8] [--seed 7]
+           [--json] [--out FILE] [--baseline FILE]
+           Replay a seeded synthetic many-user trace through the
+           KV-cached continuous-batching engine and the sliding-window
+           baseline; report throughput / p50 / p99 / KV residency and
+           (oracle policy) assert the transcripts match byte-for-byte.
+           --json folds a `serving` section into BENCH_<date>.json;
+           --baseline gates the decode/sliding throughput ratio.
   inspect  --weights FILE [--fmt fp16|f32]
            Per-layer sparsity + 2:4 compressed-size report of a pruned model.
   profile  [--size s0]  Execution profile of a short Wanda++ run.
@@ -74,8 +85,10 @@ PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
 /// Valueless switches: `--sparse-exec`, `--measured`, `--smoke`,
-/// `--json` take no argument (everything else is a `--key value` pair).
-const BOOL_FLAGS: [&str; 4] = ["sparse-exec", "measured", "smoke", "json"];
+/// `--json`, `--trace`, `--decode` take no argument (everything else is
+/// a `--key value` pair).
+const BOOL_FLAGS: [&str; 6] =
+    ["sparse-exec", "measured", "smoke", "json", "trace", "decode"];
 
 /// Tiny flag parser: positional args + `--key value` pairs + boolean
 /// switches.
@@ -312,13 +325,45 @@ fn main() -> Result<()> {
             let n = args.get_parse("tokens", 200)?;
             let temp = args.get_parse("temp", 0.8f32)?;
             let seed = args.get_parse("seed", 0u64)?;
+            let decode = args.has("decode");
             let text = if args.has("sparse-exec") {
                 let sm = wandapp::sparsity::SparseModel::pack(&w);
-                wandapp::eval::generate(rt, &sm, &prompt, n, temp, seed)?
+                if decode {
+                    wandapp::serve::generate_decoded(
+                        rt, &sm, &prompt, n, temp, seed,
+                    )?
+                } else {
+                    wandapp::eval::generate(rt, &sm, &prompt, n, temp, seed)?
+                }
+            } else if decode {
+                wandapp::serve::generate_decoded(rt, &w, &prompt, n, temp, seed)?
             } else {
                 wandapp::eval::generate(rt, &w, &prompt, n, temp, seed)?
             };
             println!("{prompt}{text}");
+        }
+        "serve" => {
+            if !args.has("trace") {
+                bail!(
+                    "serve needs --trace (the synthetic trace replay is \
+                     the only serving mode)"
+                );
+            }
+            let cfg = harness::ServingConfig {
+                size: args.get("size", "s0"),
+                weights: args.get_opt("weights"),
+                sparse_exec: args.has("sparse-exec"),
+                smoke: args.has("smoke"),
+                requests: args.get_parse("requests", 0usize)?,
+                seed: args.get_parse("seed", harness::DEFAULT_BENCH_SEED)?,
+                kv_budget_bytes: args.get_parse("kv-budget-kib", 0usize)?
+                    * 1024,
+                temperature: args.get_parse("temp", 0.8f32)?,
+                write_json: args.has("json"),
+                out: args.get_opt("out"),
+                baseline: args.get_opt("baseline"),
+            };
+            harness::serve_trace(rt, &cfg)?;
         }
         "inspect" => {
             let w = match args.get_opt("weights") {

@@ -40,8 +40,22 @@ use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
+use crate::serve::kv::KvLayer;
 use crate::sparsity::SparseBlock;
 use crate::tensor::{Tensor, Value, ValueView};
+
+/// Which weight representation a decode-path call runs on: the dense
+/// block parameter tensors (canonical 9-tensor order) or a packed
+/// [`SparseBlock`]. One enum so the serving engine drives both paths
+/// through a single [`Backend::block_prefill`] / [`Backend::block_decode`]
+/// pair (DESIGN.md §14).
+#[derive(Clone, Copy)]
+pub enum DecodeBlock<'a> {
+    /// Dense: the block's nine parameter tensors in canonical order.
+    Dense(&'a [Tensor]),
+    /// Sparse-exec: packed 2:4 / CSR projections (DESIGN.md §12).
+    Sparse(&'a SparseBlock),
+}
 
 /// Which GEMM implementation the forward-path kernels run on
 /// (DESIGN.md §13).
@@ -199,6 +213,49 @@ pub trait Backend {
             inputs.push(t.into());
         }
         Ok(self.exec_fv(key, &inputs)?.remove(0))
+    }
+
+    /// Prefill: forward a `(1, p, d)` prompt window through one decoder
+    /// block, populating the (empty) per-layer KV cache `kv` with the
+    /// window's post-RoPE keys and projected values (DESIGN.md §14).
+    /// `key` is the same `{size}_block_fwd_t{t}` manifest key as the
+    /// full forward; `p` may be any length in `1..=t`.
+    ///
+    /// Backends without KV-cached decode kernels report a clean error —
+    /// the serving engine requires the native backend.
+    fn block_prefill(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kv: &mut KvLayer,
+    ) -> Result<Tensor> {
+        let _ = (key, x, blk, kv);
+        Err(anyhow!(
+            "the {} backend has no KV-cached decode kernels \
+             (use --backend native)",
+            self.name()
+        ))
+    }
+
+    /// Decode: forward **one new position** (`x` of shape `(1, 1, d)`)
+    /// through one decoder block against the cached positions in `kv`,
+    /// appending the new position's K/V rows to the cache
+    /// (DESIGN.md §14). Bit-identical to row `kv.len()` of the full
+    /// forward under the oracle policy.
+    fn block_decode(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kv: &mut KvLayer,
+    ) -> Result<Tensor> {
+        let _ = (key, x, blk, kv);
+        Err(anyhow!(
+            "the {} backend has no KV-cached decode kernels \
+             (use --backend native)",
+            self.name()
+        ))
     }
 }
 

@@ -170,7 +170,22 @@ pub fn block_forward_policy(
     policy: KernelPolicy,
 ) -> (Vec<f32>, BlockCache) {
     let (d, f) = (dims.d, dims.ffn);
-    block_forward_with(x, w.ln1, w.ln2, dims, |pi, input| {
+    block_forward_with(x, w.ln1, w.ln2, dims, dense_projector(w, d, f, policy))
+}
+
+/// The dense projection dispatcher shared by the full forward
+/// ([`block_forward_policy`]) and the incremental decode
+/// (`block_decode_with` via the native backend): `proj(prunable_idx,
+/// input) -> rows @ w^T` with each GEMM routed through `policy`. Row
+/// counts come from `input.len()`, so the same closure serves a whole
+/// `(b*t)`-position window and a single decode row.
+pub fn dense_projector<'a>(
+    w: BlockWeights<'a>,
+    d: usize,
+    f: usize,
+    policy: KernelPolicy,
+) -> impl Fn(usize, &[f32]) -> Vec<f32> + 'a {
+    move |pi, input| {
         // `PRUNABLE` order: wq wk wv wo wg wu wd.
         match pi {
             0 => matmul_nt_policy(policy, input, w.wq, input.len() / d, d, d),
@@ -181,7 +196,7 @@ pub fn block_forward_policy(
             5 => matmul_nt_policy(policy, input, w.wu, input.len() / d, d, f),
             _ => matmul_nt_policy(policy, input, w.wd, input.len() / f, f, d),
         }
-    })
+    }
 }
 
 /// Forward one decoder block with the seven prunable projections supplied
@@ -268,6 +283,172 @@ where
         y,
         BlockCache { r1, xn, q, k, v, probs, attn, x2, r2, xm, gpre, up },
     )
+}
+
+/// Read-only view of one layer's paged KV cache for the decode kernel:
+/// `len` cached positions of `d` floats each, `page_rows` rows per page.
+/// Borrowed page slices keep this module free of any dependency on the
+/// serving layer's storage (`serve::kv` builds the view).
+pub struct KvView<'a> {
+    /// Post-RoPE key pages, row-major `page_rows * d` floats each.
+    pub k_pages: &'a [&'a [f32]],
+    /// Value pages, same layout.
+    pub v_pages: &'a [&'a [f32]],
+    /// Rows per page.
+    pub page_rows: usize,
+    /// Cached positions (`<=` total page capacity).
+    pub len: usize,
+    /// Floats per row (the model hidden size).
+    pub d: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Key row of cached position `j`.
+    pub fn k_row(&self, j: usize) -> &'a [f32] {
+        let (pg, slot) = (j / self.page_rows, j % self.page_rows);
+        &self.k_pages[pg][slot * self.d..(slot + 1) * self.d]
+    }
+
+    /// Value row of cached position `j`.
+    pub fn v_row(&self, j: usize) -> &'a [f32] {
+        let (pg, slot) = (j / self.page_rows, j % self.page_rows);
+        &self.v_pages[pg][slot * self.d..(slot + 1) * self.d]
+    }
+}
+
+/// Output of one incremental decode step: the block output row plus the
+/// new position's key (post-RoPE) and value rows for the caller to
+/// append to its cache.
+pub struct DecodeOut {
+    /// Block output for the new position, `d` floats.
+    pub y: Vec<f32>,
+    /// Post-RoPE key row, `(h, head_dim)` flattened to `d` floats.
+    pub k: Vec<f32>,
+    /// Value row, same layout.
+    pub v: Vec<f32>,
+}
+
+/// RoPE rotation of one `(h, hd)` row at absolute position `time` —
+/// the same `10000^(-i/half)` angle expressions as [`rope_tables`] +
+/// `apply_rope`, evaluated for a single position, so the rotated row is
+/// bit-identical to the full-window path's row at that position.
+fn rope_rotate_row(row: &mut [f32], time: usize, h: usize, hd: usize) {
+    let half = hd / 2;
+    for head in 0..h {
+        let base = head * hd;
+        for i in 0..half {
+            let freq = (10000.0f32).powf(-(i as f32) / half as f32);
+            let ang = time as f32 * freq;
+            let c = ang.cos();
+            let s = ang.sin();
+            let x1 = row[base + i];
+            let x2 = row[base + half + i];
+            row[base + i] = x1 * c - x2 * s;
+            row[base + half + i] = x1 * s + x2 * c;
+        }
+    }
+}
+
+/// Incremental decode: forward **one new position** through a decoder
+/// block against `kv.len` cached positions, with the seven prunable
+/// projections supplied by the same `proj` contract as
+/// [`block_forward_with`] (the dense path passes [`dense_projector`],
+/// the sparse engine its packed dispatcher — one decode kernel, both
+/// representations).
+///
+/// Bit-exactness (DESIGN.md §14): every op mirrors the full forward's
+/// accumulation order for row `i = kv.len` of a `(1, kv.len + 1)`
+/// window — per-row ascending-k GEMV reductions, per-position RMSNorm
+/// and RoPE, scores accumulated `j`-ascending with `softmax_inplace`
+/// over `[..i + 1]`, and the value sum `j`-ascending from `0.0`. Since
+/// causality makes row `i` of the full forward depend only on positions
+/// `<= i`, and cached K/V rows are themselves produced by this same op
+/// order (prefill harvests `BlockCache.k/.v`), the decoded hidden state
+/// is bit-identical to the full-window forward by induction over
+/// positions and layers — under the oracle policy; tiled projections
+/// carry the usual ulp budget instead.
+///
+/// `x` is the new position's block input (`d` floats). The new
+/// position's K/V are returned, not appended — the caller owns the
+/// cache. `dims.b` / `dims.t` are not read; `d`, `h`, `ffn` are.
+pub fn block_decode_with<F>(
+    x: &[f32],
+    ln1: &[f32],
+    ln2: &[f32],
+    kv: &KvView,
+    dims: Dims,
+    proj: F,
+) -> DecodeOut
+where
+    F: Fn(usize, &[f32]) -> Vec<f32>,
+{
+    let (d, h) = (dims.d, dims.h);
+    let hd = dims.head_dim();
+    let pos = kv.len;
+
+    let (xn, _r1) = rmsnorm(x, ln1, d);
+    let mut q = proj(0, &xn);
+    let mut k = proj(1, &xn);
+    let v = proj(2, &xn);
+    rope_rotate_row(&mut q, pos, h, hd);
+    rope_rotate_row(&mut k, pos, h, hd);
+
+    // Causal attention for the single query row i = pos: scores over the
+    // cached rows then the fresh row, softmax over all pos + 1 entries,
+    // value accumulation j-ascending — the full forward's inner loop
+    // with `i` pinned.
+    let inv_s = 1.0 / (hd as f32).sqrt();
+    let mut attn = vec![0.0f32; d];
+    let mut row = vec![0.0f32; pos + 1];
+    for head in 0..h {
+        let base = head * hd;
+        let qi = &q[base..base + hd];
+        for (j, rv) in row.iter_mut().enumerate() {
+            let kj = if j < pos {
+                &kv.k_row(j)[base..base + hd]
+            } else {
+                &k[base..base + hd]
+            };
+            let mut dot = 0.0f32;
+            for c in 0..hd {
+                dot += qi[c] * kj[c];
+            }
+            *rv = dot * inv_s;
+        }
+        softmax_inplace(&mut row);
+        for (j, p) in row.iter().enumerate() {
+            let vj = if j < pos {
+                &kv.v_row(j)[base..base + hd]
+            } else {
+                &v[base..base + hd]
+            };
+            for c in 0..hd {
+                attn[base + c] += p * vj[c];
+            }
+        }
+    }
+
+    let o = proj(3, &attn);
+    let mut x2 = x.to_vec();
+    for (a, b) in x2.iter_mut().zip(&o) {
+        *a += b;
+    }
+
+    let (xm, _r2) = rmsnorm(&x2, ln2, d);
+    let gpre = proj(4, &xm);
+    let up = proj(5, &xm);
+    let act: Vec<f32> = gpre
+        .iter()
+        .zip(&up)
+        .map(|(g, u)| silu(*g) * u)
+        .collect();
+    let down = proj(6, &act);
+    let mut y = x2;
+    for (a, b) in y.iter_mut().zip(&down) {
+        *a += b;
+    }
+
+    DecodeOut { y, k, v }
 }
 
 /// Gradients of a scalar loss w.r.t. the nine block parameters (canonical

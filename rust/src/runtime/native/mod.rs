@@ -24,13 +24,17 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::runtime::{Backend, ExecStats, KernelPolicy, Manifest, SizeInfo};
+use crate::runtime::{
+    Backend, DecodeBlock, ExecStats, KernelPolicy, Manifest, SizeInfo,
+};
+use crate::serve::kv::KvLayer;
 use crate::sparsity::{nm_mask_native, SparseBlock};
 use crate::tensor::{Tensor, TensorI32, Value, ValueView};
 
 use block::{
-    block_backward, block_forward, block_forward_policy, site_grams,
-    site_squares, site_sums, BlockWeights, Dims,
+    block_backward, block_decode_with, block_forward, block_forward_policy,
+    dense_projector, site_grams, site_squares, site_sums, BlockWeights, Dims,
+    KvView,
 };
 use math::{par_map, rmsprop_update};
 
@@ -837,6 +841,21 @@ impl NativeBackend {
             _ => unreachable!("lora() only handles lora kernels"),
         }
     }
+
+    /// Resolve a `{size}_block_fwd_t{t}` key for the decode path:
+    /// returns the size info and the context length `t`.
+    fn decode_key(&self, key: &str) -> Result<(&SizeInfo, usize)> {
+        let (_, info, kernel) = self
+            .split_key(key)
+            .ok_or_else(|| anyhow!("unknown kernel key `{key}`"))?;
+        let Some(Kernel::BlockFwd(t)) = Self::parse_kernel(kernel) else {
+            bail!("{key}: the decode path expects a block_fwd key");
+        };
+        if !self.supports(key) {
+            return Err(anyhow!("native backend does not support `{key}`"));
+        }
+        Ok((info, t))
+    }
 }
 
 impl Backend for NativeBackend {
@@ -957,6 +976,125 @@ impl Backend for NativeBackend {
             .borrow_mut()
             .record_exec(&format!("{key}#sparse"), t0.elapsed().as_secs_f64());
         Ok(Tensor::new(x.shape.clone(), y))
+    }
+
+    /// Prefill: one full forward over the `(1, p, d)` prompt window via
+    /// the shared block core, harvesting the forward cache's post-RoPE
+    /// K and projected V rows into `kv` (DESIGN.md §14). Row `p - 1` of
+    /// the output is bit-identical to the last decode-path row because
+    /// it *is* the full forward.
+    fn block_prefill(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kv: &mut KvLayer,
+    ) -> Result<Tensor> {
+        let (info, t) = self.decode_key(key)?;
+        if x.shape.len() != 3 || x.shape[0] != 1 || x.shape[2] != info.d {
+            bail!("{key}: prefill x expects [1, p, {}], got {:?}", info.d, x.shape);
+        }
+        let p = x.shape[1];
+        if p == 0 || p > t {
+            bail!("{key}: prefill window of {p} positions outside 1..={t}");
+        }
+        if !kv.is_empty() {
+            bail!("{key}: prefill expects an empty KV cache, found {} positions", kv.len());
+        }
+        let dims = Dims { b: 1, t: p, d: info.d, h: info.n_heads, ffn: info.ffn };
+        let t0 = Instant::now();
+        let (y, cache) = match blk {
+            DecodeBlock::Dense(params) => {
+                let bp: Vec<&[f32]> =
+                    params.iter().map(|w| w.data.as_slice()).collect();
+                Self::check_block_params(key, info, &bp)?;
+                let w = BlockWeights::from_slices(&bp);
+                block_forward_policy(&x.data, w, dims, self.policy.get())
+            }
+            DecodeBlock::Sparse(sb) => {
+                sb.check_dims(info.d, info.ffn)?;
+                sparse::sparse_block_forward_cached(
+                    &x.data,
+                    sb,
+                    dims,
+                    self.policy.get(),
+                )
+            }
+        };
+        kv.append(&cache.k, &cache.v, p)?;
+        self.stats
+            .borrow_mut()
+            .record_exec(&format!("{key}#prefill"), t0.elapsed().as_secs_f64());
+        Ok(Tensor::new(x.shape.clone(), y))
+    }
+
+    /// Decode: one new position against the cached K/V via
+    /// `block_decode_with` — the full forward's inner loop with the row
+    /// index pinned (DESIGN.md §14), dense and sparse through the same
+    /// projection-generic kernel.
+    fn block_decode(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kv: &mut KvLayer,
+    ) -> Result<Tensor> {
+        let (info, t) = self.decode_key(key)?;
+        if x.shape != [1, 1, info.d] {
+            bail!("{key}: decode x expects [1, 1, {}], got {:?}", info.d, x.shape);
+        }
+        let pos = kv.len();
+        if pos + 1 > t {
+            bail!(
+                "{key}: KV cache full at {pos} positions (ctx {t}); \
+                 clear and re-prefill the shifted window"
+            );
+        }
+        let dims =
+            Dims { b: 1, t, d: info.d, h: info.n_heads, ffn: info.ffn };
+        let t0 = Instant::now();
+        let out = {
+            let (kp, vp) = kv.pages();
+            let view = KvView {
+                k_pages: &kp,
+                v_pages: &vp,
+                page_rows: kv.page_rows(),
+                len: pos,
+                d: info.d,
+            };
+            match blk {
+                DecodeBlock::Dense(params) => {
+                    let bp: Vec<&[f32]> =
+                        params.iter().map(|w| w.data.as_slice()).collect();
+                    Self::check_block_params(key, info, &bp)?;
+                    let w = BlockWeights::from_slices(&bp);
+                    block_decode_with(
+                        &x.data,
+                        bp[0],
+                        bp[5],
+                        &view,
+                        dims,
+                        dense_projector(w, info.d, info.ffn, self.policy.get()),
+                    )
+                }
+                DecodeBlock::Sparse(sb) => {
+                    sb.check_dims(info.d, info.ffn)?;
+                    block_decode_with(
+                        &x.data,
+                        &sb.ln1.data,
+                        &sb.ln2.data,
+                        &view,
+                        dims,
+                        sparse::sparse_projector(sb, self.policy.get()),
+                    )
+                }
+            }
+        };
+        kv.append(&out.k, &out.v, 1)?;
+        self.stats
+            .borrow_mut()
+            .record_exec(&format!("{key}#decode"), t0.elapsed().as_secs_f64());
+        Ok(Tensor::new(vec![1, 1, info.d], out.y))
     }
 }
 

@@ -117,20 +117,43 @@ pub fn sparse_block_forward_policy(
     dims: Dims,
     policy: KernelPolicy,
 ) -> Vec<f32> {
-    let (y, _) = block_forward_with(
+    sparse_block_forward_cached(x, blk, dims, policy).0
+}
+
+/// [`sparse_block_forward_policy`] that also returns the forward's
+/// intermediate cache — the decode engine's prefill harvests the
+/// post-RoPE K and projected V rows from it (DESIGN.md §14).
+pub fn sparse_block_forward_cached(
+    x: &[f32],
+    blk: &SparseBlock,
+    dims: Dims,
+    policy: KernelPolicy,
+) -> (Vec<f32>, BlockCache) {
+    block_forward_with(
         x,
         &blk.ln1.data,
         &blk.ln2.data,
         dims,
-        |pi, input| {
-            blk.mats[pi].matmul_nt_policy(
-                input,
-                input.len() / blk.mats[pi].cols(),
-                policy,
-            )
-        },
-    );
-    y
+        sparse_projector(blk, policy),
+    )
+}
+
+/// The packed projection dispatcher shared by the full sparse forward
+/// and the incremental decode (`block_decode_with` via the native
+/// backend) — the sparse twin of `block::dense_projector`. Row counts
+/// come from `input.len()`, so one closure serves whole windows and
+/// single decode rows alike.
+pub fn sparse_projector<'a>(
+    blk: &'a SparseBlock,
+    policy: KernelPolicy,
+) -> impl Fn(usize, &[f32]) -> Vec<f32> + 'a {
+    move |pi, input| {
+        blk.mats[pi].matmul_nt_policy(
+            input,
+            input.len() / blk.mats[pi].cols(),
+            policy,
+        )
+    }
 }
 
 #[cfg(test)]

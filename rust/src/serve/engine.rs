@@ -1,0 +1,223 @@
+//! The KV-cached decode engine (DESIGN.md §14): prefill once, then one
+//! incremental `block_decode` per generated token — O(ctx) work per
+//! token instead of the sliding window's O(ctx²) re-forward. Generic
+//! over [`EvalModel`], so dense weights and the sparse execution
+//! engine's packed blocks share one engine through
+//! [`Backend::block_prefill`] / [`Backend::block_decode`].
+//!
+//! Parity contract: under [`crate::runtime::KernelPolicy::Oracle`] the
+//! sampled byte stream of [`generate_decoded`] is identical to the
+//! sliding-window [`crate::eval::generate`] on the same seed — asserted
+//! by `tests/decode_parity.rs`. Once a sequence outgrows the baked
+//! context T, RoPE re-bases every cached position, so [`DecodeEngine::step`]
+//! clears the cache and re-prefills the shifted T-token window: the
+//! decode path degrades to exactly the sliding-window forward instead
+//! of approximating it.
+
+use anyhow::{bail, Result};
+
+use crate::eval::{sample_token, EvalModel};
+use crate::rng::Rng;
+use crate::runtime::{Backend, DecodeBlock};
+use crate::serve::kv::{KvPool, SequenceKv};
+use crate::tensor::Tensor;
+
+/// One sequence's decode state: the token history, its paged KV cache
+/// and the vocab logits at the last forwarded position.
+pub struct DecodeState {
+    tokens: Vec<i32>,
+    kv: SequenceKv,
+    logits: Vec<f32>,
+}
+
+impl DecodeState {
+    /// Full-vocab logits at the last forwarded position.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// The token history (prompt plus everything fed to `step`).
+    pub fn tokens(&self) -> &[i32] {
+        &self.tokens
+    }
+
+    /// KV bytes this sequence currently holds.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.bytes()
+    }
+}
+
+/// A decode engine bound to one backend, one model and one KV pool.
+pub struct DecodeEngine<'rt, 'm> {
+    rt: &'rt dyn Backend,
+    model: EvalModel<'m>,
+    pool: KvPool,
+    fwd_key: String,
+    logits_key: String,
+}
+
+impl<'rt, 'm> DecodeEngine<'rt, 'm> {
+    /// Bind `rt` and `m`; per-sequence KV pages are drawn from `pool`.
+    pub fn new(
+        rt: &'rt dyn Backend,
+        m: impl Into<EvalModel<'m>>,
+        pool: KvPool,
+    ) -> Self {
+        let model = m.into();
+        let cfg = model.cfg();
+        let (size, t) = (&cfg.name, cfg.seq);
+        Self {
+            rt,
+            model,
+            pool,
+            fwd_key: format!("{size}_block_fwd_t{t}"),
+            logits_key: format!("{size}_logits_t{t}"),
+        }
+    }
+
+    /// The pool sequences started by this engine draw pages from.
+    pub fn pool(&self) -> &KvPool {
+        &self.pool
+    }
+
+    fn decode_block(&self, i: usize) -> DecodeBlock<'m> {
+        match self.model {
+            EvalModel::Dense(w) => DecodeBlock::Dense(w.block(i)),
+            EvalModel::Sparse(sm) => DecodeBlock::Sparse(&sm.blocks[i]),
+        }
+    }
+
+    /// Embed `window` as a `(1, len, d)` activation by direct embedding
+    /// row lookup — the same `extend_from_slice` walk as the `embed_t`
+    /// kernel, so prefill activations are bit-identical to the batched
+    /// path's row 0.
+    fn embed_window(&self, window: &[i32]) -> Result<Tensor> {
+        let cfg = self.model.cfg();
+        let (d, vocab) = (cfg.d, cfg.vocab);
+        let emb = &self.model.embed().data;
+        let mut h = Vec::with_capacity(window.len() * d);
+        for &tok in window {
+            if tok < 0 || tok >= vocab as i32 {
+                bail!("decode: token id {tok} outside vocab 0..{vocab}");
+            }
+            let o = tok as usize * d;
+            h.extend_from_slice(&emb[o..o + d]);
+        }
+        Ok(Tensor::new(vec![1, window.len(), d], h))
+    }
+
+    /// Head logits for the last row of `h`, as a full-vocab vector.
+    fn logits_at_last(&self, h: &Tensor) -> Result<Vec<f32>> {
+        let d = self.model.cfg().d;
+        let n = h.data.len();
+        let last = Tensor::new(vec![1, 1, d], h.data[n - d..].to_vec());
+        let logits = self
+            .rt
+            .exec_fv(
+                &self.logits_key,
+                &[
+                    (&last).into(),
+                    self.model.ln_f().into(),
+                    self.model.head().into(),
+                ],
+            )?
+            .remove(0);
+        Ok(logits.data.to_vec())
+    }
+
+    /// Forward the window `tokens[start..]` through the full stack,
+    /// populating the (empty) per-layer caches and the logits.
+    fn prefill(&self, st: &mut DecodeState, start: usize) -> Result<()> {
+        let window = st.tokens[start..].to_vec();
+        let mut h = self.embed_window(&window)?;
+        for i in 0..self.model.cfg().n_layers {
+            h = self.rt.block_prefill(
+                &self.fwd_key,
+                &h,
+                self.decode_block(i),
+                &mut st.kv.layers[i],
+            )?;
+        }
+        st.logits = self.logits_at_last(&h)?;
+        Ok(())
+    }
+
+    /// Admit a sequence: prefill the last `min(len, T)` prompt tokens
+    /// and return its state with the first sampling distribution ready.
+    pub fn start(&self, prompt: &[i32]) -> Result<DecodeState> {
+        if prompt.is_empty() {
+            bail!("decode: empty prompt (a sequence needs at least one token)");
+        }
+        let cfg = self.model.cfg();
+        let mut st = DecodeState {
+            tokens: prompt.to_vec(),
+            kv: SequenceKv::new(&self.pool, cfg.n_layers, cfg.d),
+            logits: Vec::new(),
+        };
+        let start = st.tokens.len().saturating_sub(cfg.seq);
+        self.prefill(&mut st, start)?;
+        Ok(st)
+    }
+
+    /// Append `tok` to the sequence and forward it one position: an
+    /// incremental `block_decode` per layer while the window fits the
+    /// baked context, a clear + re-prefill of the shifted window once
+    /// it does not (RoPE re-basing makes every cached row stale — the
+    /// re-prefill keeps the decode path *exactly* the sliding-window
+    /// forward past T).
+    pub fn step(&self, st: &mut DecodeState, tok: i32) -> Result<()> {
+        let cfg = self.model.cfg();
+        st.tokens.push(tok);
+        if st.kv.len() + 1 > cfg.seq {
+            st.kv.clear();
+            let start = st.tokens.len() - cfg.seq;
+            return self.prefill(st, start);
+        }
+        let mut h = self.embed_window(&st.tokens[st.tokens.len() - 1..])?;
+        for i in 0..cfg.n_layers {
+            h = self.rt.block_decode(
+                &self.fwd_key,
+                &h,
+                self.decode_block(i),
+                &mut st.kv.layers[i],
+            )?;
+        }
+        st.logits = self.logits_at_last(&h)?;
+        Ok(())
+    }
+}
+
+/// [`crate::eval::generate`] over the KV-cached decode path: same
+/// prompt handling, same per-token rng draw order, same byte clamp —
+/// token-identical output under the oracle policy, O(ctx) per token.
+pub fn generate_decoded<'a>(
+    rt: &dyn Backend,
+    m: impl Into<EvalModel<'a>>,
+    prompt: &str,
+    n_tokens: usize,
+    temperature: f32,
+    seed: u64,
+) -> Result<String> {
+    let m = m.into();
+    let n_sample = m.cfg().vocab.min(256);
+    let mut rng = Rng::seed_from_u64(seed);
+    let mut tokens: Vec<i32> = prompt.bytes().map(|x| x as i32).collect();
+    if tokens.is_empty() {
+        tokens.push(b'.' as i32);
+    }
+    let mut out = Vec::with_capacity(n_tokens);
+    if n_tokens == 0 {
+        return Ok(String::new());
+    }
+    let engine = DecodeEngine::new(rt, m, KvPool::unbounded());
+    let mut st = engine.start(&tokens)?;
+    for i in 0..n_tokens {
+        let next = sample_token(&st.logits()[..n_sample], temperature, &mut rng);
+        out.push(next as u8);
+        if i + 1 == n_tokens {
+            break;
+        }
+        engine.step(&mut st, next as i32)?;
+    }
+    Ok(String::from_utf8_lossy(&out).into_owned())
+}

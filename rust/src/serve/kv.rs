@@ -1,0 +1,335 @@
+//! Paged per-sequence KV cache under a bounded byte budget (DESIGN.md
+//! §14) — the storage half of the decode engine.
+//!
+//! Layout: one [`KvLayer`] per decoder block holds the post-RoPE keys
+//! and the projected values, one `d`-float row per cached position,
+//! packed into fixed-size pages of [`KV_PAGE_POSITIONS`] rows. Pages are
+//! [`TensorBuf`]s — the same `Arc`-backed copy-on-write buffers as the
+//! weight fabric (DESIGN.md §11) — so the accounting the fabric tests
+//! rely on applies here too: pages are uniquely owned, `make_mut` on
+//! them never materializes a copy, and a whole serving run leaves
+//! [`crate::tensor::deep_copied_bytes`] untouched.
+//!
+//! Budget: every page allocation and release goes through a shared
+//! [`KvPool`], which enforces a hard byte budget and tracks in-use and
+//! peak residency. The scheduler reserves worst-case bytes per sequence
+//! before admission (see [`seq_bytes`]), so with a correct scheduler the
+//! pool never rejects mid-sequence; the hard check is the backstop the
+//! property tests lean on.
+
+use std::cell::Cell;
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::TensorBuf;
+
+/// Positions per KV page. Small enough that a short chat turn wastes
+/// little (worst case `KV_PAGE_POSITIONS - 1` rows per layer per side),
+/// large enough that page bookkeeping stays off the decode hot path.
+pub const KV_PAGE_POSITIONS: usize = 16;
+
+struct PoolInner {
+    budget: usize,
+    in_use: Cell<usize>,
+    peak: Cell<usize>,
+}
+
+/// Shared byte-budget accountant for every [`KvLayer`] of every live
+/// sequence. Cloning is `O(1)` and shares the accounting (`Rc`), so the
+/// engine, the scheduler and each sequence's layers all debit one
+/// ledger.
+#[derive(Clone)]
+pub struct KvPool {
+    inner: Rc<PoolInner>,
+}
+
+impl KvPool {
+    /// A pool that admits at most `budget_bytes` of live KV pages.
+    pub fn new(budget_bytes: usize) -> Self {
+        Self {
+            inner: Rc::new(PoolInner {
+                budget: budget_bytes,
+                in_use: Cell::new(0),
+                peak: Cell::new(0),
+            }),
+        }
+    }
+
+    /// A pool with no practical budget — single-sequence decode
+    /// (`generate --decode`) where context length already bounds
+    /// residency.
+    pub fn unbounded() -> Self {
+        Self::new(usize::MAX)
+    }
+
+    /// The configured budget in bytes.
+    pub fn budget_bytes(&self) -> usize {
+        self.inner.budget
+    }
+
+    /// Bytes currently held by live pages.
+    pub fn bytes_in_use(&self) -> usize {
+        self.inner.in_use.get()
+    }
+
+    /// High-water mark of [`KvPool::bytes_in_use`] over the pool's life.
+    pub fn peak_bytes(&self) -> usize {
+        self.inner.peak.get()
+    }
+
+    fn alloc(&self, bytes: usize) -> Result<()> {
+        let next = self.inner.in_use.get().saturating_add(bytes);
+        if next > self.inner.budget {
+            bail!(
+                "KV budget exceeded: {next} bytes needed, budget is {} \
+                 (raise --kv-budget-kib or retire sequences first)",
+                self.inner.budget
+            );
+        }
+        self.inner.in_use.set(next);
+        if next > self.inner.peak.get() {
+            self.inner.peak.set(next);
+        }
+        Ok(())
+    }
+
+    fn free(&self, bytes: usize) {
+        let cur = self.inner.in_use.get();
+        self.inner.in_use.set(cur.saturating_sub(bytes));
+    }
+}
+
+/// One decoder block's cached K and V rows for one sequence, paged.
+///
+/// Rows are `width` floats (the model hidden size `d`, viewed by the
+/// decode kernel as `(h, head_dim)`). Keys are stored post-RoPE, values
+/// as projected — exactly the `BlockCache.k` / `BlockCache.v` layout of
+/// the full forward, so prefill harvests them verbatim.
+pub struct KvLayer {
+    pool: KvPool,
+    width: usize,
+    len: usize,
+    k_pages: Vec<TensorBuf>,
+    v_pages: Vec<TensorBuf>,
+}
+
+impl KvLayer {
+    /// An empty layer cache drawing pages from `pool`.
+    pub fn new(pool: &KvPool, width: usize) -> Self {
+        Self {
+            pool: pool.clone(),
+            width,
+            len: 0,
+            k_pages: Vec::new(),
+            v_pages: Vec::new(),
+        }
+    }
+
+    /// Cached positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether no position is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Floats per cached row (the model hidden size).
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Rows per page.
+    pub fn page_rows(&self) -> usize {
+        KV_PAGE_POSITIONS
+    }
+
+    /// Bytes currently held by this layer's pages (both K and V sides).
+    pub fn bytes(&self) -> usize {
+        (self.k_pages.len() + self.v_pages.len()) * self.page_bytes()
+    }
+
+    fn page_bytes(&self) -> usize {
+        KV_PAGE_POSITIONS * self.width * 4
+    }
+
+    /// Append `positions` new rows of keys and values (row-major,
+    /// `positions * width` floats each), allocating pages from the pool
+    /// as needed. Fails — leaving earlier rows cached — when a page
+    /// allocation would exceed the pool budget.
+    pub fn append(&mut self, k: &[f32], v: &[f32], positions: usize) -> Result<()> {
+        if k.len() != positions * self.width || v.len() != positions * self.width {
+            bail!(
+                "KvLayer::append: {positions} positions of width {} expect \
+                 {} floats per side, got k={} v={}",
+                self.width,
+                positions * self.width,
+                k.len(),
+                v.len()
+            );
+        }
+        for r in 0..positions {
+            let slot = self.len % KV_PAGE_POSITIONS;
+            if slot == 0 {
+                // Both sides grow in lockstep: one admission check covers
+                // the K and the V page.
+                self.pool.alloc(2 * self.page_bytes())?;
+                let blank = vec![0.0f32; KV_PAGE_POSITIONS * self.width];
+                self.k_pages.push(TensorBuf::from_vec(blank.clone()));
+                self.v_pages.push(TensorBuf::from_vec(blank));
+            }
+            let (lo, hi) = (slot * self.width, (slot + 1) * self.width);
+            let (rlo, rhi) = (r * self.width, (r + 1) * self.width);
+            // Pages are uniquely owned, so make_mut never deep-copies
+            // (asserted by the serving property tests via
+            // `deep_copied_bytes`).
+            self.k_pages.last_mut().unwrap().make_mut()[lo..hi]
+                .copy_from_slice(&k[rlo..rhi]);
+            self.v_pages.last_mut().unwrap().make_mut()[lo..hi]
+                .copy_from_slice(&v[rlo..rhi]);
+            self.len += 1;
+        }
+        Ok(())
+    }
+
+    /// Borrowed page slices `(k_pages, v_pages)` for the decode kernel's
+    /// read-only view of the cache.
+    pub fn pages(&self) -> (Vec<&[f32]>, Vec<&[f32]>) {
+        (
+            self.k_pages.iter().map(|p| p.as_slice()).collect(),
+            self.v_pages.iter().map(|p| p.as_slice()).collect(),
+        )
+    }
+
+    /// Drop every cached position, returning the pages' bytes to the
+    /// pool (the window-slide re-prefill path).
+    pub fn clear(&mut self) {
+        self.pool.free(self.bytes());
+        self.k_pages.clear();
+        self.v_pages.clear();
+        self.len = 0;
+    }
+}
+
+impl Drop for KvLayer {
+    fn drop(&mut self) {
+        self.pool.free(self.bytes());
+    }
+}
+
+/// The full per-sequence cache: one [`KvLayer`] per decoder block.
+pub struct SequenceKv {
+    /// Layer caches in block order.
+    pub layers: Vec<KvLayer>,
+}
+
+impl SequenceKv {
+    /// An empty cache for an `n_layers`-block model of hidden size
+    /// `width`, drawing pages from `pool`.
+    pub fn new(pool: &KvPool, n_layers: usize, width: usize) -> Self {
+        Self {
+            layers: (0..n_layers).map(|_| KvLayer::new(pool, width)).collect(),
+        }
+    }
+
+    /// Cached positions (every layer holds the same count).
+    pub fn len(&self) -> usize {
+        self.layers.first().map_or(0, KvLayer::len)
+    }
+
+    /// Whether no position is cached yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently held across all layers.
+    pub fn bytes(&self) -> usize {
+        self.layers.iter().map(KvLayer::bytes).sum()
+    }
+
+    /// Drop every cached position in every layer.
+    pub fn clear(&mut self) {
+        for layer in &mut self.layers {
+            layer.clear();
+        }
+    }
+}
+
+/// Worst-case pool bytes a sequence resident at `positions` cached
+/// positions occupies: per layer, K and V pages rounded up to whole
+/// pages. The scheduler's admission reservation.
+pub fn seq_bytes(n_layers: usize, width: usize, positions: usize) -> usize {
+    let pages = positions.div_ceil(KV_PAGE_POSITIONS);
+    n_layers * 2 * pages * KV_PAGE_POSITIONS * width * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_budget_is_enforced_and_peak_tracked() {
+        let width = 8;
+        let page = KV_PAGE_POSITIONS * width * 4;
+        let pool = KvPool::new(2 * page); // one K page + one V page
+        let mut layer = KvLayer::new(&pool, width);
+        let row = vec![1.0f32; width];
+        layer.append(&row, &row, 1).unwrap();
+        assert_eq!(pool.bytes_in_use(), 2 * page);
+        // the next page pair would need 4 * page total
+        let many = vec![0.5f32; KV_PAGE_POSITIONS * width];
+        assert!(layer.append(&many, &many, KV_PAGE_POSITIONS).is_err());
+        // partial progress: rows up to the failed allocation stayed
+        assert_eq!(layer.len(), KV_PAGE_POSITIONS);
+        drop(layer);
+        assert_eq!(pool.bytes_in_use(), 0);
+        assert_eq!(pool.peak_bytes(), 2 * page);
+    }
+
+    #[test]
+    fn layer_roundtrips_rows_across_pages() {
+        let width = 4;
+        let pool = KvPool::unbounded();
+        let mut layer = KvLayer::new(&pool, width);
+        let n = KV_PAGE_POSITIONS + 3; // spill into a second page
+        let k: Vec<f32> = (0..n * width).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..n * width).map(|i| -(i as f32)).collect();
+        layer.append(&k, &v, n).unwrap();
+        assert_eq!(layer.len(), n);
+        let (kp, vp) = layer.pages();
+        assert_eq!(kp.len(), 2);
+        for j in 0..n {
+            let (pg, slot) = (j / KV_PAGE_POSITIONS, j % KV_PAGE_POSITIONS);
+            let krow = &kp[pg][slot * width..(slot + 1) * width];
+            let vrow = &vp[pg][slot * width..(slot + 1) * width];
+            assert_eq!(krow, &k[j * width..(j + 1) * width]);
+            assert_eq!(vrow, &v[j * width..(j + 1) * width]);
+        }
+        layer.clear();
+        assert_eq!(pool.bytes_in_use(), 0);
+        assert!(layer.is_empty());
+    }
+
+    #[test]
+    fn seq_bytes_rounds_to_pages() {
+        let one_page_pair = 2 * KV_PAGE_POSITIONS * 8 * 4;
+        assert_eq!(seq_bytes(2, 8, 1), 2 * one_page_pair);
+        assert_eq!(seq_bytes(2, 8, KV_PAGE_POSITIONS), 2 * one_page_pair);
+        assert_eq!(
+            seq_bytes(2, 8, KV_PAGE_POSITIONS + 1),
+            2 * 2 * one_page_pair
+        );
+        assert_eq!(seq_bytes(1, 8, 0), 0);
+    }
+
+    #[test]
+    fn append_rejects_mismatched_row_counts() {
+        let pool = KvPool::unbounded();
+        let mut layer = KvLayer::new(&pool, 4);
+        let k = vec![0.0f32; 4];
+        assert!(layer.append(&k, &k, 2).is_err());
+        assert!(layer.is_empty());
+    }
+}

@@ -1,0 +1,25 @@
+//! Serving: the KV-cached decode engine and its continuous-batching
+//! scheduler (DESIGN.md §14) — ROADMAP item 1's answer to the
+//! O(ctx²)-per-token sliding-window generation loop.
+//!
+//! Three pieces:
+//! - [`kv`] — paged per-sequence K/V storage under a hard byte budget
+//!   ([`KvPool`]), built on the weight fabric's Arc/CoW `TensorBuf`s.
+//! - [`engine`] — [`DecodeEngine`]: prefill once through the shared
+//!   block core, then one incremental `block_decode` per token, dense
+//!   or sparse-exec, bit-identical to the sliding window under the
+//!   oracle policy ([`generate_decoded`]).
+//! - [`scheduler`] — [`run_trace`]: admit/retire sequences mid-batch
+//!   under the KV budget, replaying a seeded arrival trace;
+//!   [`run_trace_sliding`] is the measured baseline.
+
+pub mod engine;
+pub mod kv;
+pub mod scheduler;
+
+pub use engine::{generate_decoded, DecodeEngine, DecodeState};
+pub use kv::{seq_bytes, KvPool, SequenceKv, KV_PAGE_POSITIONS};
+pub use scheduler::{
+    run_trace, run_trace_sliding, synthetic_trace, SeqOutcome, ServeConfig,
+    ServeReport, TraceRequest,
+};

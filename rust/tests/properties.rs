@@ -442,6 +442,96 @@ fn prop_compress24_roundtrips_random_nm_masks() {
     }
 }
 
+// ---- serving scheduler invariants (DESIGN.md §14) ----
+
+/// The continuous-batching scheduler must (a) keep live KV bytes under
+/// the hard budget at every instant — the pool's high-water mark is the
+/// witness, (b) retire every admitted sequence exactly once with its
+/// full token quota, and (c) never trigger a copy-on-write deep copy:
+/// KV pages are uniquely owned, so serving leaves the weight fabric's
+/// `deep_copied_bytes` counter untouched.
+#[test]
+fn prop_serve_respects_budget_and_retires_exactly_once() {
+    use wandapp::serve::{run_trace, seq_bytes, synthetic_trace, ServeConfig};
+    let rt = backend();
+    let rt = rt.as_ref();
+    let w = wandapp::model::load_size(rt, "s0").unwrap();
+    let cfg = &w.cfg;
+    let (n_req, n_gen) = (8usize, 6usize);
+    let trace = synthetic_trace(cfg.vocab, cfg.seq, n_req, n_gen, 42);
+    // Room for two worst-case sequences: forces queueing under load.
+    let budget = 2 * seq_bytes(cfg.n_layers, cfg.d, cfg.seq);
+    let scfg = ServeConfig {
+        kv_budget_bytes: budget,
+        max_batch: 0,
+        temperature: 0.8,
+    };
+    let cow_before = wandapp::tensor::deep_copied_bytes();
+    let report = run_trace(rt, &w, &trace, &scfg).unwrap();
+    assert_eq!(
+        wandapp::tensor::deep_copied_bytes(),
+        cow_before,
+        "serving must never deep-copy a CoW buffer"
+    );
+    assert!(report.kv_peak_bytes > 0);
+    assert!(
+        report.kv_peak_bytes <= budget,
+        "peak {} exceeds budget {budget}",
+        report.kv_peak_bytes
+    );
+    let ids: Vec<usize> = report.outcomes.iter().map(|o| o.id).collect();
+    assert_eq!(ids, (0..n_req).collect::<Vec<_>>(), "each id exactly once");
+    for o in &report.outcomes {
+        assert_eq!(o.tokens.len(), n_gen, "request {} token quota", o.id);
+        assert_eq!(o.token_latencies_ms.len(), n_gen);
+    }
+    assert_eq!(report.total_tokens, n_req * n_gen);
+    assert!(report.max_concurrent >= 1 && report.max_concurrent <= n_req);
+}
+
+/// Per-sequence transcripts are a pure function of the request: the
+/// same trace replayed under different batch caps and KV budgets —
+/// hence different admission interleavings — must produce identical
+/// per-id token streams, all equal to the sequential sliding-window
+/// baseline (oracle policy).
+#[test]
+fn prop_serve_transcripts_independent_of_interleaving() {
+    use wandapp::serve::{
+        run_trace, run_trace_sliding, seq_bytes, synthetic_trace, ServeConfig,
+    };
+    let rt = backend();
+    let rt = rt.as_ref();
+    let w = wandapp::model::load_size(rt, "s0").unwrap();
+    let cfg = &w.cfg;
+    let trace = synthetic_trace(cfg.vocab, cfg.seq, 6, 5, 77);
+    let seq_max = seq_bytes(cfg.n_layers, cfg.d, cfg.seq);
+    let mk = |budget: usize, max_batch: usize| ServeConfig {
+        kv_budget_bytes: budget,
+        max_batch,
+        temperature: 0.8,
+    };
+    let reference =
+        run_trace_sliding(rt, &w, &trace, &mk(64 * seq_max, 0)).unwrap();
+    for scfg in [
+        mk(64 * seq_max, 0), // everything batches at once
+        mk(64 * seq_max, 1), // strictly sequential admission
+        mk(64 * seq_max, 2),
+        mk(2 * seq_max, 0), // budget-throttled admission
+    ] {
+        let r = run_trace(rt, &w, &trace, &scfg).unwrap();
+        assert_eq!(r.outcomes.len(), reference.outcomes.len());
+        for (a, b) in r.outcomes.iter().zip(&reference.outcomes) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "request {} transcript depends on batch-mates \
+                 (max_batch {}, budget {})",
+                a.id, scfg.max_batch, scfg.kv_budget_bytes
+            );
+        }
+    }
+}
+
 #[test]
 fn prop_row_compression_roundtrips_any_mask() {
     use wandapp::sparsity::compress::{compress_rows, decompress_rows};
