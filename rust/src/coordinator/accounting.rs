@@ -142,6 +142,47 @@ impl PruneReport {
         }
     }
 
+    /// Serialize the full report into `out` through the zero-alloc
+    /// streaming writer (no intermediate `Json` tree; ROADMAP item 3).
+    /// The parse side stays on `Json::parse`, which round-trips this.
+    pub fn write_json<W: std::io::Write>(&self, out: W) -> crate::Result<W> {
+        let mut j = crate::json::JsonStream::new(out);
+        j.begin_obj()?;
+        j.str_field("method", &self.method)?;
+        j.str_field("pattern", &self.pattern)?;
+        j.str_field("model", &self.model)?;
+        j.num_field("secs", self.secs)?;
+        j.num_field("final_sparsity", self.final_sparsity)?;
+        j.num_field("bytes_deep_copied", self.bytes_deep_copied as f64)?;
+        j.key("memory")?;
+        j.begin_obj()?;
+        j.num_field("calibration", self.memory.calibration as f64)?;
+        j.num_field("block_peak", self.memory.block_peak as f64)?;
+        j.num_field("hessians", self.memory.hessians as f64)?;
+        j.num_field("full_model", self.memory.full_model as f64)?;
+        j.num_field("model_resident", self.memory.model_resident as f64)?;
+        j.num_field("peak", self.memory.peak() as f64)?;
+        j.num_field("resident_peak", self.memory.resident_peak() as f64)?;
+        j.end_obj()?;
+        j.key("blocks")?;
+        j.begin_arr()?;
+        for b in &self.blocks {
+            j.begin_obj()?;
+            j.num_field("block", b.block as f64)?;
+            j.num_field("sparsity", b.sparsity)?;
+            j.key("ro_losses")?;
+            j.begin_arr()?;
+            for &l in &b.ro_losses {
+                j.num(l as f64)?;
+            }
+            j.end_arr()?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+        j.end_obj()?;
+        j.finish()
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "{} {} on {}: {:.1}s, peak {:.1} MiB resident ({:.1} MiB \
@@ -202,6 +243,45 @@ mod tests {
         r.account_block(&bp, None);
         r.account_full_model(&cfg());
         assert!(r.memory.full_model > r.memory.block_peak);
+    }
+
+    #[test]
+    fn write_json_roundtrips_through_the_parser() {
+        let mut r = PruneReport::new(
+            &PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4)),
+            &cfg(),
+        );
+        r.secs = 1.5;
+        r.final_sparsity = 0.5;
+        r.memory.model_resident = 4096;
+        r.blocks.push(BlockReport {
+            block: 0,
+            ro_losses: vec![0.5, 0.25],
+            sparsity: 0.5,
+        });
+        let buf = r.write_json(Vec::new()).unwrap();
+        let doc = crate::json::Json::parse(
+            std::str::from_utf8(&buf).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(doc.get("model").unwrap().as_str().unwrap(), "t");
+        assert_eq!(
+            doc.get("final_sparsity").unwrap().as_f64().unwrap(),
+            0.5
+        );
+        let blocks = doc.get("blocks").unwrap().as_arr().unwrap();
+        assert_eq!(blocks.len(), 1);
+        let ro = blocks[0].get("ro_losses").unwrap().as_arr().unwrap();
+        assert_eq!(ro.len(), 2);
+        assert_eq!(
+            doc.get("memory")
+                .unwrap()
+                .get("model_resident")
+                .unwrap()
+                .as_usize()
+                .unwrap(),
+            4096
+        );
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //!   [`CalibCache`] shared across runs.
 
 mod accounting;
+pub mod pipeline;
 pub mod session;
 pub mod stages;
 
@@ -32,10 +33,12 @@ use std::path::Path;
 use anyhow::{anyhow, Result};
 
 use crate::model::{
-    load_corpus, sample_windows, ModelConfig, ResidentFabric,
-    StreamingFabric, WeightStore, Weights,
+    load_corpus, sample_windows, ModelConfig, ResidentFabric, ResidentSink,
+    ResidentSource, StreamingFabric, WeightStore, Weights,
 };
-use crate::pruner::{BlockGrads, PruneOptions, ScorerRegistry};
+use crate::pruner::{
+    BlockGrads, PipelinePolicy, PruneOptions, Scorer, ScorerRegistry,
+};
 use crate::runtime::Backend;
 use crate::tensor::{Tensor, TensorI32, ValueView};
 
@@ -174,6 +177,37 @@ pub fn gblm_full_grads(
         .collect())
 }
 
+/// Prune a resident model under `opts.pipeline` — the policy dispatch
+/// shared by [`Coordinator::prune`] and [`PruneSession::run`].
+/// `Overlapped` snapshots the template with an `Arc`-bump clone for the
+/// prefetch worker (zero model bytes) while the write-back worker swaps
+/// pruned params into `w` through a [`ResidentSink`].
+pub(crate) fn run_resident(
+    rt: &dyn Backend,
+    w: &mut Weights,
+    opts: &PruneOptions,
+    scorer: &dyn Scorer,
+    chunks: stages::CalibChunks<'_>,
+    n_calib: usize,
+    full_grads: Option<&[BlockGrads]>,
+) -> Result<PruneReport> {
+    match opts.pipeline {
+        PipelinePolicy::Sequential => {
+            let mut fabric = ResidentFabric::new(w);
+            stages::run_pipeline(
+                rt, &mut fabric, opts, scorer, chunks, n_calib, full_grads,
+            )
+        }
+        PipelinePolicy::Overlapped => {
+            let source = ResidentSource::new(w.clone());
+            let sink = ResidentSink::new(w);
+            pipeline::run_overlapped(
+                rt, source, sink, opts, scorer, chunks, n_calib, full_grads,
+            )
+        }
+    }
+}
+
 impl<'rt> Coordinator<'rt> {
     pub fn new(rt: &'rt dyn Backend) -> Self {
         Self { rt }
@@ -225,10 +259,9 @@ impl<'rt> Coordinator<'rt> {
         // GBLM's full backward alone); the pipeline frees it as soon as
         // block 0's propagated stream replaces it.
         let CalibStream { xs, n, .. } = calib;
-        let mut fabric = ResidentFabric::new(w);
-        stages::run_pipeline(
+        run_resident(
             self.rt,
-            &mut fabric,
+            w,
             opts,
             scorer.as_ref(),
             stages::CalibChunks::Owned(xs),
@@ -264,31 +297,75 @@ impl<'rt> Coordinator<'rt> {
         let (input, output) = (input.as_ref(), output.as_ref());
         // Streaming truncates `output` up front — writing onto the input
         // would destroy the source before a single block is read.
-        if let (Ok(a), Ok(b)) =
-            (std::fs::canonicalize(input), std::fs::canonicalize(output))
-        {
-            if a == b {
-                return Err(anyhow!(
-                    "streaming output {output:?} is the input file — \
-                     in-place streaming would destroy the source; write \
-                     to a fresh path"
-                ));
-            }
+        if paths_collide(input, output) {
+            return Err(anyhow!(
+                "streaming output {output:?} is the input file — \
+                 in-place streaming would destroy the source; write \
+                 to a fresh path"
+            ));
         }
         let mut store = WeightStore::open(input)?;
         let cfg = store.cfg().clone();
         let embed = store.load_tensor("embed")?;
         let calib = build_calib_stream_with(self.rt, &cfg, &embed, opts)?;
         let CalibStream { xs, n, .. } = calib;
-        let mut fabric = StreamingFabric::create(store, output, Some(embed))?;
-        stages::run_pipeline(
-            self.rt,
-            &mut fabric,
-            opts,
-            scorer.as_ref(),
-            stages::CalibChunks::Owned(xs),
-            n,
-            None,
-        )
+        let fabric = StreamingFabric::create(store, output, Some(embed))?;
+        match opts.pipeline {
+            PipelinePolicy::Sequential => {
+                let mut fabric = fabric;
+                stages::run_pipeline(
+                    self.rt,
+                    &mut fabric,
+                    opts,
+                    scorer.as_ref(),
+                    stages::CalibChunks::Owned(xs),
+                    n,
+                    None,
+                )
+            }
+            PipelinePolicy::Overlapped => {
+                let (store, sink) = fabric.into_parts();
+                pipeline::run_overlapped(
+                    self.rt,
+                    store,
+                    sink,
+                    opts,
+                    scorer.as_ref(),
+                    stages::CalibChunks::Owned(xs),
+                    n,
+                    None,
+                )
+            }
+        }
+    }
+}
+
+/// Do `input` and `output` name the same file, once canonicalized? The
+/// output usually does not exist yet — then its *parent* directory is
+/// canonicalized and the file name re-attached, so a relative alias
+/// (`dir/../dir/model.bin`) or a symlinked directory resolves before the
+/// comparison instead of silently skipping it. A path that cannot be
+/// resolved at all is treated as non-colliding; the writer's own open
+/// will produce the real error.
+fn paths_collide(input: &Path, output: &Path) -> bool {
+    let Ok(a) = std::fs::canonicalize(input) else {
+        return false;
+    };
+    // Existing output: may be the input itself, a differently-spelled
+    // alias, or a symlink to it — canonicalize resolves all three.
+    if let Ok(b) = std::fs::canonicalize(output) {
+        return a == b;
+    }
+    // Fresh output: resolve the directory it will be created in.
+    let parent = match output.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    let Some(name) = output.file_name() else {
+        return false;
+    };
+    match std::fs::canonicalize(parent) {
+        Ok(dir) => dir.join(name) == a,
+        Err(_) => false,
     }
 }

@@ -1,0 +1,474 @@
+//! The overlapped pruning pipeline: channel-staged block workers that
+//! overlap prefetch IO, scoring/RO, and write-back (DESIGN.md §15;
+//! ROADMAP item 1). Selected with
+//! [`PipelinePolicy::Overlapped`](crate::pruner::PipelinePolicy)
+//! (`prune --pipeline overlap`); the sequential driver
+//! (`stages::run_pipeline`) stays the default.
+//!
+//! # Topology
+//!
+//! Three workers, three bounded (`sync_channel`) links, no orchestrator:
+//!
+//! ```text
+//!  prefetch ──blocks──▶ compute (score/RO/propagate) ──pruned──▶ write-back
+//!      │                                                             ▲
+//!      └───────────────── passthrough tail ──────────────────────────┘
+//! ```
+//!
+//! - **prefetch** (spawned): reads block `i+1` from the [`BlockSource`]
+//!   while block `i` computes; afterwards forwards the untouched tail
+//!   (blocks past `max_blocks`, `ln_f`, `head`) directly to write-back.
+//! - **compute** (the calling thread — [`Backend`] and `Scorer` need not
+//!   be `Send`): the existing stage chain via `BlockEnv::process_block`,
+//!   which also propagates the pruned calibration stream. Block `i+1`'s
+//!   stages start as soon as block `i`'s propagation finishes, without
+//!   waiting for its write-back.
+//! - **write-back** (spawned): checks pruned blocks into the
+//!   [`BlockSink`] in order, then drains the tail, then
+//!   completeness-checks the sink.
+//!
+//! # Bit-exactness
+//!
+//! `Overlapped` and `Sequential` run the *same* per-block code
+//! (`BlockEnv::process_block`) over the same per-block RNG
+//! (`stages::block_rng`, derived from `(seed, block)` alone) and the
+//! same sink accounting (`StreamSink` / `ResidentSink` back both
+//! fabrics). The schedules differ only in *when* IO happens, so output
+//! files and reports (timing aside) are byte-identical — asserted by
+//! `tests/integration.rs::overlapped_pipeline_matches_sequential_bit_exact`.
+//!
+//! # Memory
+//!
+//! Bounded channels (depth 1) cap the overlap at ~3 extra block-sized
+//! working sets versus sequential: one prefetched ahead, one in the
+//! stages, one awaiting write-back.
+
+mod workers;
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{BlockSink, BlockSource};
+use crate::pruner::{BlockGrads, PruneOptions, Scorer};
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+
+use super::accounting::PruneReport;
+use super::stages::{BlockEnv, CalibChunks};
+
+use workers::{FetchMsg, PrunedMsg, WRITEBACK_GONE};
+
+/// Per-link channel depth. One slot is enough to decouple the stages —
+/// deeper queues only widen peak residency without more overlap (the
+/// compute stage dominates; see the `pipeline` section of BENCH JSON).
+const DEPTH: usize = 1;
+
+/// Drive the stage pipeline with overlapped prefetch and write-back.
+/// Same contract as `stages::run_pipeline`, but over the split
+/// source/sink halves of a weight fabric instead of a `WeightFabric`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_overlapped<S: BlockSource, K: BlockSink>(
+    rt: &dyn Backend,
+    source: S,
+    sink: K,
+    opts: &PruneOptions,
+    scorer: &dyn Scorer,
+    mut xs0: CalibChunks<'_>,
+    n_calib: usize,
+    full_grads: Option<&[BlockGrads]>,
+) -> Result<PruneReport> {
+    let t0 = Instant::now();
+    let cfg = source.cfg().clone();
+    let env = BlockEnv::new(rt, &cfg, opts, scorer);
+
+    let mut report = PruneReport::new(opts, &cfg);
+    report.account_calibration(xs0.as_slice(), opts.recipe.ro);
+    if full_grads.is_some() {
+        report.account_full_model(&cfg);
+    }
+
+    let l = cfg.n_layers;
+    let limit = opts.max_blocks.unwrap_or(l).min(l);
+
+    let (blocks_tx, blocks_rx) = sync_channel::<FetchMsg>(DEPTH);
+    let (pruned_tx, pruned_rx) = sync_channel::<PrunedMsg>(DEPTH);
+    let (pass_tx, pass_rx) = sync_channel::<workers::PassMsg>(DEPTH);
+
+    let (compute_res, writeback_res) = thread::scope(|s| {
+        s.spawn(move || {
+            workers::prefetch_worker(source, limit, blocks_tx, pass_tx)
+        });
+        let writeback = s.spawn(move || {
+            workers::writeback_worker(sink, limit, pruned_rx, pass_rx)
+        });
+
+        let compute_res = compute_loop(
+            &env,
+            limit,
+            &mut xs0,
+            n_calib,
+            full_grads,
+            &mut report,
+            &blocks_rx,
+            &pruned_tx,
+        );
+        // Compute is done (or dead): close our endpoints so both workers
+        // unwind — the prefetcher's next send fails, the write-back
+        // worker's pruned recv disconnects — before we join.
+        drop(blocks_rx);
+        drop(pruned_tx);
+        let writeback_res = match writeback.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        };
+        (compute_res, writeback_res)
+    });
+
+    // An error's origin, not the disconnect it caused elsewhere, must
+    // surface: a compute error whose text is only the hung-up sentinel
+    // is the *echo* of a write-back failure — yield to the real cause.
+    let stats = match (compute_res, writeback_res) {
+        (Ok(()), Ok(stats)) => stats,
+        (Err(ce), Ok(_)) => return Err(ce),
+        (Ok(()), Err(we)) => return Err(we),
+        (Err(ce), Err(we)) => {
+            return Err(if ce.to_string().contains(WRITEBACK_GONE) {
+                we
+            } else {
+                ce
+            })
+        }
+    };
+    report.memory.model_resident = stats.resident_model_bytes;
+    report.bytes_deep_copied = stats.fresh_bytes;
+    report.final_sparsity = stats.final_sparsity;
+    report.secs = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+/// The compute stage, run on the caller's thread: receive prefetched
+/// blocks in order, run the stage chain, hand pruned blocks to
+/// write-back, and keep the propagated calibration stream flowing.
+#[allow(clippy::too_many_arguments)]
+fn compute_loop(
+    env: &BlockEnv<'_>,
+    limit: usize,
+    xs0: &mut CalibChunks<'_>,
+    n_calib: usize,
+    full_grads: Option<&[BlockGrads]>,
+    report: &mut PruneReport,
+    blocks_rx: &Receiver<FetchMsg>,
+    pruned_tx: &SyncSender<PrunedMsg>,
+) -> Result<()> {
+    let mut propagated: Option<Vec<Tensor>> = None;
+    for li in 0..limit {
+        let (i, bp_in) = match blocks_rx.recv() {
+            Ok(msg) => msg?,
+            // Disconnect without a delivered error = the prefetcher
+            // panicked; the scope will propagate that panic on join.
+            Err(_) => {
+                return Err(anyhow!(
+                    "prefetch worker hung up before block {li}"
+                ))
+            }
+        };
+        if i != li {
+            return Err(anyhow!(
+                "prefetch delivered block {i}, expected {li}"
+            ));
+        }
+        let xs: &[Tensor] = match propagated.as_deref() {
+            Some(p) => p,
+            None => xs0.as_slice(),
+        };
+        let out = env.process_block(
+            li,
+            xs,
+            bp_in,
+            full_grads.map(|g| &g[li]),
+            n_calib,
+            report,
+        )?;
+        pruned_tx
+            .send((li, out.bp))
+            .map_err(|_| anyhow!("{WRITEBACK_GONE} at block {li}"))?;
+        propagated = Some(out.next_xs);
+        // One-shot callers' stream will never be read again.
+        xs0.release();
+        report.blocks.push(out.block_report);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use anyhow::{anyhow, bail, Result};
+
+    use crate::coordinator::{build_calib_stream_with, CalibStream};
+    use crate::model::{
+        load_size, BlockSink, BlockSource, ModelConfig, Passthrough,
+        SinkStats, StreamSink, StreamingFabric, WeightStore, Weights,
+    };
+    use crate::pruner::{Method, PruneOptions, ScoreCtx, Scorer};
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::sparsity::Pattern;
+    use crate::tensor::Tensor;
+
+    use super::super::stages::CalibChunks;
+    use super::run_overlapped;
+
+    fn rt() -> NativeBackend {
+        NativeBackend::new(std::env::temp_dir().join("wandapp_pipe_test"))
+            .unwrap()
+    }
+
+    fn opts() -> PruneOptions {
+        let mut o = PruneOptions::new(Method::Wanda, Pattern::NofM(2, 4));
+        o.n_calib = 16;
+        o.ctx = 16;
+        o
+    }
+
+    /// Shared setup of every streaming fault test: a synthetic s0 saved
+    /// to `src`, its open store, and a built calibration stream.
+    struct Setup {
+        src: std::path::PathBuf,
+        dst: std::path::PathBuf,
+        store: WeightStore,
+        xs: Vec<Tensor>,
+        n: usize,
+        opts: PruneOptions,
+    }
+
+    fn streaming_setup(rt: &dyn Backend, tag: &str) -> Setup {
+        let dir = std::env::temp_dir();
+        let src = dir.join(format!("wandapp_pipe_{tag}_src.bin"));
+        let dst = dir.join(format!("wandapp_pipe_{tag}_dst.bin"));
+        load_size(rt, "s0").unwrap().save(&src).unwrap();
+        let mut store = WeightStore::open(&src).unwrap();
+        let opts = opts();
+        let cfg = store.cfg().clone();
+        let embed = store.load_tensor("embed").unwrap();
+        let CalibStream { xs, n, .. } =
+            build_calib_stream_with(rt, &cfg, &embed, &opts).unwrap();
+        Setup { src, dst, store, xs, n, opts }
+    }
+
+    fn split_fabric(
+        store: WeightStore,
+        dst: &std::path::Path,
+    ) -> (WeightStore, StreamSink) {
+        StreamingFabric::create(store, dst, None).unwrap().into_parts()
+    }
+
+    /// Scores like magnitude until the Nth call, then fails — lands the
+    /// failure inside the select stage of a chosen block (7 prunable
+    /// weights per block).
+    struct FailAfter {
+        calls: AtomicUsize,
+        after: usize,
+    }
+
+    impl Scorer for FailAfter {
+        fn name(&self) -> &str {
+            "fail-after"
+        }
+
+        fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+            if self.calls.fetch_add(1, Ordering::SeqCst) >= self.after {
+                bail!("synthetic scorer failure");
+            }
+            Ok(Tensor::ones(&ctx.w.shape))
+        }
+    }
+
+    /// A passthrough scorer that always succeeds (uniform scores).
+    struct UniformScorer;
+
+    impl Scorer for UniformScorer {
+        fn name(&self) -> &str {
+            "uniform"
+        }
+
+        fn score(&self, ctx: &ScoreCtx) -> Result<Tensor> {
+            Ok(Tensor::ones(&ctx.w.shape))
+        }
+    }
+
+    /// A stage worker that errors must surface the original error with
+    /// its ``stage `name` on block i`` context — not a channel-disconnect
+    /// panic or a deadlock (the test completing at all proves the
+    /// latter) — and the half-written streaming output must not parse.
+    #[test]
+    fn scorer_error_surfaces_stage_context_and_output_is_incomplete() {
+        let rt = rt();
+        let Setup { src, dst, store, xs, n, opts: o } =
+            streaming_setup(&rt, "score_err");
+        let (store, sink) = split_fabric(store, &dst);
+        // 7 prunable weights per block: fail on block 1's first score.
+        let scorer = FailAfter { calls: AtomicUsize::new(0), after: 7 };
+        let err = run_overlapped(
+            &rt,
+            store,
+            sink,
+            &o,
+            &scorer,
+            CalibChunks::Owned(xs),
+            n,
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stage `select` on block 1"), "{err}");
+        assert!(err.contains("synthetic scorer failure"), "{err}");
+        // The sink never finished: the output is detectably incomplete.
+        assert!(Weights::load(&dst).is_err());
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    /// A source that delegates to the store but fails one read.
+    struct FailingSource {
+        inner: WeightStore,
+        fail_at: usize,
+    }
+
+    impl BlockSource for FailingSource {
+        fn cfg(&self) -> &ModelConfig {
+            self.inner.cfg()
+        }
+
+        fn read_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+            if i == self.fail_at {
+                bail!("synthetic read failure");
+            }
+            self.inner.read_block(i)
+        }
+
+        fn passthrough(
+            &mut self,
+            from_block: usize,
+            emit: &mut dyn FnMut(Passthrough) -> Result<()>,
+        ) -> Result<()> {
+            self.inner.passthrough(from_block, emit)
+        }
+    }
+
+    #[test]
+    fn prefetch_error_carries_stage_context() {
+        let rt = rt();
+        let Setup { src, dst, store, xs, n, opts: o } =
+            streaming_setup(&rt, "fetch_err");
+        let (store, sink) = split_fabric(store, &dst);
+        let source = FailingSource { inner: store, fail_at: 1 };
+        let err = run_overlapped(
+            &rt,
+            source,
+            sink,
+            &o,
+            &UniformScorer,
+            CalibChunks::Owned(xs),
+            n,
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stage `prefetch` on block 1"), "{err}");
+        assert!(err.contains("synthetic read failure"), "{err}");
+        assert!(Weights::load(&dst).is_err());
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    /// A sink that delegates but fails one check-in.
+    struct FailingSink {
+        inner: StreamSink,
+        fail_at: usize,
+    }
+
+    impl BlockSink for FailingSink {
+        fn checkin_pruned(
+            &mut self,
+            i: usize,
+            bp: Vec<Tensor>,
+        ) -> Result<()> {
+            if i == self.fail_at {
+                return Err(anyhow!("synthetic write failure"));
+            }
+            self.inner.checkin_pruned(i, bp)
+        }
+
+        fn absorb_passthrough(&mut self, item: Passthrough) -> Result<()> {
+            self.inner.absorb_passthrough(item)
+        }
+
+        fn finish(&mut self) -> Result<SinkStats> {
+            self.inner.finish()
+        }
+    }
+
+    /// When write-back fails, *its* error must win over the compute
+    /// loop's hung-up echo.
+    #[test]
+    fn writeback_error_wins_over_disconnect_echo() {
+        let rt = rt();
+        let Setup { src, dst, store, xs, n, opts: o } =
+            streaming_setup(&rt, "wb_err");
+        let (store, sink) = split_fabric(store, &dst);
+        let sink = FailingSink { inner: sink, fail_at: 1 };
+        let err = run_overlapped(
+            &rt,
+            store,
+            sink,
+            &o,
+            &UniformScorer,
+            CalibChunks::Owned(xs),
+            n,
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("stage `writeback` on block 1"), "{err}");
+        assert!(err.contains("synthetic write failure"), "{err}");
+        assert!(!err.contains("hung up"), "{err}");
+        assert!(Weights::load(&dst).is_err());
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+
+    /// `max_blocks = 0` prunes nothing: the whole model passes through
+    /// the prefetch → write-back channel and the output must be complete
+    /// and identical to the source.
+    #[test]
+    fn limit_zero_passes_whole_model_through() {
+        let rt = rt();
+        let Setup { src, dst, store, xs, n, opts: mut o } =
+            streaming_setup(&rt, "limit0");
+        o.max_blocks = Some(0);
+        let (store, sink) = split_fabric(store, &dst);
+        let report = run_overlapped(
+            &rt,
+            store,
+            sink,
+            &o,
+            &UniformScorer,
+            CalibChunks::Owned(xs),
+            n,
+            None,
+        )
+        .unwrap();
+        assert!(report.blocks.is_empty());
+        let a = Weights::load(&src).unwrap();
+        let b = Weights::load(&dst).unwrap();
+        for (name, t) in a.iter() {
+            assert_eq!(t.data, b.get(name).data, "{name}");
+        }
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&dst).ok();
+    }
+}

@@ -1,0 +1,113 @@
+//! The two spawned workers of the overlapped pipeline and the
+//! block-indexed messages they exchange (DESIGN.md §15). Workers are
+//! plain functions over channel endpoints — choreography, not
+//! orchestration: each reacts to what arrives, nobody coordinates.
+//!
+//! Error discipline: a worker that fails sends (or returns) the
+//! *original* error wrapped in its ``stage `name` on block i`` context,
+//! then drops its channel endpoints. The dropped endpoints unblock every
+//! other worker, whose own send/recv failures surface only as sentinel
+//! "hung up" errors that the driver discards in favor of the real cause.
+
+use std::sync::mpsc::{Receiver, SyncSender};
+
+use anyhow::{anyhow, Result};
+
+use crate::model::{BlockSink, BlockSource, Passthrough, SinkStats};
+use crate::tensor::Tensor;
+
+/// Prefetch → compute: a block read ahead of the stage chain, or the
+/// read error that ended prefetching.
+pub(crate) type FetchMsg = Result<(usize, Vec<Tensor>)>;
+
+/// Compute → write-back: one pruned block, ready to check in.
+pub(crate) type PrunedMsg = (usize, Vec<Tensor>);
+
+/// Prefetch → write-back (bypassing compute): the canonical tail stream
+/// past the pruned prefix, or the read error that interrupted it. A
+/// dedicated channel keeps the writer's strict canonical order without
+/// interleaving hazards: the write-back worker drains it only after the
+/// last pruned block checked in.
+pub(crate) type PassMsg = Result<Passthrough>;
+
+/// Sentinel the compute loop reports when the write-back worker
+/// disappeared mid-run; the worker's own (real) error replaces it.
+pub(crate) const WRITEBACK_GONE: &str =
+    "pipeline write-back worker hung up";
+
+/// Sentinel the write-back worker reports when the compute side
+/// disappeared mid-run; compute's own (real) error replaces it.
+pub(crate) const COMPUTE_GONE: &str = "pipeline compute loop hung up";
+
+/// Read blocks `0..limit` ahead of compute, then forward the passthrough
+/// tail straight to the write-back worker.
+///
+/// All prefetch sends happen before the first passthrough send, so the
+/// write-back worker's fixed consumption order (pruned blocks, then the
+/// tail) can never deadlock against this producer.
+pub(crate) fn prefetch_worker<S: BlockSource>(
+    mut source: S,
+    limit: usize,
+    blocks_tx: SyncSender<FetchMsg>,
+    pass_tx: SyncSender<PassMsg>,
+) {
+    for i in 0..limit {
+        let msg = source
+            .read_block(i)
+            .map(|bp| (i, bp))
+            .map_err(|e| e.context(format!("stage `prefetch` on block {i}")));
+        let failed = msg.is_err();
+        if blocks_tx.send(msg).is_err() || failed {
+            // Compute hung up on a downstream error, or our own read
+            // failed and was delivered: stop. Dropping `pass_tx` on
+            // return unblocks the write-back worker's drain.
+            return;
+        }
+    }
+    drop(blocks_tx);
+    let res = source.passthrough(limit, &mut |item| {
+        pass_tx
+            .send(Ok(item))
+            .map_err(|_| anyhow!("write-back worker hung up"))
+    });
+    if let Err(e) = res {
+        // Surface tail-read errors to the write-back worker; if the send
+        // fails the worker is already gone carrying its own error.
+        let _ = pass_tx.send(Err(e.context(format!(
+            "stage `prefetch` (passthrough after block {limit})"
+        ))));
+    }
+}
+
+/// Check in exactly `limit` pruned blocks, then drain the passthrough
+/// tail, then completeness-check the sink. Returning early (on any
+/// error) leaves the sink un-finished — a streaming output file stays
+/// detectably incomplete rather than passing half-written.
+pub(crate) fn writeback_worker<K: BlockSink>(
+    mut sink: K,
+    limit: usize,
+    pruned_rx: Receiver<PrunedMsg>,
+    pass_rx: Receiver<PassMsg>,
+) -> Result<SinkStats> {
+    for expected in 0..limit {
+        let (i, bp) = pruned_rx.recv().map_err(|_| {
+            anyhow!("{COMPUTE_GONE} before block {expected} arrived")
+        })?;
+        sink.checkin_pruned(i, bp).map_err(|e| {
+            e.context(format!("stage `writeback` on block {i}"))
+        })?;
+    }
+    drop(pruned_rx);
+    loop {
+        match pass_rx.recv() {
+            Ok(Ok(item)) => sink
+                .absorb_passthrough(item)
+                .map_err(|e| e.context("stage `writeback` (passthrough)"))?,
+            Ok(Err(e)) => return Err(e),
+            // Prefetcher dropped its end: the tail stream is complete
+            // (or the prefetcher died after an already-delivered error).
+            Err(_) => break,
+        }
+    }
+    sink.finish()
+}

@@ -11,11 +11,11 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::model::{load_size, ResidentFabric, Weights};
+use crate::model::{load_size, Weights};
 use crate::pruner::{BlockGrads, PruneOptions, Scorer, ScorerRegistry};
 use crate::runtime::Backend;
 
-use super::stages::{run_pipeline, CalibChunks};
+use super::stages::CalibChunks;
 use super::{build_calib_stream, gblm_full_grads, CalibStream, PruneReport};
 
 /// What a calibration build depends on: any two runs that agree on these
@@ -258,18 +258,15 @@ impl<'rt> PruneSession<'rt> {
             None
         };
         let mut weights = self.template.clone();
-        let report = {
-            let mut fabric = ResidentFabric::new(&mut weights);
-            run_pipeline(
-                self.rt,
-                &mut fabric,
-                opts,
-                scorer.as_ref(),
-                CalibChunks::Borrowed(&calib.xs),
-                calib.n,
-                full.as_deref().map(|v| v.as_slice()),
-            )?
-        };
+        let report = super::run_resident(
+            self.rt,
+            &mut weights,
+            opts,
+            scorer.as_ref(),
+            CalibChunks::Borrowed(&calib.xs),
+            calib.n,
+            full.as_deref().map(|v| v.as_slice()),
+        )?;
         Ok(PruneOutcome { weights, report })
     }
 

@@ -501,7 +501,7 @@ pub(crate) enum CalibChunks<'a> {
 }
 
 impl CalibChunks<'_> {
-    fn as_slice(&self) -> &[Tensor] {
+    pub(crate) fn as_slice(&self) -> &[Tensor] {
         match self {
             CalibChunks::Borrowed(xs) => xs,
             CalibChunks::Owned(xs) => xs,
@@ -509,10 +509,128 @@ impl CalibChunks<'_> {
     }
 
     /// Drop an owned stream once the pipeline no longer reads it.
-    fn release(&mut self) {
+    pub(crate) fn release(&mut self) {
         if let CalibChunks::Owned(xs) = self {
             *xs = Vec::new();
         }
+    }
+}
+
+/// The RNG for one block's trip through the pipeline, derived from
+/// `(seed, block)` alone. Every block draws from its own stream, so a
+/// block's result is independent of execution order — the sequential
+/// driver and the overlapped pipeline (DESIGN.md §15) sample identical
+/// RO calibration subsets, and so stay bit-exact by construction.
+pub(crate) fn block_rng(seed: u64, block: usize) -> Rng {
+    Rng::seed_from_u64(
+        (seed ^ 0x517cc1b727220a95)
+            .wrapping_add((block as u64).wrapping_mul(0x9e3779b97f4a7c15)),
+    )
+}
+
+/// Everything one block's trip through the stage chain needs that is
+/// *not* per-block state: backend, scorer, geometry, and the compiled
+/// stage sequence. Both drivers — the sequential [`run_pipeline`] and
+/// the overlapped pipeline (`coordinator::pipeline`) — call
+/// [`BlockEnv::process_block`], so a block's computation is shared code
+/// and the bit-exactness of the two schedules holds by construction.
+pub(crate) struct BlockEnv<'a> {
+    pub rt: &'a dyn Backend,
+    pub size: String,
+    pub t: usize,
+    pub d: usize,
+    pub ffn: usize,
+    pub opts: &'a PruneOptions,
+    pub scorer: &'a dyn Scorer,
+    pub stages: Vec<Box<dyn BlockStage>>,
+}
+
+/// What [`BlockEnv::process_block`] hands back: the pruned parameters
+/// (not yet checked in), the propagated calibration stream for the next
+/// block, and the per-block report entry.
+pub(crate) struct BlockOutcome {
+    pub bp: Vec<Tensor>,
+    pub next_xs: Vec<Tensor>,
+    pub block_report: BlockReport,
+}
+
+impl<'a> BlockEnv<'a> {
+    pub(crate) fn new(
+        rt: &'a dyn Backend,
+        cfg: &crate::model::ModelConfig,
+        opts: &'a PruneOptions,
+        scorer: &'a dyn Scorer,
+    ) -> Self {
+        Self {
+            rt,
+            size: cfg.name.clone(),
+            t: opts.ctx,
+            d: cfg.d,
+            ffn: cfg.ffn,
+            opts,
+            scorer,
+            stages: stages_for(opts),
+        }
+    }
+
+    /// Run one block through the stage chain (the paper's Alg. 1 inner
+    /// loop): stages over a fresh [`StageCtx`], achieved-sparsity count,
+    /// pruned-stream propagation, and byte accounting. Errors carry
+    /// their ``stage `name` on block i`` context.
+    pub(crate) fn process_block(
+        &self,
+        li: usize,
+        xs: &[Tensor],
+        bp_in: Vec<Tensor>,
+        full_grads: Option<&BlockGrads>,
+        n_calib: usize,
+        report: &mut PruneReport,
+    ) -> Result<BlockOutcome> {
+        let mut rng = block_rng(self.opts.seed, li);
+        let mut cx = StageCtx {
+            rt: self.rt,
+            size: &self.size,
+            block: li,
+            t: self.t,
+            d: self.d,
+            ffn: self.ffn,
+            opts: self.opts,
+            scorer: self.scorer,
+            xs,
+            n_calib,
+            bp: bp_in,
+            dense_ys: Vec::new(),
+            stats: None,
+            grads: None,
+            masks: None,
+            full_grads,
+            rng: &mut rng,
+            report,
+            block_report: BlockReport {
+                block: li,
+                ro_losses: Vec::new(),
+                sparsity: 0.0,
+            },
+        };
+        for stage in &self.stages {
+            stage.run(&mut cx).map_err(|e| {
+                e.context(format!("stage `{}` on block {li}", stage.name()))
+            })?;
+        }
+        let StageCtx { bp, grads, mut block_report, .. } = cx;
+
+        // Achieved sparsity of this block.
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for &w_idx in &PRUNABLE_PARAM_IDX {
+            zeros += bp[w_idx].data.iter().filter(|v| **v == 0.0).count();
+            total += bp[w_idx].numel();
+        }
+        block_report.sparsity = zeros as f64 / total as f64;
+
+        // Propagate the PRUNED stream past this block.
+        let next_xs = fwd_pass(self.rt, &self.size, self.t, &bp, xs)?;
+        report.account_block(&bp, grads.as_ref());
+        Ok(BlockOutcome { bp, next_xs, block_report })
     }
 }
 
@@ -532,10 +650,7 @@ pub(crate) fn run_pipeline<F: WeightFabric>(
 ) -> Result<PruneReport> {
     let t0 = Instant::now();
     let cfg = fabric.cfg().clone();
-    let size = cfg.name.clone();
-    let (d, ffn, l) = (cfg.d, cfg.ffn, cfg.n_layers);
-    let t = opts.ctx;
-    let mut rng = Rng::seed_from_u64(opts.seed ^ 0x517cc1b727220a95);
+    let env = BlockEnv::new(rt, &cfg, opts, scorer);
 
     let mut report = PruneReport::new(opts, &cfg);
     report.account_calibration(xs0.as_slice(), opts.recipe.ro);
@@ -543,10 +658,10 @@ pub(crate) fn run_pipeline<F: WeightFabric>(
         report.account_full_model(&cfg);
     }
 
-    let stages = stages_for(opts);
     // The pruned stream propagated past the previous block; block 0 reads
     // the incoming calibration chunks directly.
     let mut propagated: Option<Vec<Tensor>> = None;
+    let l = cfg.n_layers;
     let limit = opts.max_blocks.unwrap_or(l).min(l);
     for li in 0..limit {
         let xs: &[Tensor] = match propagated.as_deref() {
@@ -554,55 +669,21 @@ pub(crate) fn run_pipeline<F: WeightFabric>(
             None => xs0.as_slice(),
         };
         let bp_in = fabric.checkout_block(li)?;
-        let mut cx = StageCtx {
-            rt,
-            size: &size,
-            block: li,
-            t,
-            d,
-            ffn,
-            opts,
-            scorer,
+        let out = env.process_block(
+            li,
             xs,
+            bp_in,
+            full_grads.map(|g| &g[li]),
             n_calib,
-            bp: bp_in,
-            dense_ys: Vec::new(),
-            stats: None,
-            grads: None,
-            masks: None,
-            full_grads: full_grads.map(|g| &g[li]),
-            rng: &mut rng,
-            report: &mut report,
-            block_report: BlockReport {
-                block: li,
-                ro_losses: Vec::new(),
-                sparsity: 0.0,
-            },
-        };
-        for stage in &stages {
-            stage.run(&mut cx).map_err(|e| {
-                e.context(format!("stage `{}` on block {li}", stage.name()))
-            })?;
-        }
-        let StageCtx { bp, grads, mut block_report, .. } = cx;
-
-        // Achieved sparsity of this block.
-        let (mut zeros, mut total) = (0usize, 0usize);
-        for &w_idx in &PRUNABLE_PARAM_IDX {
-            zeros += bp[w_idx].data.iter().filter(|v| **v == 0.0).count();
-            total += bp[w_idx].numel();
-        }
-        block_report.sparsity = zeros as f64 / total as f64;
-
-        // Propagate the PRUNED stream, then write the block back (the
-        // fabric counts which buffers this run materialized fresh).
-        let next = fwd_pass(rt, &size, t, &bp, xs)?;
-        fabric.checkin_block(li, &bp)?;
-        report.account_block(&bp, grads.as_ref());
-        propagated = Some(next);
+            &mut report,
+        )?;
+        // Write the pruned block back (the fabric counts which buffers
+        // this run materialized fresh).
+        fabric.checkin_block(li, &out.bp)?;
+        propagated = Some(out.next_xs);
         // One-shot callers' stream will never be read again.
         xs0.release();
-        report.blocks.push(block_report);
+        report.blocks.push(out.block_report);
     }
 
     fabric.finish()?;
@@ -611,4 +692,22 @@ pub(crate) fn run_pipeline<F: WeightFabric>(
     report.secs = t0.elapsed().as_secs_f64();
     report.final_sparsity = fabric.final_sparsity()?;
     Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::block_rng;
+
+    #[test]
+    fn block_rng_streams_are_distinct_and_order_independent() {
+        let draw = |seed, block| {
+            block_rng(seed, block).sample_indices(1024, 8)
+        };
+        // Stable under recomputation (no hidden threaded state) …
+        assert_eq!(draw(7, 0), draw(7, 0));
+        assert_eq!(draw(7, 3), draw(7, 3));
+        // … distinct across blocks and seeds.
+        assert_ne!(draw(7, 0), draw(7, 1));
+        assert_ne!(draw(7, 0), draw(8, 0));
+    }
 }

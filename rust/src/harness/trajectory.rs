@@ -16,23 +16,31 @@
 //!             "tiled_speedup": ..., "sparse24_tiled_speedup": ...,
 //!             "sparse24_speedup": ...}],
 //!   "e2e": {"prune_secs": ..., "ppl_dense_secs": ...,
-//!           "ppl_sparse_secs": ..., "ppl": ...}
+//!           "ppl_sparse_secs": ..., "ppl": ...},
+//!   "pipeline": {"seq_secs": ..., "overlap_secs": ...,
+//!                "overlap_ratio": ...}
 //! }
 //! ```
 //!
 //! A baseline file is the same document with an optional
 //! `max_regression_pct` (default 20): the gate fails when a measured
 //! `tiled_speedup` / `sparse24_tiled_speedup` falls more than that far
-//! below the baseline entry for the same `d`.
+//! below the baseline entry for the same `d`, or when the streaming
+//! pipeline's seq/overlap wall-clock ratio falls below the baseline's
+//! `pipeline.overlap_ratio` by the same margin.
+//!
+//! The document is emitted through [`crate::json::JsonStream`] — no
+//! intermediate `Json` tree (ROADMAP item 3); the gate's parse side
+//! stays on `Json::parse`.
 
 use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{bail, Result};
 
 use crate::eval::perplexity_split;
-use crate::json::Json;
+use crate::json::{Json, JsonStream};
 use crate::latency::measured::{measure_gemm_24, print_gemm_table, GemmMeasurement};
-use crate::pruner::{Method, PruneOptions};
+use crate::pruner::{Method, PipelinePolicy, PruneOptions};
 use crate::runtime::Backend;
 use crate::sparsity::{Pattern, SparseModel};
 
@@ -102,36 +110,106 @@ pub fn bench_trajectory(rt: &dyn Backend, cfg: &BenchConfig) -> Result<()> {
          (ppl {ppl:.4})"
     );
 
+    // Pipeline fabric: stream-prune the same model file→file under both
+    // policies — the wall-clock the channel fabric buys by overlapping
+    // block IO with the scoring chain (DESIGN.md §15).
+    let pipe = measure_pipeline_overlap(rt, cfg.seed, cfg.smoke)?;
+    println!(
+        "  pipeline s0 wanda++ 2:4 stream: seq {:.3}s, overlap {:.3}s \
+         ({:.2}x)",
+        pipe.seq_secs,
+        pipe.overlap_secs,
+        pipe.overlap_ratio()
+    );
+
     if cfg.write_json || cfg.out.is_some() {
-        let doc = build_json(cfg, &rows, prune_secs, ppl_dense_secs, ppl_sparse_secs, ppl);
+        let doc =
+            build_json(cfg, &rows, prune_secs, ppl_dense_secs, ppl_sparse_secs, ppl, &pipe)?;
         let path = match &cfg.out {
             Some(p) => p.clone(),
             None => format!("BENCH_{}.json", today_utc()),
         };
-        std::fs::write(&path, doc.write() + "\n")?;
+        std::fs::write(&path, doc)?;
         println!("  wrote {path}");
     }
 
     if let Some(baseline) = &cfg.baseline {
         check_baseline(&rows, baseline)?;
+        check_pipeline_baseline(pipe.overlap_ratio(), baseline)?;
     }
     Ok(())
 }
 
-fn gemm_json(m: &GemmMeasurement) -> Json {
-    Json::obj(vec![
-        ("d", Json::Num(m.d as f64)),
-        ("n", Json::Num(m.n as f64)),
-        ("dense_oracle_secs", Json::Num(m.dense_secs)),
-        ("dense_tiled_secs", Json::Num(m.dense_tiled_secs)),
-        ("sparse24_oracle_secs", Json::Num(m.sparse_secs)),
-        ("sparse24_tiled_secs", Json::Num(m.sparse_tiled_secs)),
-        ("tiled_speedup", Json::Num(m.tiled_speedup())),
-        ("sparse24_tiled_speedup", Json::Num(m.sparse_tiled_speedup())),
-        ("sparse24_speedup", Json::Num(m.speedup())),
-    ])
+/// Wall-clock of the same streaming prune under both [`PipelinePolicy`]s.
+pub struct PipelineBench {
+    pub seq_secs: f64,
+    pub overlap_secs: f64,
 }
 
+impl PipelineBench {
+    /// Sequential over overlapped wall-clock: > 1 means the overlapped
+    /// fabric finished faster than running IO and compute back-to-back.
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.overlap_secs > 0.0 {
+            self.seq_secs / self.overlap_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Save `s0` to a scratch file, then stream-prune it twice — once per
+/// [`PipelinePolicy`] — and report both wall-clocks. The two runs write
+/// byte-identical outputs (the parity tests pin that), so the only
+/// difference the timer sees is the overlap itself.
+fn measure_pipeline_overlap(
+    rt: &dyn Backend,
+    seed: u64,
+    smoke: bool,
+) -> Result<PipelineBench> {
+    let dir = std::env::temp_dir().join("wandapp_bench_pipeline");
+    std::fs::create_dir_all(&dir)?;
+    let src = dir.join(format!("src_{seed}.bin"));
+    crate::model::load_size(rt, "s0")?.save(&src)?;
+    let mut opts = PruneOptions::new(Method::WandaPP, Pattern::NofM(2, 4));
+    opts.seed = seed;
+    if smoke {
+        opts.n_calib = 16;
+        opts.ctx = 32;
+        opts.k_iters = 2;
+    }
+    let coord = crate::coordinator::Coordinator::new(rt);
+    let out_seq = dir.join(format!("seq_{seed}.bin"));
+    opts.pipeline = PipelinePolicy::Sequential;
+    let seq = coord.prune_streaming(&src, &out_seq, &opts)?;
+    let out_overlap = dir.join(format!("overlap_{seed}.bin"));
+    opts.pipeline = PipelinePolicy::Overlapped;
+    let overlap = coord.prune_streaming(&src, &out_overlap, &opts)?;
+    Ok(PipelineBench {
+        seq_secs: seq.secs,
+        overlap_secs: overlap.secs,
+    })
+}
+
+fn gemm_json<W: std::io::Write>(
+    j: &mut JsonStream<W>,
+    m: &GemmMeasurement,
+) -> Result<()> {
+    j.begin_obj()?;
+    j.num_field("d", m.d as f64)?;
+    j.num_field("n", m.n as f64)?;
+    j.num_field("dense_oracle_secs", m.dense_secs)?;
+    j.num_field("dense_tiled_secs", m.dense_tiled_secs)?;
+    j.num_field("sparse24_oracle_secs", m.sparse_secs)?;
+    j.num_field("sparse24_tiled_secs", m.sparse_tiled_secs)?;
+    j.num_field("tiled_speedup", m.tiled_speedup())?;
+    j.num_field("sparse24_tiled_speedup", m.sparse_tiled_speedup())?;
+    j.num_field("sparse24_speedup", m.speedup())?;
+    j.end_obj()?;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn build_json(
     cfg: &BenchConfig,
     rows: &[GemmMeasurement],
@@ -139,23 +217,37 @@ fn build_json(
     ppl_dense_secs: f64,
     ppl_sparse_secs: f64,
     ppl: f64,
-) -> Json {
-    Json::obj(vec![
-        ("schema", Json::Num(1.0)),
-        ("date", Json::str(&today_utc())),
-        ("smoke", Json::Bool(cfg.smoke)),
-        ("seed", Json::Num(cfg.seed as f64)),
-        ("gemm", Json::Arr(rows.iter().map(gemm_json).collect())),
-        (
-            "e2e",
-            Json::obj(vec![
-                ("prune_secs", Json::Num(prune_secs)),
-                ("ppl_dense_secs", Json::Num(ppl_dense_secs)),
-                ("ppl_sparse_secs", Json::Num(ppl_sparse_secs)),
-                ("ppl", Json::Num(ppl)),
-            ]),
-        ),
-    ])
+    pipe: &PipelineBench,
+) -> Result<Vec<u8>> {
+    let mut j = JsonStream::new(Vec::new());
+    j.begin_obj()?;
+    j.num_field("schema", 1.0)?;
+    j.str_field("date", &today_utc())?;
+    j.bool_field("smoke", cfg.smoke)?;
+    j.num_field("seed", cfg.seed as f64)?;
+    j.key("gemm")?;
+    j.begin_arr()?;
+    for m in rows {
+        gemm_json(&mut j, m)?;
+    }
+    j.end_arr()?;
+    j.key("e2e")?;
+    j.begin_obj()?;
+    j.num_field("prune_secs", prune_secs)?;
+    j.num_field("ppl_dense_secs", ppl_dense_secs)?;
+    j.num_field("ppl_sparse_secs", ppl_sparse_secs)?;
+    j.num_field("ppl", ppl)?;
+    j.end_obj()?;
+    j.key("pipeline")?;
+    j.begin_obj()?;
+    j.num_field("seq_secs", pipe.seq_secs)?;
+    j.num_field("overlap_secs", pipe.overlap_secs)?;
+    j.num_field("overlap_ratio", pipe.overlap_ratio())?;
+    j.end_obj()?;
+    j.end_obj()?;
+    let mut buf = j.finish()?;
+    buf.push(b'\n');
+    Ok(buf)
 }
 
 /// Gate the measured tiled/oracle ratios against a committed baseline.
@@ -201,6 +293,37 @@ fn check_baseline(rows: &[GemmMeasurement], path: &str) -> Result<()> {
     println!(
         "  baseline ok: ratios within {max_pct}% of {path} for all \
          matching sizes"
+    );
+    Ok(())
+}
+
+/// Gate the streaming pipeline's seq/overlap wall-clock ratio against a
+/// committed baseline, mirroring the GEMM ratio gate: only the ratio is
+/// compared (both policies share each run's noise). A baseline without a
+/// `pipeline` section skips the gate (older baselines stay valid).
+fn check_pipeline_baseline(ratio: f64, path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let base = Json::parse(&text)?;
+    let Some(pipe) = base.opt("pipeline") else {
+        println!("  baseline {path} has no pipeline section; gate skipped");
+        return Ok(());
+    };
+    let want = pipe.get("overlap_ratio")?.as_f64()?;
+    let max_pct = match base.opt("max_regression_pct") {
+        Some(v) => v.as_f64()?,
+        None => DEFAULT_MAX_REGRESSION_PCT,
+    };
+    let floor = want * (1.0 - max_pct / 100.0);
+    if ratio < floor {
+        bail!(
+            "pipeline overlap regressed vs {path}: seq/overlap ratio \
+             {ratio:.3}x < floor {floor:.3}x (baseline {want:.3}x - \
+             {max_pct}%)"
+        );
+    }
+    println!(
+        "  baseline ok: pipeline overlap {ratio:.2}x within {max_pct}% \
+         of {path} ({want:.2}x)"
     );
     Ok(())
 }
@@ -260,14 +383,26 @@ mod tests {
             out: None,
             baseline: None,
         };
-        let doc = build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0);
-        let back = Json::parse(&doc.write()).unwrap();
+        let pipe = PipelineBench {
+            seq_secs: 2.0,
+            overlap_secs: 1.6,
+        };
+        let doc =
+            build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0, &pipe).unwrap();
+        let back =
+            Json::parse(std::str::from_utf8(&doc).unwrap()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_usize().unwrap(), 1);
         assert_eq!(back.get("seed").unwrap().as_usize().unwrap(), 7);
         let g = &back.get("gemm").unwrap().as_arr().unwrap()[0];
         assert_eq!(g.get("d").unwrap().as_usize().unwrap(), 512);
         assert!(
             (g.get("tiled_speedup").unwrap().as_f64().unwrap() - 2.5).abs()
+                < 1e-9
+        );
+        let p = back.get("pipeline").unwrap();
+        assert!(
+            (p.get("overlap_ratio").unwrap().as_f64().unwrap() - 1.25)
+                .abs()
                 < 1e-9
         );
 
@@ -293,5 +428,31 @@ mod tests {
         std::fs::write(&other, r#"{"gemm":[{"d":4096,"tiled_speedup":9.0}]}"#)
             .unwrap();
         assert!(check_baseline(&[m], other.to_str().unwrap()).is_ok());
+    }
+
+    #[test]
+    fn pipeline_gate_skips_missing_section_and_fails_regressions() {
+        let dir = std::env::temp_dir().join("wandapp_pipe_gate");
+        std::fs::create_dir_all(&dir).unwrap();
+        // No pipeline section: skipped, not an error.
+        let old = dir.join("old.json");
+        std::fs::write(&old, r#"{"gemm":[]}"#).unwrap();
+        assert!(check_pipeline_baseline(0.1, old.to_str().unwrap()).is_ok());
+        // Measured 1.0x passes a 0.9x baseline (floor 0.72 at 20%)...
+        let base = dir.join("base.json");
+        std::fs::write(
+            &base,
+            r#"{"pipeline":{"overlap_ratio":0.9},"max_regression_pct":20}"#,
+        )
+        .unwrap();
+        assert!(check_pipeline_baseline(1.0, base.to_str().unwrap()).is_ok());
+        assert!(
+            check_pipeline_baseline(0.73, base.to_str().unwrap()).is_ok()
+        );
+        // ...and a ratio below the floor fails with the gate's message.
+        let err = check_pipeline_baseline(0.5, base.to_str().unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline overlap regressed"), "{err}");
     }
 }

@@ -6,6 +6,15 @@
 //! machine-written by our own python, so this parser targets strict RFC
 //! 8259 JSON without extensions. Implemented from scratch as one of the
 //! repo's substrates (DESIGN.md §5).
+//!
+//! The write side has two tiers: the [`Json`] value tree below
+//! (build-then-serialize, fine for small headers), and the zero-alloc
+//! [`stream::JsonStream`] serializer for report/trajectory emission on
+//! hot or memory-bounded paths (ROADMAP item 3).
+
+pub mod stream;
+
+pub use stream::JsonStream;
 
 use std::collections::HashMap;
 use std::fmt::Write as _;

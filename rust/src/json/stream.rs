@@ -1,0 +1,414 @@
+//! Zero-allocation streaming JSON writer (ROADMAP item 3, write side).
+//!
+//! [`JsonStream`] serializes directly into any [`io::Write`]: no
+//! intermediate [`Json`](super::Json) value tree, no per-string heap
+//! buffers. Escapes pass through a fixed stack window; numbers format
+//! straight into the sink through `core::fmt` (identically to the tree
+//! writer, so a document emitted either way is byte-for-byte the same).
+//! Nesting state lives in two `u64` bitsets — constant-size, which is
+//! where the depth-64 cap comes from.
+//!
+//! The parse side (`Json::parse`) is deliberately untouched: readers of
+//! machine-written files keep the tree API; only emission goes
+//! streaming.
+//!
+//! Structural misuse (a value where a key is due, unbalanced `end_*`,
+//! finishing mid-container) is an error, not a debug assertion — the
+//! writer refuses to emit invalid JSON rather than trusting every call
+//! site.
+
+use std::io::{self, Write};
+
+use anyhow::{bail, Result};
+
+/// Maximum container nesting depth (one bit of state per level).
+const MAX_DEPTH: usize = 64;
+
+/// Fixed escape window: flushed to the sink whenever the next escape
+/// might not fit (worst case 6 bytes, `\u00xx`).
+const ESCAPE_WINDOW: usize = 64;
+
+/// A forward-only JSON serializer over any [`io::Write`].
+///
+/// ```
+/// use wandapp::json::JsonStream;
+///
+/// let mut buf = Vec::new();
+/// let mut j = JsonStream::new(&mut buf);
+/// j.begin_obj().unwrap();
+/// j.str_field("model", "s0").unwrap();
+/// j.key("blocks").unwrap();
+/// j.begin_arr().unwrap();
+/// j.num(0.5).unwrap();
+/// j.end_arr().unwrap();
+/// j.end_obj().unwrap();
+/// j.finish().unwrap();
+/// assert_eq!(buf, br#"{"model":"s0","blocks":[0.5]}"#);
+/// ```
+pub struct JsonStream<W: Write> {
+    out: W,
+    /// Bit `d`: the container at depth `d` already holds an element.
+    has_elem: u64,
+    /// Bit `d`: the container at depth `d` is an object.
+    is_obj: u64,
+    depth: usize,
+    /// Inside an object, a key has been written and its value is due.
+    pending_value: bool,
+    /// A root value has been emitted (exactly one is allowed).
+    root_done: bool,
+}
+
+impl<W: Write> JsonStream<W> {
+    pub fn new(out: W) -> Self {
+        Self {
+            out,
+            has_elem: 0,
+            is_obj: 0,
+            depth: 0,
+            pending_value: false,
+            root_done: false,
+        }
+    }
+
+    fn bit(&self) -> u64 {
+        1u64 << (self.depth - 1)
+    }
+
+    fn in_obj(&self) -> bool {
+        self.depth > 0 && self.is_obj & self.bit() != 0
+    }
+
+    /// Separator/state bookkeeping before any value (scalar or
+    /// container opener) is written.
+    fn before_value(&mut self) -> Result<()> {
+        if self.depth == 0 {
+            if self.root_done {
+                bail!("json stream: second root value");
+            }
+            self.root_done = true;
+        } else if self.in_obj() {
+            if !self.pending_value {
+                bail!("json stream: value in object without a key");
+            }
+            self.pending_value = false;
+        } else {
+            if self.has_elem & self.bit() != 0 {
+                self.out.write_all(b",")?;
+            }
+            self.has_elem |= self.bit();
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, obj: bool) -> Result<()> {
+        if self.depth >= MAX_DEPTH {
+            bail!("json stream: nesting deeper than {MAX_DEPTH}");
+        }
+        self.depth += 1;
+        self.has_elem &= !self.bit();
+        if obj {
+            self.is_obj |= self.bit();
+        } else {
+            self.is_obj &= !self.bit();
+        }
+        Ok(())
+    }
+
+    pub fn begin_obj(&mut self) -> Result<()> {
+        self.before_value()?;
+        self.push(true)?;
+        self.out.write_all(b"{")?;
+        Ok(())
+    }
+
+    pub fn end_obj(&mut self) -> Result<()> {
+        if !self.in_obj() {
+            bail!("json stream: end_obj outside an object");
+        }
+        if self.pending_value {
+            bail!("json stream: end_obj after a dangling key");
+        }
+        self.depth -= 1;
+        self.out.write_all(b"}")?;
+        Ok(())
+    }
+
+    pub fn begin_arr(&mut self) -> Result<()> {
+        self.before_value()?;
+        self.push(false)?;
+        self.out.write_all(b"[")?;
+        Ok(())
+    }
+
+    pub fn end_arr(&mut self) -> Result<()> {
+        if self.depth == 0 || self.in_obj() {
+            bail!("json stream: end_arr outside an array");
+        }
+        self.depth -= 1;
+        self.out.write_all(b"]")?;
+        Ok(())
+    }
+
+    /// Write an object key; exactly one value call must follow.
+    pub fn key(&mut self, k: &str) -> Result<()> {
+        if !self.in_obj() {
+            bail!("json stream: key `{k}` outside an object");
+        }
+        if self.pending_value {
+            bail!("json stream: key `{k}` directly after another key");
+        }
+        if self.has_elem & self.bit() != 0 {
+            self.out.write_all(b",")?;
+        }
+        self.has_elem |= self.bit();
+        self.write_escaped(k)?;
+        self.out.write_all(b":")?;
+        self.pending_value = true;
+        Ok(())
+    }
+
+    pub fn str_val(&mut self, s: &str) -> Result<()> {
+        self.before_value()?;
+        self.write_escaped(s)
+    }
+
+    /// Write a number — formatted exactly like the tree writer
+    /// (`Json::write`): integral values within `i64`'s exact-f64 range
+    /// print without a fractional part.
+    pub fn num(&mut self, v: f64) -> Result<()> {
+        self.before_value()?;
+        if v.fract() == 0.0 && v.abs() < 9e15 {
+            write!(self.out, "{}", v as i64)?;
+        } else {
+            write!(self.out, "{v}")?;
+        }
+        Ok(())
+    }
+
+    pub fn bool_val(&mut self, v: bool) -> Result<()> {
+        self.before_value()?;
+        self.out.write_all(if v { b"true" } else { b"false" })?;
+        Ok(())
+    }
+
+    pub fn null(&mut self) -> Result<()> {
+        self.before_value()?;
+        self.out.write_all(b"null")?;
+        Ok(())
+    }
+
+    pub fn str_field(&mut self, k: &str, v: &str) -> Result<()> {
+        self.key(k)?;
+        self.str_val(v)
+    }
+
+    pub fn num_field(&mut self, k: &str, v: f64) -> Result<()> {
+        self.key(k)?;
+        self.num(v)
+    }
+
+    pub fn bool_field(&mut self, k: &str, v: bool) -> Result<()> {
+        self.key(k)?;
+        self.bool_val(v)
+    }
+
+    /// Completeness check + flush; returns the sink. Failing here (an
+    /// unclosed container, no root value) is what keeps a crashed
+    /// emitter from passing off a half-written document.
+    pub fn finish(mut self) -> Result<W> {
+        if self.depth != 0 {
+            bail!(
+                "json stream: finished inside a container (depth {})",
+                self.depth
+            );
+        }
+        if !self.root_done {
+            bail!("json stream: finished before any value");
+        }
+        self.out.flush()?;
+        Ok(self.out)
+    }
+
+    /// Escape through a fixed stack window — no per-string allocation,
+    /// byte-compatible with the tree writer's `write_escaped`.
+    fn write_escaped(&mut self, s: &str) -> Result<()> {
+        const HEX: &[u8; 16] = b"0123456789abcdef";
+        let mut buf = [0u8; ESCAPE_WINDOW];
+        let mut n = 0usize;
+        self.out.write_all(b"\"")?;
+        for &b in s.as_bytes() {
+            if n + 6 > ESCAPE_WINDOW {
+                self.out.write_all(&buf[..n])?;
+                n = 0;
+            }
+            match b {
+                b'"' => {
+                    buf[n..n + 2].copy_from_slice(b"\\\"");
+                    n += 2;
+                }
+                b'\\' => {
+                    buf[n..n + 2].copy_from_slice(b"\\\\");
+                    n += 2;
+                }
+                b'\n' => {
+                    buf[n..n + 2].copy_from_slice(b"\\n");
+                    n += 2;
+                }
+                b'\r' => {
+                    buf[n..n + 2].copy_from_slice(b"\\r");
+                    n += 2;
+                }
+                b'\t' => {
+                    buf[n..n + 2].copy_from_slice(b"\\t");
+                    n += 2;
+                }
+                0x00..=0x1f => {
+                    buf[n..n + 4].copy_from_slice(b"\\u00");
+                    buf[n + 4] = HEX[(b >> 4) as usize];
+                    buf[n + 5] = HEX[(b & 0xf) as usize];
+                    n += 6;
+                }
+                // Multi-byte UTF-8 passes through verbatim, same as the
+                // tree writer (which pushes the chars unescaped).
+                _ => {
+                    buf[n] = b;
+                    n += 1;
+                }
+            }
+        }
+        self.out.write_all(&buf[..n])?;
+        self.out.write_all(b"\"")?;
+        Ok(())
+    }
+}
+
+/// Serialize into a fresh `Vec<u8>` — convenience for callers that want
+/// a string (tests, small documents); hot paths hand `JsonStream` a
+/// file or socket directly.
+pub fn to_vec(f: impl FnOnce(&mut JsonStream<&mut Vec<u8>>) -> Result<()>) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    let mut j = JsonStream::new(&mut buf);
+    f(&mut j)?;
+    j.finish()?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Json;
+    use super::*;
+
+    fn emit(f: impl FnOnce(&mut JsonStream<&mut Vec<u8>>) -> Result<()>) -> String {
+        String::from_utf8(to_vec(f).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn matches_tree_writer_byte_for_byte() {
+        // Same document through both writers. The tree writer sorts
+        // object keys, so emit them pre-sorted on the stream side.
+        let tree = Json::obj(vec![
+            ("arr", Json::Arr(vec![Json::Num(1.0), Json::Num(2.5)])),
+            ("b", Json::Bool(true)),
+            ("big", Json::Num(1e16)),
+            ("n", Json::Num(42.0)),
+            ("neg", Json::Num(-0.125)),
+            ("s", Json::str("a\"b\\c\nd\te\u{1}f\u{e9}")),
+            ("z", Json::Null),
+        ]);
+        let streamed = emit(|j| {
+            j.begin_obj()?;
+            j.key("arr")?;
+            j.begin_arr()?;
+            j.num(1.0)?;
+            j.num(2.5)?;
+            j.end_arr()?;
+            j.bool_field("b", true)?;
+            j.num_field("big", 1e16)?;
+            j.num_field("n", 42.0)?;
+            j.num_field("neg", -0.125)?;
+            j.str_field("s", "a\"b\\c\nd\te\u{1}f\u{e9}")?;
+            j.key("z")?;
+            j.null()
+        });
+        assert_eq!(streamed, tree.write());
+        // And the untouched parser accepts it.
+        assert_eq!(Json::parse(&streamed).unwrap(), tree);
+    }
+
+    #[test]
+    fn long_strings_cross_the_escape_window() {
+        // > ESCAPE_WINDOW bytes, escapes straddling flush points.
+        let s = "ab\"c\\d\ne\u{3}".repeat(40);
+        let doc = emit(|j| j.str_val(&s));
+        let back = Json::parse(&doc).unwrap();
+        assert_eq!(back.as_str().unwrap(), s);
+    }
+
+    #[test]
+    fn nested_containers_and_empties() {
+        let doc = emit(|j| {
+            j.begin_arr()?;
+            j.begin_obj()?;
+            j.end_obj()?;
+            j.begin_arr()?;
+            j.end_arr()?;
+            j.begin_obj()?;
+            j.key("k")?;
+            j.begin_arr()?;
+            j.num(1.0)?;
+            j.end_arr()?;
+            j.end_obj()?;
+            j.end_arr()
+        });
+        assert_eq!(doc, r#"[{},[],{"k":[1]}]"#);
+    }
+
+    #[test]
+    fn structural_misuse_is_an_error_not_bad_json() {
+        // Value in an object without a key.
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        j.begin_obj().unwrap();
+        assert!(j.num(1.0).is_err());
+
+        // Dangling key at end_obj.
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        j.begin_obj().unwrap();
+        j.key("k").unwrap();
+        assert!(j.end_obj().is_err());
+
+        // Key outside an object.
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        j.begin_arr().unwrap();
+        assert!(j.key("k").is_err());
+
+        // Finishing mid-container fails completeness.
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        j.begin_obj().unwrap();
+        assert!(j.finish().is_err());
+
+        // Two roots.
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        j.num(1.0).unwrap();
+        assert!(j.num(2.0).is_err());
+
+        // Empty stream fails completeness.
+        let buf: Vec<u8> = Vec::new();
+        let j = JsonStream::new(buf);
+        assert!(j.finish().is_err());
+    }
+
+    #[test]
+    fn depth_cap_is_enforced() {
+        let mut buf = Vec::new();
+        let mut j = JsonStream::new(&mut buf);
+        for _ in 0..64 {
+            j.begin_arr().unwrap();
+        }
+        assert!(j.begin_arr().is_err());
+    }
+}

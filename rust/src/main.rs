@@ -12,7 +12,9 @@ use anyhow::{anyhow, bail, Result};
 use wandapp::eval::{ppl_pair, run_tasks};
 use wandapp::harness;
 use wandapp::model::load_size;
-use wandapp::pruner::{Method, PruneOptions, Recipe, ScorerRegistry};
+use wandapp::pruner::{
+    Method, PipelinePolicy, PruneOptions, Recipe, ScorerRegistry,
+};
 use wandapp::runtime::{Backend, KernelPolicy};
 use wandapp::sparsity::Pattern;
 
@@ -37,10 +39,13 @@ KERNELS (forward-path GEMMs only; scoring always runs on the oracle)
 COMMANDS
   prune    --size s2 --method wanda++ --pattern 2:4 [--calib 32]
            [--alpha 100] [--k 5] [--seed 0] [--save FILE]
-           [--stream-to FILE]
+           [--stream-to FILE] [--pipeline seq|overlap]
            Prune a model; report ppl before/after. --stream-to prunes
            file-to-file with O(one block) fresh residency: blocks load
            lazily from the weight file and stream out as they finish.
+           --pipeline overlap runs prefetch / scoring / write-back as
+           channel-staged workers so block IO overlaps compute —
+           bit-identical output to the sequential default (DESIGN.md 15).
   eval     --size s2 [--weights FILE] [--sparse-exec]
            Perplexity of a weight file (or the pristine size).
            --sparse-exec packs a pruned model once and evaluates on the
@@ -214,6 +219,7 @@ fn main() -> Result<()> {
             opts.seed = args.get_parse("seed", 0)?;
             opts.ctx = args.get_parse("ctx", 64)?;
             opts.ro_lr = args.get_parse("ro-lr", opts.ro_lr)?;
+            opts.pipeline = PipelinePolicy::parse(&args.get("pipeline", "seq"))?;
 
             let (dense_test, _) =
                 harness::dense_ppl(rt, &size, harness::EVAL_BATCHES)?;

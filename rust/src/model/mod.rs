@@ -9,8 +9,9 @@ pub mod synth;
 
 pub use data::{sample_windows, CorpusData, EvalBatches};
 pub use store::{
-    ModelConfig, ResidentFabric, StreamingFabric, StreamingWeightWriter,
-    WeightFabric, WeightStore, Weights,
+    BlockSink, BlockSource, ModelConfig, Passthrough, ResidentFabric,
+    ResidentSink, ResidentSource, SinkStats, StreamSink, StreamingFabric,
+    StreamingWeightWriter, WeightFabric, WeightStore, Weights,
 };
 
 use crate::runtime::Backend;

@@ -591,31 +591,157 @@ pub trait WeightFabric {
     fn fresh_bytes(&self) -> usize;
 }
 
+/// One unit of the canonical tail stream a [`BlockSource`] forwards past
+/// the pruned prefix: an untouched decoder block, or a single tail tensor
+/// (`ln_f`, `head`).
+pub enum Passthrough {
+    Block(Vec<Tensor>),
+    Tail(Tensor),
+}
+
+/// What a [`BlockSink`] measured over the whole run, returned by
+/// [`BlockSink::finish`]. Mirrors the read-out half of [`WeightFabric`]
+/// so the overlapped pipeline fills the same `PruneReport` fields.
+#[derive(Debug, Clone, Copy)]
+pub struct SinkStats {
+    pub final_sparsity: f64,
+    pub resident_model_bytes: usize,
+    pub fresh_bytes: usize,
+}
+
+/// The read half of a split [`WeightFabric`]: where blocks come *from*.
+/// `Send` so the overlapped pipeline (DESIGN.md §15) can move it onto
+/// the prefetch worker while the sink lives on the write-back worker.
+pub trait BlockSource: Send {
+    fn cfg(&self) -> &ModelConfig;
+
+    /// Read block `i`'s nine parameters (`BLOCK_PARAMS` order). Unlike
+    /// [`WeightFabric::checkout_block`], reads may run ahead of
+    /// check-ins — the source must not assume lock-step with the writer.
+    fn read_block(&mut self, i: usize) -> Result<Vec<Tensor>>;
+
+    /// Emit everything past the pruned prefix in canonical order:
+    /// blocks `from_block..n_layers`, then the tail tensors. Sources
+    /// whose storage *is* the destination (resident) emit nothing.
+    fn passthrough(
+        &mut self,
+        from_block: usize,
+        emit: &mut dyn FnMut(Passthrough) -> Result<()>,
+    ) -> Result<()>;
+}
+
+/// The write half of a split [`WeightFabric`]: where pruned blocks (and
+/// the passthrough tail) go. Owned-handoff: the pipeline moves each
+/// block's tensors in, so no borrow ties the sink to the source's
+/// thread.
+pub trait BlockSink: Send {
+    /// Check a pruned block in. Blocks arrive strictly ascending.
+    fn checkin_pruned(&mut self, i: usize, bp: Vec<Tensor>) -> Result<()>;
+
+    /// Absorb one passthrough item forwarded from the source.
+    fn absorb_passthrough(&mut self, item: Passthrough) -> Result<()>;
+
+    /// Flush, completeness-check, and read out the run's stats. A sink
+    /// dropped without a successful `finish` must leave a detectably
+    /// incomplete artifact (streaming) or simply the partial in-memory
+    /// state (resident) — never a silently-valid half result.
+    fn finish(&mut self) -> Result<SinkStats>;
+}
+
 /// Fabric over an in-memory model: check-out hands back `Arc`-shared
 /// tensors (zero-copy), check-in swaps the rewritten ones in place and
 /// counts the buffers that no longer share with the stored ones (the
-/// run's `bytes_deep_copied`).
+/// run's `bytes_deep_copied`). Composed over [`ResidentSink`] so the
+/// sequential driver and the overlapped pipeline share the accounting.
 pub struct ResidentFabric<'a> {
-    w: &'a mut Weights,
-    fresh: usize,
+    sink: ResidentSink<'a>,
 }
 
 impl<'a> ResidentFabric<'a> {
     pub fn new(w: &'a mut Weights) -> Self {
-        Self { w, fresh: 0 }
+        Self { sink: ResidentSink::new(w) }
     }
 }
 
 impl WeightFabric for ResidentFabric<'_> {
     fn cfg(&self) -> &ModelConfig {
-        &self.w.cfg
+        &self.sink.w.cfg
     }
 
     fn checkout_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
-        Ok(self.w.block(i).to_vec())
+        Ok(self.sink.w.block(i).to_vec())
     }
 
     fn checkin_block(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
+        self.sink.checkin(i, bp)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn final_sparsity(&mut self) -> Result<f64> {
+        Ok(self.sink.w.prunable_sparsity())
+    }
+
+    fn resident_model_bytes(&self) -> usize {
+        self.sink.w.param_count() * 4
+    }
+
+    fn fresh_bytes(&self) -> usize {
+        self.sink.fresh
+    }
+}
+
+/// Prefetch half of the resident overlapped pipeline: an `Arc`-bump
+/// snapshot of the template. Clones share every buffer, so the snapshot
+/// costs no model bytes; reads never alias the sink's mutations because
+/// check-in replaces `Arc` handles in the sink's own `Weights`, not the
+/// buffers this snapshot points at.
+pub struct ResidentSource {
+    w: Weights,
+}
+
+impl ResidentSource {
+    pub fn new(w: Weights) -> Self {
+        Self { w }
+    }
+}
+
+impl BlockSource for ResidentSource {
+    fn cfg(&self) -> &ModelConfig {
+        &self.w.cfg
+    }
+
+    fn read_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+        Ok(self.w.block(i).to_vec())
+    }
+
+    fn passthrough(
+        &mut self,
+        _from_block: usize,
+        _emit: &mut dyn FnMut(Passthrough) -> Result<()>,
+    ) -> Result<()> {
+        // Untouched blocks and the tail already live in the destination
+        // `Weights`; nothing moves.
+        Ok(())
+    }
+}
+
+/// Write-back half of the resident fabric: swaps pruned params into the
+/// stored model and counts fresh materializations (buffer identity
+/// against the still-stored originals, exactly as [`ResidentFabric`]).
+pub struct ResidentSink<'a> {
+    w: &'a mut Weights,
+    fresh: usize,
+}
+
+impl<'a> ResidentSink<'a> {
+    pub fn new(w: &'a mut Weights) -> Self {
+        Self { w, fresh: 0 }
+    }
+
+    fn checkin(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
         for (k, t) in bp.iter().enumerate() {
             // The stored tensor is still the checked-out original, so
             // buffer identity tells exactly which params this run
@@ -627,21 +753,24 @@ impl WeightFabric for ResidentFabric<'_> {
         }
         Ok(())
     }
+}
 
-    fn finish(&mut self) -> Result<()> {
+impl BlockSink for ResidentSink<'_> {
+    fn checkin_pruned(&mut self, i: usize, bp: Vec<Tensor>) -> Result<()> {
+        self.checkin(i, &bp)
+    }
+
+    fn absorb_passthrough(&mut self, _item: Passthrough) -> Result<()> {
+        // Resident sources emit no passthrough (the model is in place).
         Ok(())
     }
 
-    fn final_sparsity(&mut self) -> Result<f64> {
-        Ok(self.w.prunable_sparsity())
-    }
-
-    fn resident_model_bytes(&self) -> usize {
-        self.w.param_count() * 4
-    }
-
-    fn fresh_bytes(&self) -> usize {
-        self.fresh
+    fn finish(&mut self) -> Result<SinkStats> {
+        Ok(SinkStats {
+            final_sparsity: self.w.prunable_sparsity(),
+            resident_model_bytes: self.w.param_count() * 4,
+            fresh_bytes: self.fresh,
+        })
     }
 }
 
@@ -650,15 +779,13 @@ impl WeightFabric for ResidentFabric<'_> {
 /// pipeline finishes them. Fresh memory during a prune is one block (plus
 /// whatever the stages hold) instead of a whole second model; `embed` is
 /// copied through at construction, untouched blocks and the tail tensors
-/// at [`WeightFabric::finish`].
+/// at [`WeightFabric::finish`]. Composed of the two worker halves —
+/// [`WeightStore`] (a [`BlockSource`]) and [`StreamSink`] — which
+/// [`StreamingFabric::into_parts`] splits apart for the overlapped
+/// pipeline.
 pub struct StreamingFabric {
     store: WeightStore,
-    writer: StreamingWeightWriter,
-    next_block: usize,
-    zeros: usize,
-    total: usize,
-    peak_block_bytes: usize,
-    finished: bool,
+    sink: StreamSink,
 }
 
 impl StreamingFabric {
@@ -682,8 +809,7 @@ impl StreamingFabric {
             None => store.load_tensor("embed")?,
         };
         writer.write_next(&embed)?;
-        Ok(Self {
-            store,
+        let sink = StreamSink {
             writer,
             next_block: 0,
             zeros: 0,
@@ -692,24 +818,16 @@ impl StreamingFabric {
             // moment; blocks and the tail tensors raise it later.
             peak_block_bytes: embed.numel() * 4,
             finished: false,
-        })
+        };
+        Ok(Self { store, sink })
     }
 
-    fn account_block(&mut self, bp: &[Tensor]) {
-        let bytes: usize = bp.iter().map(|t| t.numel() * 4).sum();
-        self.peak_block_bytes = self.peak_block_bytes.max(bytes);
-        for &k in &PRUNABLE_PARAM_IDX {
-            self.zeros +=
-                bp[k].data.iter().filter(|v| **v == 0.0).count();
-            self.total += bp[k].numel();
-        }
-    }
-
-    fn write_block(&mut self, bp: &[Tensor]) -> Result<()> {
-        for t in bp {
-            self.writer.write_next(t)?;
-        }
-        Ok(())
+    /// Split into the two worker halves of the overlapped pipeline
+    /// (DESIGN.md §15): the store prefetches on one thread while the
+    /// sink writes back on another. Ownership moves — no borrows cross
+    /// the split.
+    pub fn into_parts(self) -> (WeightStore, StreamSink) {
+        (self.store, self.sink)
     }
 }
 
@@ -723,6 +841,80 @@ impl WeightFabric for StreamingFabric {
     }
 
     fn checkin_block(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
+        self.sink.checkin(i, bp)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        // Copy through blocks the pipeline never touched (max_blocks
+        // prefix runs), then the tail tensors — the same passthrough
+        // stream the prefetch worker forwards in overlapped runs.
+        let Self { store, sink } = self;
+        let from = sink.next_block;
+        store.passthrough(from, &mut |item| sink.absorb(item))?;
+        sink.finalize()
+    }
+
+    fn final_sparsity(&mut self) -> Result<f64> {
+        self.sink.sparsity()
+    }
+
+    fn resident_model_bytes(&self) -> usize {
+        self.sink.peak_block_bytes
+    }
+
+    fn fresh_bytes(&self) -> usize {
+        0
+    }
+}
+
+impl BlockSource for WeightStore {
+    fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn read_block(&mut self, i: usize) -> Result<Vec<Tensor>> {
+        self.load_block(i)
+    }
+
+    fn passthrough(
+        &mut self,
+        from_block: usize,
+        emit: &mut dyn FnMut(Passthrough) -> Result<()>,
+    ) -> Result<()> {
+        for i in from_block..self.cfg.n_layers {
+            emit(Passthrough::Block(self.load_block(i)?))?;
+        }
+        emit(Passthrough::Tail(self.load_tensor("ln_f")?))?;
+        emit(Passthrough::Tail(self.load_tensor("head")?))?;
+        Ok(())
+    }
+}
+
+/// Write-back half of the streaming fabric: the incremental writer plus
+/// the run's sparsity / peak-residency accounting. Lives on the
+/// write-back worker in overlapped runs; [`StreamingFabric`] drives the
+/// same code sequentially, so both schedules account identically.
+pub struct StreamSink {
+    writer: StreamingWeightWriter,
+    next_block: usize,
+    zeros: usize,
+    total: usize,
+    peak_block_bytes: usize,
+    finished: bool,
+}
+
+impl StreamSink {
+    fn account_block(&mut self, bp: &[Tensor]) {
+        let bytes: usize = bp.iter().map(|t| t.numel() * 4).sum();
+        self.peak_block_bytes = self.peak_block_bytes.max(bytes);
+        for &k in &PRUNABLE_PARAM_IDX {
+            self.zeros +=
+                bp[k].data.iter().filter(|v| **v == 0.0).count();
+            self.total += bp[k].numel();
+        }
+    }
+
+    fn checkin(&mut self, i: usize, bp: &[Tensor]) -> Result<()> {
         if i != self.next_block {
             return Err(anyhow!(
                 "streaming fabric expects block {} next, got {i}",
@@ -730,26 +922,34 @@ impl WeightFabric for StreamingFabric {
             ));
         }
         self.account_block(bp);
-        self.write_block(bp)?;
+        for t in bp {
+            self.writer.write_next(t)?;
+        }
         self.next_block += 1;
         Ok(())
     }
 
-    fn finish(&mut self) -> Result<()> {
-        // Copy through blocks the pipeline never touched (max_blocks
-        // prefix runs), then the tail tensors.
-        for i in self.next_block..self.store.cfg().n_layers {
-            let bp = self.store.load_block(i)?;
-            self.account_block(&bp);
-            self.write_block(&bp)?;
+    fn absorb(&mut self, item: Passthrough) -> Result<()> {
+        match item {
+            Passthrough::Block(bp) => {
+                self.account_block(&bp);
+                for t in &bp {
+                    self.writer.write_next(t)?;
+                }
+                self.next_block += 1;
+            }
+            Passthrough::Tail(t) => {
+                // `ln_f` never raises the peak (it is a [d] vector, the
+                // embed copy-through dominates); `head` can.
+                self.peak_block_bytes =
+                    self.peak_block_bytes.max(t.numel() * 4);
+                self.writer.write_next(&t)?;
+            }
         }
-        self.next_block = self.store.cfg().n_layers;
-        let ln_f = self.store.load_tensor("ln_f")?;
-        self.writer.write_next(&ln_f)?;
-        drop(ln_f);
-        let head = self.store.load_tensor("head")?;
-        self.peak_block_bytes = self.peak_block_bytes.max(head.numel() * 4);
-        self.writer.write_next(&head)?;
+        Ok(())
+    }
+
+    fn finalize(&mut self) -> Result<()> {
         // Completeness + flush now, with errors surfaced — a `Drop`-time
         // flush would swallow them and let a truncated file pass.
         self.writer.finalize()?;
@@ -757,7 +957,7 @@ impl WeightFabric for StreamingFabric {
         Ok(())
     }
 
-    fn final_sparsity(&mut self) -> Result<f64> {
+    fn sparsity(&self) -> Result<f64> {
         if !self.finished {
             return Err(anyhow!(
                 "streaming fabric sparsity read before finish()"
@@ -765,13 +965,24 @@ impl WeightFabric for StreamingFabric {
         }
         Ok(self.zeros as f64 / self.total.max(1) as f64)
     }
+}
 
-    fn resident_model_bytes(&self) -> usize {
-        self.peak_block_bytes
+impl BlockSink for StreamSink {
+    fn checkin_pruned(&mut self, i: usize, bp: Vec<Tensor>) -> Result<()> {
+        self.checkin(i, &bp)
     }
 
-    fn fresh_bytes(&self) -> usize {
-        0
+    fn absorb_passthrough(&mut self, item: Passthrough) -> Result<()> {
+        self.absorb(item)
+    }
+
+    fn finish(&mut self) -> Result<SinkStats> {
+        self.finalize()?;
+        Ok(SinkStats {
+            final_sparsity: self.zeros as f64 / self.total.max(1) as f64,
+            resident_model_bytes: self.peak_block_bytes,
+            fresh_bytes: 0,
+        })
     }
 }
 

@@ -174,6 +174,40 @@ impl Recipe {
     }
 }
 
+/// How the coordinator schedules the per-block prune loop
+/// (DESIGN.md §15).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PipelinePolicy {
+    /// One block at a time on the calling thread: checkout → stages →
+    /// propagate → checkin. The default.
+    #[default]
+    Sequential,
+    /// Channel-staged workers overlapping prefetch IO, scoring/RO, and
+    /// write-back. Bit-exact with [`PipelinePolicy::Sequential`]: same
+    /// output bytes, same report (timing aside).
+    Overlapped,
+}
+
+impl PipelinePolicy {
+    /// Parse a `--pipeline` CLI value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "seq" | "sequential" => Ok(PipelinePolicy::Sequential),
+            "overlap" | "overlapped" => Ok(PipelinePolicy::Overlapped),
+            other => Err(anyhow!(
+                "unknown pipeline policy `{other}` (expected `seq` or `overlap`)"
+            )),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PipelinePolicy::Sequential => "seq",
+            PipelinePolicy::Overlapped => "overlap",
+        }
+    }
+}
+
 /// Options controlling a pruning run (paper §5.1 defaults, scaled).
 #[derive(Debug, Clone)]
 pub struct PruneOptions {
@@ -195,6 +229,9 @@ pub struct PruneOptions {
     /// Prune only the first `max_blocks` decoder blocks (Fig. 3's
     /// progressive sweep); `None` prunes all.
     pub max_blocks: Option<usize>,
+    /// Block-loop scheduling: sequential driver or the overlapped
+    /// channel-staged pipeline (bit-exact, DESIGN.md §15).
+    pub pipeline: PipelinePolicy,
 }
 
 impl PruneOptions {
@@ -214,6 +251,7 @@ impl PruneOptions {
             ro_lr: 1e-3,
             seed: 0,
             max_blocks: None,
+            pipeline: PipelinePolicy::Sequential,
         }
     }
 }

@@ -267,6 +267,29 @@ impl PackReport {
             self.reduction_pct()
         )
     }
+
+    /// Serialize the pack report into `out` through the zero-alloc
+    /// streaming writer (no intermediate `Json` tree; ROADMAP item 3).
+    pub fn write_json<W: std::io::Write>(&self, out: W) -> crate::Result<W> {
+        let mut j = crate::json::JsonStream::new(out);
+        j.begin_obj()?;
+        j.num_field("dense_bytes", self.dense_bytes as f64)?;
+        j.num_field("packed_bytes", self.packed_bytes as f64)?;
+        j.num_field("reduction_pct", self.reduction_pct())?;
+        j.key("per_layer")?;
+        j.begin_arr()?;
+        for l in &self.per_layer {
+            j.begin_obj()?;
+            j.str_field("name", &l.name)?;
+            j.str_field("format", l.format)?;
+            j.num_field("dense_bytes", l.dense_bytes as f64)?;
+            j.num_field("packed_bytes", l.packed_bytes as f64)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+        j.end_obj()?;
+        j.finish()
+    }
 }
 
 /// A whole model packed for sparse execution: embed/norms/head stay
@@ -388,6 +411,31 @@ mod tests {
         assert_eq!(sm.report.packed_bytes, sm.report.dense_bytes);
         // dense tensors are Arc clones of the source model
         assert!(sm.embed.shares_data(w.get("embed")));
+    }
+
+    #[test]
+    fn pack_report_json_roundtrips_through_the_parser() {
+        let rt = NativeBackend::new(
+            std::env::temp_dir().join("wandapp_exec_json_test"),
+        )
+        .unwrap();
+        let w = load_size(&rt, "s0").unwrap();
+        let sm = SparseModel::pack(&w);
+        let buf = sm.report.write_json(Vec::new()).unwrap();
+        let doc = crate::json::Json::parse(
+            std::str::from_utf8(&buf).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(
+            doc.get("dense_bytes").unwrap().as_usize().unwrap(),
+            sm.report.dense_bytes
+        );
+        let layers = doc.get("per_layer").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), sm.report.per_layer.len());
+        assert_eq!(
+            layers[0].get("format").unwrap().as_str().unwrap(),
+            sm.report.per_layer[0].format
+        );
     }
 
     #[test]

@@ -8,11 +8,11 @@
 
 use std::sync::Arc;
 
-use wandapp::coordinator::{Coordinator, PruneSession};
+use wandapp::coordinator::{Coordinator, PruneReport, PruneSession};
 use wandapp::eval::{perplexity_split, run_tasks};
 use wandapp::model::{load_size, Weights};
 use wandapp::pruner::{
-    Method, PruneOptions, Recipe, ScoreCtx, Scorer,
+    Method, PipelinePolicy, PruneOptions, Recipe, ScoreCtx, Scorer,
 };
 use wandapp::runtime::Backend;
 use wandapp::sparsity::{is_nm, Pattern};
@@ -518,6 +518,156 @@ fn streaming_prune_matches_resident_bit_exact() {
     let survived = Weights::load(&src).unwrap();
     assert_eq!(survived.param_count(), template.param_count());
     std::fs::remove_file(src).ok();
+}
+
+/// Everything the two pipeline policies must agree on, timing aside:
+/// the achieved sparsity, the fresh-bytes accounting, every memory
+/// term, and each block's full RO trajectory.
+fn assert_report_parity(label: &str, seq: &PruneReport, overlap: &PruneReport) {
+    assert_eq!(seq.final_sparsity, overlap.final_sparsity, "{label}");
+    assert_eq!(
+        seq.bytes_deep_copied, overlap.bytes_deep_copied,
+        "{label}: fresh-bytes accounting diverged"
+    );
+    assert_eq!(seq.memory.calibration, overlap.memory.calibration, "{label}");
+    assert_eq!(seq.memory.block_peak, overlap.memory.block_peak, "{label}");
+    assert_eq!(seq.memory.hessians, overlap.memory.hessians, "{label}");
+    assert_eq!(seq.memory.full_model, overlap.memory.full_model, "{label}");
+    assert_eq!(
+        seq.memory.model_resident, overlap.memory.model_resident,
+        "{label}"
+    );
+    assert_eq!(seq.blocks.len(), overlap.blocks.len(), "{label}");
+    for (a, b) in seq.blocks.iter().zip(&overlap.blocks) {
+        assert_eq!(a.block, b.block, "{label}");
+        assert_eq!(a.sparsity, b.sparsity, "{label} block {}", a.block);
+        assert_eq!(
+            a.ro_losses, b.ro_losses,
+            "{label} block {}: RO trajectory diverged",
+            a.block
+        );
+    }
+}
+
+/// Tentpole: the overlapped channel-staged pipeline is a pure schedule
+/// change — for every streaming-capable paper method it must produce a
+/// byte-identical output file (streaming) and bit-identical tensors
+/// (resident), with an identical report modulo timing (DESIGN.md §15).
+#[test]
+fn overlapped_pipeline_matches_sequential_bit_exact() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let src = std::env::temp_dir().join("wandapp_overlap_parity_src.bin");
+    load_size(rt, "s0").unwrap().save(&src).unwrap();
+
+    for method in [
+        Method::Magnitude,
+        Method::Wanda,
+        Method::SparseGpt,
+        Method::WandaPPRgs,
+        Method::WandaPPRo,
+        Method::WandaPP,
+    ] {
+        let opts_seq = quick_opts(method, Pattern::NofM(2, 4));
+        let mut opts_overlap = opts_seq.clone();
+        opts_overlap.pipeline = PipelinePolicy::Overlapped;
+        assert_eq!(opts_seq.pipeline, PipelinePolicy::Sequential);
+        let tag = method.label().replace(|c: char| !c.is_alphanumeric(), "_");
+
+        // Streaming: the two policies must write byte-identical files.
+        let dst_seq =
+            std::env::temp_dir().join(format!("wandapp_overlap_seq_{tag}.bin"));
+        let dst_overlap = std::env::temp_dir()
+            .join(format!("wandapp_overlap_olap_{tag}.bin"));
+        let r_seq = Coordinator::new(rt)
+            .prune_streaming(&src, &dst_seq, &opts_seq)
+            .unwrap();
+        let r_overlap = Coordinator::new(rt)
+            .prune_streaming(&src, &dst_overlap, &opts_overlap)
+            .unwrap();
+        assert_eq!(
+            std::fs::read(&dst_seq).unwrap(),
+            std::fs::read(&dst_overlap).unwrap(),
+            "{}: streamed output files differ between pipeline policies",
+            method.label()
+        );
+        assert_report_parity(method.label(), &r_seq, &r_overlap);
+        std::fs::remove_file(dst_seq).ok();
+        std::fs::remove_file(dst_overlap).ok();
+
+        // Resident: same contract through the in-memory CoW fabric.
+        let mut w_seq = load_size(rt, "s0").unwrap();
+        let r_seq = Coordinator::new(rt).prune(&mut w_seq, &opts_seq).unwrap();
+        let mut w_overlap = load_size(rt, "s0").unwrap();
+        let r_overlap = Coordinator::new(rt)
+            .prune(&mut w_overlap, &opts_overlap)
+            .unwrap();
+        for (name, t) in w_seq.iter() {
+            assert_eq!(
+                t.data,
+                w_overlap.get(name).data,
+                "{} diverged at {name} between pipeline policies",
+                method.label()
+            );
+        }
+        assert_report_parity(method.label(), &r_seq, &r_overlap);
+    }
+    std::fs::remove_file(src).ok();
+}
+
+/// Satellite: `--stream-to` collision detection canonicalizes both
+/// paths, so a differently-spelled alias of the input (or a symlinked
+/// directory) is refused before the writer truncates the source.
+#[test]
+fn streaming_collision_detection_canonicalizes_paths() {
+    let rt = rt();
+    let rt = rt.as_ref();
+    let dir = std::env::temp_dir().join("wandapp_collide_canon");
+    std::fs::create_dir_all(&dir).unwrap();
+    let src = dir.join("w.bin");
+    let template = load_size(rt, "s0").unwrap();
+    template.save(&src).unwrap();
+    let opts = quick_opts(Method::Wanda, Pattern::NofM(2, 4));
+
+    // Differently-spelled alias of the input: `dir/../dir/w.bin`.
+    let alias = dir
+        .join("..")
+        .join(dir.file_name().unwrap())
+        .join("w.bin");
+    assert_ne!(alias, src, "alias must be spelled differently");
+    let err = Coordinator::new(rt)
+        .prune_streaming(&src, &alias, &opts)
+        .unwrap_err();
+    assert!(err.to_string().contains("input file"), "{err}");
+
+    // Symlinked directory pointing back at the input's directory.
+    #[cfg(unix)]
+    {
+        let link = std::env::temp_dir().join("wandapp_collide_link");
+        std::fs::remove_file(&link).ok();
+        std::os::unix::fs::symlink(&dir, &link).unwrap();
+        let err = Coordinator::new(rt)
+            .prune_streaming(&src, link.join("w.bin"), &opts)
+            .unwrap_err();
+        assert!(err.to_string().contains("input file"), "{err}");
+        std::fs::remove_file(link).ok();
+    }
+
+    // The refusals happened before the writer opened: source intact.
+    let survived = Weights::load(&src).unwrap();
+    assert_eq!(survived.param_count(), template.param_count());
+
+    // A genuinely fresh output spelled through the same `..` detour is
+    // not a collision and streams fine.
+    let fresh = dir
+        .join("..")
+        .join(dir.file_name().unwrap())
+        .join("out.bin");
+    Coordinator::new(rt)
+        .prune_streaming(&src, &fresh, &opts)
+        .unwrap();
+    assert!(Weights::load(&fresh).is_ok());
+    std::fs::remove_dir_all(dir).ok();
 }
 
 /// Satellite: across a 2-method session sweep, each run's freshly
