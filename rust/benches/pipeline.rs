@@ -18,6 +18,7 @@ use wandapp::model::load_size;
 use wandapp::pruner::{sparsegpt::sparsegpt_prune, Method, PruneOptions};
 use wandapp::runtime::native::tiled::{matmul_nt_24_tiled, matmul_nt_tiled};
 use wandapp::runtime::{native::math::matmul_nt, native::sparse::matmul_nt_24, Backend};
+use wandapp::serve::{run_trace, seq_bytes, synthetic_trace, ServeConfig};
 use wandapp::sparsity::{Pattern, SparseModel};
 use wandapp::tensor::Tensor;
 
@@ -203,6 +204,29 @@ fn main() {
     });
     grp.bench("sparse_exec", || {
         perplexity_split(rt, &sm, "val", 4).unwrap();
+    });
+
+    // --- serving: per-sequence GEMVs vs the fused batch GEMM ----------------
+    // The DESIGN.md §16 cost shape: with 8 live sequences each scheduler
+    // tick runs one (8, d) GEMM per projection instead of 8 GEMVs, so
+    // every weight matrix is read once per tick instead of once per row.
+    let mcfg = &w.cfg;
+    let trace = synthetic_trace(mcfg.vocab, mcfg.seq, 8, 24, 9);
+    let scfg = |batch_gemm: bool| ServeConfig {
+        kv_budget_bytes: seq_bytes(mcfg.n_layers, mcfg.d, mcfg.seq) * 16,
+        max_batch: 0,
+        temperature: 0.8,
+        batch_gemm,
+    };
+    let mut grp = Group::new("batched decode (s0, 8 seqs x 24 tok)").budget(4.0);
+    grp.bench("per_sequence_gemv", || {
+        std::hint::black_box(run_trace(rt, &w, &trace, &scfg(false)).unwrap());
+    });
+    grp.bench("fused_batch_gemm", || {
+        std::hint::black_box(run_trace(rt, &w, &trace, &scfg(true)).unwrap());
+    });
+    grp.bench("fused_batch_gemm_sparse", || {
+        std::hint::black_box(run_trace(rt, &sm, &trace, &scfg(true)).unwrap());
     });
 
     // --- latency simulator --------------------------------------------------

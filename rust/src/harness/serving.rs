@@ -1,19 +1,29 @@
-//! The serving harness behind `wandapp serve --trace` (DESIGN.md §14):
-//! replay a seeded synthetic many-user trace through the KV-cached
-//! decode engine *and* the sliding-window baseline, assert the two
+//! The serving harness behind `wandapp serve --trace` (DESIGN.md §14,
+//! §16): replay a seeded synthetic many-user trace through the
+//! KV-cached decode engine *and* the sliding-window baseline — plus the
+//! fused batched-GEMM decode path with `--batch-gemm` — assert the
 //! transcripts agree byte-for-byte under the oracle policy, print
-//! throughput / p50 / p99 / KV-residency for both, and — with `--json`
+//! throughput / p50 / p99 / KV-residency for each, and — with `--json`
 //! — fold a `serving` section into the dated `BENCH_<date>.json` the
 //! bench-trajectory CI job uploads.
 //!
 //! The baseline gate mirrors the GEMM gate in [`super::trajectory`]:
-//! only the decode-vs-sliding throughput *ratio* is compared against
-//! the committed baseline (absolute tokens/s vary with the runner; the
-//! two paths share each run's noise, so their ratio is stable).
+//! only throughput *ratios* are compared against the committed baseline
+//! (absolute tokens/s vary with the runner; the paths share each run's
+//! noise, so their ratios are stable). Two ratios are gated:
+//! `decode_speedup` (decode vs sliding) and, when `--batch-gemm` ran,
+//! `batch_speedup` (batched vs per-sequence decode).
+//!
+//! The fold-into-existing-file path parses the already-written sections
+//! with the tree-based [`Json`] reader but *emits* everything through
+//! the streaming [`JsonStream`] serializer ([`Json::emit_into`] replays
+//! preserved sections) — closing ROADMAP item 2's writer remainder.
+
+use std::io::Write as _;
 
 use anyhow::{bail, Result};
 
-use crate::json::Json;
+use crate::json::{Json, JsonStream};
 use crate::model::load_size;
 use crate::runtime::{Backend, KernelPolicy};
 use crate::serve::{
@@ -32,6 +42,9 @@ pub struct ServingConfig {
     pub weights: Option<String>,
     /// Serve through the packed sparse execution engine.
     pub sparse_exec: bool,
+    /// Also replay through the fused batched-GEMM decode path and
+    /// report / gate its speedup over per-sequence decode.
+    pub batch_gemm: bool,
     /// Shrink the trace for CI.
     pub smoke: bool,
     /// Requests in the trace (0 = 6 smoke / 24 full).
@@ -46,7 +59,7 @@ pub struct ServingConfig {
     pub write_json: bool,
     /// Explicit output path, overriding the dated default.
     pub out: Option<String>,
-    /// Baseline file to gate the decode/sliding ratio against.
+    /// Baseline file to gate the throughput ratios against.
     pub baseline: Option<String>,
 }
 
@@ -62,20 +75,7 @@ fn print_report(label: &str, r: &ServeReport) {
     );
 }
 
-fn report_json(r: &ServeReport) -> Json {
-    Json::obj(vec![
-        ("total_tokens", Json::Num(r.total_tokens as f64)),
-        ("wall_secs", Json::Num(r.wall_secs)),
-        ("tokens_per_sec", Json::Num(r.tokens_per_sec)),
-        ("p50_ms", Json::Num(r.p50_ms)),
-        ("p99_ms", Json::Num(r.p99_ms)),
-        ("kv_peak_bytes", Json::Num(r.kv_peak_bytes as f64)),
-        ("kv_budget_bytes", Json::Num(r.kv_budget_bytes as f64)),
-        ("max_concurrent", Json::Num(r.max_concurrent as f64)),
-    ])
-}
-
-/// Replay the trace on both paths, check parity, report, and gate.
+/// Replay the trace on every path, check parity, report, and gate.
 pub fn serve_trace(rt: &dyn Backend, cfg: &ServingConfig) -> Result<()> {
     let w = match &cfg.weights {
         Some(p) => crate::model::Weights::load(p)?,
@@ -109,33 +109,52 @@ pub fn serve_trace(rt: &dyn Backend, cfg: &ServingConfig) -> Result<()> {
         kv_budget_bytes: kv_budget,
         max_batch: 0,
         temperature: cfg.temperature,
+        batch_gemm: false,
+    };
+    let bcfg = ServeConfig {
+        kv_budget_bytes: kv_budget,
+        max_batch: 0,
+        temperature: cfg.temperature,
+        batch_gemm: true,
     };
 
     println!(
-        "== serve: {} x {} tokens on {} ({}, kv budget {:.1} KiB, seed {}) ==",
+        "== serve: {} x {} tokens on {} ({}{}, kv budget {:.1} KiB, seed {}) ==",
         n_requests,
         n_gen,
         mcfg.name,
         if cfg.sparse_exec { "sparse-exec" } else { "dense" },
+        if cfg.batch_gemm { ", batch-gemm" } else { "" },
         kv_budget as f64 / 1024.0,
         cfg.seed
     );
 
-    let (decode, sliding) = match &sm {
+    let (decode, sliding, batched) = match &sm {
         Some(sm) => (
             run_trace(rt, sm, &trace, &scfg)?,
             run_trace_sliding(rt, sm, &trace, &scfg)?,
+            if cfg.batch_gemm {
+                Some(run_trace(rt, sm, &trace, &bcfg)?)
+            } else {
+                None
+            },
         ),
         None => (
             run_trace(rt, &w, &trace, &scfg)?,
             run_trace_sliding(rt, &w, &trace, &scfg)?,
+            if cfg.batch_gemm {
+                Some(run_trace(rt, &w, &trace, &bcfg)?)
+            } else {
+                None
+            },
         ),
     };
 
     // Parity wall: under the oracle policy the continuous-batching
-    // decode path must reproduce the sliding-window transcripts
-    // byte-for-byte (tiled policies reassociate reductions, so their
-    // transcripts may legitimately diverge after a near-tie sample).
+    // decode path — per-sequence *and* batched-GEMM — must reproduce
+    // the sliding-window transcripts byte-for-byte (tiled policies
+    // reassociate reductions, so their transcripts may legitimately
+    // diverge after a near-tie sample).
     if rt.kernel_policy() == KernelPolicy::Oracle {
         for (a, b) in decode.outcomes.iter().zip(&sliding.outcomes) {
             if a.id != b.id || a.tokens != b.tokens {
@@ -147,9 +166,22 @@ pub fn serve_trace(rt: &dyn Backend, cfg: &ServingConfig) -> Result<()> {
                 );
             }
         }
+        if let Some(batched) = &batched {
+            for (a, b) in batched.outcomes.iter().zip(&decode.outcomes) {
+                if a.id != b.id || a.tokens != b.tokens {
+                    bail!(
+                        "batched decode parity violation on request {}: \
+                         batched-GEMM and per-sequence transcripts differ \
+                         under the oracle policy",
+                        a.id
+                    );
+                }
+            }
+        }
         println!(
-            "  oracle parity: {} transcripts identical on both paths",
-            decode.outcomes.len()
+            "  oracle parity: {} transcripts identical on all {} paths",
+            decode.outcomes.len(),
+            if batched.is_some() { 3 } else { 2 }
         );
     }
 
@@ -161,62 +193,167 @@ pub fn serve_trace(rt: &dyn Backend, cfg: &ServingConfig) -> Result<()> {
         0.0
     };
     println!("  decode speedup: {speedup:.2}x over the sliding window");
+    let batch_speedup = batched.as_ref().map(|b| {
+        print_report("batched", b);
+        if decode.tokens_per_sec > 0.0 {
+            b.tokens_per_sec / decode.tokens_per_sec
+        } else {
+            0.0
+        }
+    });
+    if let Some(bs) = batch_speedup {
+        println!("  batch speedup: {bs:.2}x over per-sequence decode");
+    }
 
     if cfg.write_json || cfg.out.is_some() {
         let path = match &cfg.out {
             Some(p) => p.clone(),
             None => format!("BENCH_{}.json", today_utc()),
         };
-        write_serving_json(&path, cfg, n_requests, &decode, &sliding, speedup)?;
+        write_serving_json(
+            &path,
+            cfg,
+            n_requests,
+            &decode,
+            &sliding,
+            batched.as_ref(),
+            speedup,
+            batch_speedup,
+        )?;
         println!("  wrote serving section to {path}");
     }
 
     if let Some(baseline) = &cfg.baseline {
-        check_serving_baseline(speedup, baseline)?;
+        check_serving_baseline(speedup, batch_speedup, baseline)?;
     }
     Ok(())
 }
 
+/// Stream one [`ServeReport`] as an object value (a `key()` call must
+/// precede this).
+fn report_fields<W: std::io::Write>(
+    j: &mut JsonStream<W>,
+    r: &ServeReport,
+) -> Result<()> {
+    j.begin_obj()?;
+    j.num_field("total_tokens", r.total_tokens as f64)?;
+    j.num_field("wall_secs", r.wall_secs)?;
+    j.num_field("tokens_per_sec", r.tokens_per_sec)?;
+    j.num_field("p50_ms", r.p50_ms)?;
+    j.num_field("p99_ms", r.p99_ms)?;
+    j.num_field("kv_peak_bytes", r.kv_peak_bytes as f64)?;
+    j.num_field("kv_budget_bytes", r.kv_budget_bytes as f64)?;
+    j.num_field("max_concurrent", r.max_concurrent as f64)?;
+    j.end_obj()?;
+    Ok(())
+}
+
+/// Stream the fresh `serving` section — key plus value.
+#[allow(clippy::too_many_arguments)]
+fn serving_section<W: std::io::Write>(
+    j: &mut JsonStream<W>,
+    cfg: &ServingConfig,
+    n_requests: usize,
+    decode: &ServeReport,
+    sliding: &ServeReport,
+    batched: Option<&ServeReport>,
+    speedup: f64,
+    batch_speedup: Option<f64>,
+) -> Result<()> {
+    j.key("serving")?;
+    j.begin_obj()?;
+    j.num_field("requests", n_requests as f64)?;
+    j.num_field("trace_seed", cfg.seed as f64)?;
+    j.bool_field("smoke", cfg.smoke)?;
+    j.bool_field("sparse_exec", cfg.sparse_exec)?;
+    j.bool_field("batch_gemm", cfg.batch_gemm)?;
+    j.key("decode")?;
+    report_fields(j, decode)?;
+    j.key("sliding")?;
+    report_fields(j, sliding)?;
+    if let Some(b) = batched {
+        j.key("batched")?;
+        report_fields(j, b)?;
+    }
+    j.num_field("decode_speedup", speedup)?;
+    if let Some(bs) = batch_speedup {
+        j.num_field("batch_speedup", bs)?;
+    }
+    j.end_obj()?;
+    Ok(())
+}
+
 /// Insert (or replace) the `serving` section of `path`, preserving any
-/// sections the bench-trajectory run already wrote there.
+/// sections the bench-trajectory run already wrote there. The parse
+/// side stays tree-based (the whole point is re-reading an existing
+/// document); the write side streams through [`JsonStream`] — preserved
+/// sections replay via [`Json::emit_into`], the fresh section never
+/// touches the tree. Top-level keys stay sorted, matching the tree
+/// writer's historical output order.
+#[allow(clippy::too_many_arguments)]
 fn write_serving_json(
     path: &str,
     cfg: &ServingConfig,
     n_requests: usize,
     decode: &ServeReport,
     sliding: &ServeReport,
+    batched: Option<&ServeReport>,
     speedup: f64,
+    batch_speedup: Option<f64>,
 ) -> Result<()> {
-    let serving = Json::obj(vec![
-        ("requests", Json::Num(n_requests as f64)),
-        ("trace_seed", Json::Num(cfg.seed as f64)),
-        ("smoke", Json::Bool(cfg.smoke)),
-        ("sparse_exec", Json::Bool(cfg.sparse_exec)),
-        ("decode", report_json(decode)),
-        ("sliding", report_json(sliding)),
-        ("decode_speedup", Json::Num(speedup)),
-    ]);
-    let mut doc = match std::fs::read_to_string(path) {
-        Ok(text) => Json::parse(&text)?,
-        Err(_) => Json::obj(vec![
-            ("schema", Json::Num(1.0)),
-            ("date", Json::str(&today_utc())),
+    let existing = match std::fs::read_to_string(path) {
+        Ok(text) => match Json::parse(&text)? {
+            Json::Obj(m) => m,
+            _ => bail!("{path}: existing bench JSON is not an object"),
+        },
+        Err(_) => std::collections::HashMap::from([
+            ("schema".to_string(), Json::Num(1.0)),
+            ("date".to_string(), Json::str(&today_utc())),
         ]),
     };
-    match &mut doc {
-        Json::Obj(m) => {
-            m.insert("serving".to_string(), serving);
+    let file = std::fs::File::create(path)?;
+    let mut j = JsonStream::new(std::io::BufWriter::new(file));
+    j.begin_obj()?;
+    let mut keys: Vec<&String> = existing.keys().collect();
+    keys.sort();
+    let mut wrote_serving = false;
+    for k in keys {
+        if k == "serving" {
+            continue; // replaced by the fresh section below
         }
-        _ => bail!("{path}: existing bench JSON is not an object"),
+        if !wrote_serving && k.as_str() > "serving" {
+            serving_section(
+                &mut j, cfg, n_requests, decode, sliding, batched, speedup,
+                batch_speedup,
+            )?;
+            wrote_serving = true;
+        }
+        j.key(k)?;
+        existing[k].emit_into(&mut j)?;
     }
-    std::fs::write(path, doc.write() + "\n")?;
+    if !wrote_serving {
+        serving_section(
+            &mut j, cfg, n_requests, decode, sliding, batched, speedup,
+            batch_speedup,
+        )?;
+    }
+    j.end_obj()?;
+    let mut out = j.finish()?;
+    out.write_all(b"\n")?;
+    out.flush()?;
     Ok(())
 }
 
-/// Gate the decode/sliding throughput ratio against a committed
-/// baseline, mirroring the GEMM ratio gate. A baseline without a
-/// `serving` section skips the gate (older baselines stay valid).
-fn check_serving_baseline(speedup: f64, path: &str) -> Result<()> {
+/// Gate the throughput ratios against a committed baseline, mirroring
+/// the GEMM ratio gate: `decode_speedup` always, `batch_speedup` when
+/// the batched path ran. A baseline without a `serving` section (or
+/// without a `batch_speedup` entry) skips the corresponding gate, so
+/// older baselines stay valid.
+fn check_serving_baseline(
+    speedup: f64,
+    batch_speedup: Option<f64>,
+    path: &str,
+) -> Result<()> {
     let text = std::fs::read_to_string(path)?;
     let base = Json::parse(&text)?;
     let Some(serving) = base.opt("serving") else {
@@ -240,5 +377,26 @@ fn check_serving_baseline(speedup: f64, path: &str) -> Result<()> {
         "  baseline ok: decode speedup {speedup:.2}x within {max_pct}% of \
          {path} ({want:.2}x)"
     );
+    if let Some(bs) = batch_speedup {
+        let Some(want_b) = serving.opt("batch_speedup") else {
+            println!(
+                "  baseline {path} has no batch_speedup; batch gate skipped"
+            );
+            return Ok(());
+        };
+        let want_b = want_b.as_f64()?;
+        let floor_b = want_b * (1.0 - max_pct / 100.0);
+        if bs < floor_b {
+            bail!(
+                "batched-decode throughput regressed vs {path}: batch \
+                 speedup {bs:.3}x < floor {floor_b:.3}x (baseline \
+                 {want_b:.3}x - {max_pct}%)"
+            );
+        }
+        println!(
+            "  baseline ok: batch speedup {bs:.2}x within {max_pct}% of \
+             {path} ({want_b:.2}x)"
+        );
+    }
     Ok(())
 }

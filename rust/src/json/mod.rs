@@ -149,6 +149,43 @@ impl Json {
         }
     }
 
+    /// Re-emit a parsed value through a [`JsonStream`] — the bridge that
+    /// lets section-folding writers (the serving harness's
+    /// `BENCH_<date>.json` update) replay already-written sections
+    /// through the streaming serializer instead of the tree writer.
+    /// Object keys are emitted sorted, and the stream's number format
+    /// matches [`Json::write`], so a replayed value serializes
+    /// byte-identically to the tree writer's output.
+    pub fn emit_into<W: std::io::Write>(
+        &self,
+        j: &mut JsonStream<W>,
+    ) -> Result<()> {
+        match self {
+            Json::Null => j.null()?,
+            Json::Bool(b) => j.bool_val(*b)?,
+            Json::Num(n) => j.num(*n)?,
+            Json::Str(s) => j.str_val(s)?,
+            Json::Arr(v) => {
+                j.begin_arr()?;
+                for x in v {
+                    x.emit_into(j)?;
+                }
+                j.end_arr()?;
+            }
+            Json::Obj(m) => {
+                let mut keys: Vec<&String> = m.keys().collect();
+                keys.sort();
+                j.begin_obj()?;
+                for k in keys {
+                    j.key(k)?;
+                    m[k].emit_into(j)?;
+                }
+                j.end_obj()?;
+            }
+        }
+        Ok(())
+    }
+
     // --- builders -----------------------------------------------------------
 
     pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
@@ -420,6 +457,19 @@ mod tests {
         assert_eq!(back.get("shape").unwrap().usize_vec().unwrap(),
                    vec![128, 128]);
         assert_eq!(back.get("offset").unwrap().as_usize().unwrap(), 4096);
+    }
+
+    #[test]
+    fn emit_into_matches_tree_writer_bytes() {
+        // The fold path re-emits parsed sections through JsonStream;
+        // sorted keys + shared number format keep that byte-identical
+        // to the tree writer.
+        let text = r#"{"gemm": {"ratio": 1.25, "sizes": [64, 128]},
+                       "date": "2026-08-07", "smoke": true,
+                       "none": null, "neg": -1.5e2, "big": 12345678901}"#;
+        let j = Json::parse(text).unwrap();
+        let streamed = stream::to_vec(|s| j.emit_into(s)).unwrap();
+        assert_eq!(String::from_utf8(streamed).unwrap(), j.write());
     }
 
     #[test]

@@ -70,14 +70,19 @@ COMMANDS
            the KV-cached decode engine (bit-identical to the sliding
            window under the oracle policy, O(ctx) cheaper per token).
   serve    --trace [--size s0] [--weights FILE] [--sparse-exec] [--smoke]
-           [--requests N] [--kv-budget-kib N] [--temp 0.8] [--seed 7]
-           [--json] [--out FILE] [--baseline FILE]
+           [--batch-gemm] [--requests N] [--kv-budget-kib N] [--temp 0.8]
+           [--seed 7] [--json] [--out FILE] [--baseline FILE]
            Replay a seeded synthetic many-user trace through the
            KV-cached continuous-batching engine and the sliding-window
            baseline; report throughput / p50 / p99 / KV residency and
            (oracle policy) assert the transcripts match byte-for-byte.
+           --batch-gemm also replays through the fused batched decode
+           path — one GEMM per projection per layer across the live
+           batch, bit-identical transcripts under the oracle policy —
+           and reports its speedup over per-sequence decode.
            --json folds a `serving` section into BENCH_<date>.json;
-           --baseline gates the decode/sliding throughput ratio.
+           --baseline gates the decode/sliding (and, with --batch-gemm,
+           the batched/decode) throughput ratios.
   inspect  --weights FILE [--fmt fp16|f32]
            Per-layer sparsity + 2:4 compressed-size report of a pruned model.
   profile  [--size s0]  Execution profile of a short Wanda++ run.
@@ -90,10 +95,12 @@ PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
 /// Valueless switches: `--sparse-exec`, `--measured`, `--smoke`,
-/// `--json`, `--trace`, `--decode` take no argument (everything else is
-/// a `--key value` pair).
-const BOOL_FLAGS: [&str; 6] =
-    ["sparse-exec", "measured", "smoke", "json", "trace", "decode"];
+/// `--json`, `--trace`, `--decode`, `--batch-gemm` take no argument
+/// (everything else is a `--key value` pair).
+const BOOL_FLAGS: [&str; 7] = [
+    "sparse-exec", "measured", "smoke", "json", "trace", "decode",
+    "batch-gemm",
+];
 
 /// Tiny flag parser: positional args + `--key value` pairs + boolean
 /// switches.
@@ -359,6 +366,7 @@ fn main() -> Result<()> {
                 size: args.get("size", "s0"),
                 weights: args.get_opt("weights"),
                 sparse_exec: args.has("sparse-exec"),
+                batch_gemm: args.has("batch-gemm"),
                 smoke: args.has("smoke"),
                 requests: args.get_parse("requests", 0usize)?,
                 seed: args.get_parse("seed", harness::DEFAULT_BENCH_SEED)?,

@@ -257,6 +257,30 @@ pub trait Backend {
             self.name()
         ))
     }
+
+    /// Batched decode (DESIGN.md §16): forward **one new position per
+    /// sequence** — `x` of shape `(b, 1, d)`, row `i` belonging to the
+    /// sequence whose per-layer cache is `kvs[i]` — through one decoder
+    /// block, running a single GEMM per prunable projection over the
+    /// stacked rows while RoPE and causal attention stay per-sequence at
+    /// each sequence's own position. Appends each row's K/V to its own
+    /// cache. Under the oracle policy row `i` of the output is
+    /// bit-identical to a per-sequence [`Backend::block_decode`] call;
+    /// tiled policies carry the DESIGN.md §13 ulp budget.
+    fn block_decode_batch(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kvs: &mut [&mut KvLayer],
+    ) -> Result<Tensor> {
+        let _ = (key, x, blk, kvs);
+        Err(anyhow!(
+            "the {} backend has no KV-cached decode kernels \
+             (use --backend native)",
+            self.name()
+        ))
+    }
 }
 
 /// Open a backend by name: `"native"`, `"pjrt"`, or `"auto"`.

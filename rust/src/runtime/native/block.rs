@@ -328,6 +328,18 @@ pub struct DecodeOut {
     pub v: Vec<f32>,
 }
 
+/// Output of one batched decode step over `B` sequences: row-major
+/// `(B, d)` block outputs plus each sequence's new key (post-RoPE) and
+/// value rows, in the same row order as the input batch.
+pub struct BatchDecodeOut {
+    /// Block outputs, row `r` for sequence `r`, `B * d` floats.
+    pub y: Vec<f32>,
+    /// Post-RoPE key rows, same layout.
+    pub k: Vec<f32>,
+    /// Value rows, same layout.
+    pub v: Vec<f32>,
+}
+
 /// RoPE rotation of one `(h, hd)` row at absolute position `time` —
 /// the same `10000^(-i/half)` angle expressions as [`rope_tables`] +
 /// `apply_rope`, evaluated for a single position, so the rotated row is
@@ -371,6 +383,9 @@ fn rope_rotate_row(row: &mut [f32], time: usize, h: usize, hd: usize) {
 /// `x` is the new position's block input (`d` floats). The new
 /// position's K/V are returned, not appended — the caller owns the
 /// cache. `dims.b` / `dims.t` are not read; `d`, `h`, `ffn` are.
+///
+/// This is the `B = 1` case of [`block_decode_batch_with`]; the batched
+/// kernel is the implementation, so the two can never drift.
 pub fn block_decode_with<F>(
     x: &[f32],
     ln1: &[f32],
@@ -382,54 +397,100 @@ pub fn block_decode_with<F>(
 where
     F: Fn(usize, &[f32]) -> Vec<f32>,
 {
+    let out =
+        block_decode_batch_with(x, ln1, ln2, std::slice::from_ref(kv), dims, proj);
+    DecodeOut { y: out.y, k: out.k, v: out.v }
+}
+
+/// Batched incremental decode (DESIGN.md §16): forward **one new
+/// position per sequence** — `xs` holds `B = kvs.len()` stacked rows of
+/// `d` floats, row `r` belonging to the sequence behind `kvs[r]` — with
+/// each of the seven prunable projections running as a **single
+/// `(B, k) @ (m, k)^T` GEMM** over the stacked rows instead of `B`
+/// one-row GEMVs. Everything positional stays per-row: RMSNorm
+/// normalizes each row independently, RoPE rotates row `r` at that
+/// sequence's own position `kvs[r].len`, and causal attention runs row
+/// `r` against that sequence's own cached K/V only.
+///
+/// Bit-exactness: the oracle GEMM ([`crate::runtime::native::math::matmul_nt`])
+/// computes each output row with an independent ascending-`k` scalar
+/// reduction, identical for `n = 1` and `n = B` — so stacking rows
+/// changes *which call* computes a row, never its accumulation order,
+/// and under the oracle policy row `r` of this kernel is bit-identical
+/// to a per-sequence [`block_decode_with`] call. Tiled policies
+/// reassociate the reduction and carry the DESIGN.md §13 ulp budget
+/// instead; note `Auto` sees `n = B`, so a batch can cross the
+/// `AUTO_MIN_MACS` threshold a single decode row never reaches — that
+/// is the point of batching.
+pub fn block_decode_batch_with<F>(
+    xs: &[f32],
+    ln1: &[f32],
+    ln2: &[f32],
+    kvs: &[KvView],
+    dims: Dims,
+    proj: F,
+) -> BatchDecodeOut
+where
+    F: Fn(usize, &[f32]) -> Vec<f32>,
+{
     let (d, h) = (dims.d, dims.h);
     let hd = dims.head_dim();
-    let pos = kv.len;
+    let b = kvs.len();
+    debug_assert_eq!(xs.len(), b * d);
 
-    let (xn, _r1) = rmsnorm(x, ln1, d);
+    let (xn, _r1) = rmsnorm(xs, ln1, d);
     let mut q = proj(0, &xn);
     let mut k = proj(1, &xn);
     let v = proj(2, &xn);
-    rope_rotate_row(&mut q, pos, h, hd);
-    rope_rotate_row(&mut k, pos, h, hd);
+    for (r, kv) in kvs.iter().enumerate() {
+        rope_rotate_row(&mut q[r * d..(r + 1) * d], kv.len, h, hd);
+        rope_rotate_row(&mut k[r * d..(r + 1) * d], kv.len, h, hd);
+    }
 
-    // Causal attention for the single query row i = pos: scores over the
-    // cached rows then the fresh row, softmax over all pos + 1 entries,
-    // value accumulation j-ascending — the full forward's inner loop
-    // with `i` pinned.
+    // Causal attention per (sequence, head) for each query row
+    // i = kvs[r].len: scores over that sequence's cached rows then its
+    // fresh row, softmax over all pos + 1 entries, value accumulation
+    // j-ascending — the full forward's inner loop with `i` pinned.
     let inv_s = 1.0 / (hd as f32).sqrt();
-    let mut attn = vec![0.0f32; d];
-    let mut row = vec![0.0f32; pos + 1];
-    for head in 0..h {
-        let base = head * hd;
-        let qi = &q[base..base + hd];
-        for (j, rv) in row.iter_mut().enumerate() {
-            let kj = if j < pos {
-                &kv.k_row(j)[base..base + hd]
-            } else {
-                &k[base..base + hd]
-            };
-            let mut dot = 0.0f32;
-            for c in 0..hd {
-                dot += qi[c] * kj[c];
+    let mut attn = vec![0.0f32; b * d];
+    for (r, kv) in kvs.iter().enumerate() {
+        let pos = kv.len;
+        let qr = &q[r * d..(r + 1) * d];
+        let kr = &k[r * d..(r + 1) * d];
+        let vr = &v[r * d..(r + 1) * d];
+        let ar = &mut attn[r * d..(r + 1) * d];
+        let mut row = vec![0.0f32; pos + 1];
+        for head in 0..h {
+            let base = head * hd;
+            let qi = &qr[base..base + hd];
+            for (j, rv) in row.iter_mut().enumerate() {
+                let kj = if j < pos {
+                    &kv.k_row(j)[base..base + hd]
+                } else {
+                    &kr[base..base + hd]
+                };
+                let mut dot = 0.0f32;
+                for c in 0..hd {
+                    dot += qi[c] * kj[c];
+                }
+                *rv = dot * inv_s;
             }
-            *rv = dot * inv_s;
-        }
-        softmax_inplace(&mut row);
-        for (j, p) in row.iter().enumerate() {
-            let vj = if j < pos {
-                &kv.v_row(j)[base..base + hd]
-            } else {
-                &v[base..base + hd]
-            };
-            for c in 0..hd {
-                attn[base + c] += p * vj[c];
+            softmax_inplace(&mut row);
+            for (j, p) in row.iter().enumerate() {
+                let vj = if j < pos {
+                    &kv.v_row(j)[base..base + hd]
+                } else {
+                    &vr[base..base + hd]
+                };
+                for c in 0..hd {
+                    ar[base + c] += p * vj[c];
+                }
             }
         }
     }
 
     let o = proj(3, &attn);
-    let mut x2 = x.to_vec();
+    let mut x2 = xs.to_vec();
     for (a, b) in x2.iter_mut().zip(&o) {
         *a += b;
     }
@@ -448,7 +509,7 @@ where
         *a += b;
     }
 
-    DecodeOut { y, k, v }
+    BatchDecodeOut { y, k, v }
 }
 
 /// Gradients of a scalar loss w.r.t. the nine block parameters (canonical

@@ -32,9 +32,9 @@ use crate::sparsity::{nm_mask_native, SparseBlock};
 use crate::tensor::{Tensor, TensorI32, Value, ValueView};
 
 use block::{
-    block_backward, block_decode_with, block_forward, block_forward_policy,
-    dense_projector, site_grams, site_squares, site_sums, BlockWeights, Dims,
-    KvView,
+    block_backward, block_decode_batch_with, block_decode_with, block_forward,
+    block_forward_policy, dense_projector, site_grams, site_squares, site_sums,
+    BlockWeights, Dims, KvView,
 };
 use math::{par_map, rmsprop_update};
 
@@ -1095,6 +1095,101 @@ impl Backend for NativeBackend {
             .borrow_mut()
             .record_exec(&format!("{key}#decode"), t0.elapsed().as_secs_f64());
         Ok(Tensor::new(vec![1, 1, info.d], out.y))
+    }
+
+    /// Batched decode: one `(b, 1, d)` stacked step via
+    /// `block_decode_batch_with` — a single GEMM per prunable projection
+    /// over the live rows, per-sequence RoPE and attention at each
+    /// sequence's own position (DESIGN.md §16). The oracle GEMM reduces
+    /// every output row independently in the same ascending-k order as
+    /// the one-row GEMV, so row `i` is bit-identical to a per-sequence
+    /// `block_decode` call by construction; the sparse dispatcher's
+    /// 2:4 / CSR matmuls are row-independent the same way.
+    fn block_decode_batch(
+        &self,
+        key: &str,
+        x: &Tensor,
+        blk: DecodeBlock,
+        kvs: &mut [&mut KvLayer],
+    ) -> Result<Tensor> {
+        let (info, t) = self.decode_key(key)?;
+        let b = kvs.len();
+        if b == 0 {
+            bail!("{key}: batched decode needs at least one sequence");
+        }
+        if x.shape != [b, 1, info.d] {
+            bail!(
+                "{key}: batched decode x expects [{b}, 1, {}], got {:?}",
+                info.d,
+                x.shape
+            );
+        }
+        for kv in kvs.iter() {
+            if kv.len() + 1 > t {
+                bail!(
+                    "{key}: KV cache full at {} positions (ctx {t}); \
+                     clear and re-prefill the shifted window",
+                    kv.len()
+                );
+            }
+        }
+        let dims = Dims { b, t, d: info.d, h: info.n_heads, ffn: info.ffn };
+        let t0 = Instant::now();
+        let out = {
+            let pages: Vec<(Vec<&[f32]>, Vec<&[f32]>)> =
+                kvs.iter().map(|kv| kv.pages()).collect();
+            let views: Vec<KvView> = kvs
+                .iter()
+                .zip(&pages)
+                .map(|(kv, (kp, vp))| KvView {
+                    k_pages: kp,
+                    v_pages: vp,
+                    page_rows: kv.page_rows(),
+                    len: kv.len(),
+                    d: info.d,
+                })
+                .collect();
+            match blk {
+                DecodeBlock::Dense(params) => {
+                    let bp: Vec<&[f32]> =
+                        params.iter().map(|w| w.data.as_slice()).collect();
+                    Self::check_block_params(key, info, &bp)?;
+                    let w = BlockWeights::from_slices(&bp);
+                    block_decode_batch_with(
+                        &x.data,
+                        bp[0],
+                        bp[5],
+                        &views,
+                        dims,
+                        dense_projector(w, info.d, info.ffn, self.policy.get()),
+                    )
+                }
+                DecodeBlock::Sparse(sb) => {
+                    sb.check_dims(info.d, info.ffn)?;
+                    block_decode_batch_with(
+                        &x.data,
+                        &sb.ln1.data,
+                        &sb.ln2.data,
+                        &views,
+                        dims,
+                        sparse::sparse_projector(sb, self.policy.get()),
+                    )
+                }
+            }
+        };
+        let d = info.d;
+        for (i, kv) in kvs.iter_mut().enumerate() {
+            kv.append(
+                &out.k[i * d..(i + 1) * d],
+                &out.v[i * d..(i + 1) * d],
+                1,
+            )?;
+        }
+        self.stats.borrow_mut().record_exec(
+            &format!("{key}#decode_batch"),
+            t0.elapsed().as_secs_f64(),
+        );
+        Ok(Tensor::new(vec![b, 1, info.d], out.y))
     }
 }
 

@@ -19,7 +19,7 @@ use anyhow::{bail, Result};
 use crate::eval::{sample_token, EvalModel};
 use crate::rng::Rng;
 use crate::runtime::{Backend, DecodeBlock};
-use crate::serve::kv::{KvPool, SequenceKv};
+use crate::serve::kv::{KvLayer, KvPool, SequenceKv};
 use crate::tensor::Tensor;
 
 /// One sequence's decode state: the token history, its paged KV cache
@@ -183,6 +183,132 @@ impl<'rt, 'm> DecodeEngine<'rt, 'm> {
             )?;
         }
         st.logits = self.logits_at_last(&h)?;
+        Ok(())
+    }
+}
+
+/// Batched decode over the per-sequence engine (DESIGN.md §16): one
+/// [`BatchedDecodeEngine::step_batch`] gathers every live sequence's
+/// next-token embedding row into a single `(B, 1, d)` activation, runs
+/// one `block_decode_batch` per layer — a single GEMM per prunable
+/// projection over the stacked rows instead of `B` one-row GEMVs — and
+/// scatters the output rows back to their sequences. Sequences at
+/// heterogeneous positions batch fine: RoPE and attention are per-row
+/// inside the kernel, against each sequence's own [`SequenceKv`].
+///
+/// A sequence whose next position would outgrow the baked context falls
+/// out of the GEMM for that tick and takes the per-sequence
+/// clear + re-prefill path ([`DecodeEngine::step`]) unchanged — so
+/// under the oracle policy a batched tick leaves every sequence in
+/// exactly the state `B` independent `step` calls would (asserted by
+/// `tests/batched_decode.rs`).
+pub struct BatchedDecodeEngine<'rt, 'm> {
+    inner: DecodeEngine<'rt, 'm>,
+}
+
+impl<'rt, 'm> BatchedDecodeEngine<'rt, 'm> {
+    /// Bind `rt` and `m`; per-sequence KV pages are drawn from `pool`.
+    pub fn new(
+        rt: &'rt dyn Backend,
+        m: impl Into<EvalModel<'m>>,
+        pool: KvPool,
+    ) -> Self {
+        Self { inner: DecodeEngine::new(rt, m, pool) }
+    }
+
+    /// The wrapped per-sequence engine (prefill and the window-slide
+    /// path run through it).
+    pub fn inner(&self) -> &DecodeEngine<'rt, 'm> {
+        &self.inner
+    }
+
+    /// Admit a sequence (delegates to [`DecodeEngine::start`]).
+    pub fn start(&self, prompt: &[i32]) -> Result<DecodeState> {
+        self.inner.start(prompt)
+    }
+
+    /// Append `toks[i]` to `states[i]` and forward every sequence one
+    /// position in a single fused step: window-sliding sequences
+    /// re-prefill individually, everything else joins the per-layer
+    /// batched GEMMs and one stacked head/logits call. The caller may
+    /// pass any subset of its live sequences — retiring a sequence
+    /// simply shrinks the next tick's GEMM.
+    pub fn step_batch(
+        &self,
+        states: &mut [&mut DecodeState],
+        toks: &[i32],
+    ) -> Result<()> {
+        if states.len() != toks.len() {
+            bail!(
+                "step_batch: {} states but {} tokens",
+                states.len(),
+                toks.len()
+            );
+        }
+        let cfg = self.inner.model.cfg();
+        let (d, vocab, n_layers) = (cfg.d, cfg.vocab, cfg.n_layers);
+        // Split the tick: sequences whose next position still fits the
+        // baked context join the GEMM batch; the rest window-slide
+        // through the per-sequence clear + re-prefill path, which is
+        // already exactly the sliding-window forward.
+        let mut batch: Vec<&mut DecodeState> = Vec::with_capacity(states.len());
+        for (st, &tok) in states.iter_mut().zip(toks) {
+            let st: &mut DecodeState = st;
+            if st.kv.len() + 1 > cfg.seq {
+                self.inner.step(st, tok)?;
+            } else {
+                st.tokens.push(tok);
+                batch.push(st);
+            }
+        }
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let b = batch.len();
+
+        // Gather: one embedding row per sequence, stacked row-major —
+        // row r is bit-identical to the (1, 1, d) `embed_window` row the
+        // per-sequence step would build.
+        let emb = &self.inner.model.embed().data;
+        let mut hs = Vec::with_capacity(b * d);
+        for st in batch.iter() {
+            let tok = *st.tokens.last().expect("token pushed above");
+            if tok < 0 || tok >= vocab as i32 {
+                bail!("decode: token id {tok} outside vocab 0..{vocab}");
+            }
+            let o = tok as usize * d;
+            hs.extend_from_slice(&emb[o..o + d]);
+        }
+        let mut h = Tensor::new(vec![b, 1, d], hs);
+        for i in 0..n_layers {
+            let mut kv_refs: Vec<&mut KvLayer> =
+                batch.iter_mut().map(|st| &mut st.kv.layers[i]).collect();
+            h = self.inner.rt.block_decode_batch(
+                &self.inner.fwd_key,
+                &h,
+                self.inner.decode_block(i),
+                &mut kv_refs,
+            )?;
+        }
+        // Scatter: one stacked head call — the logits kernel applies the
+        // final norm and the head GEMM per position independently, so
+        // row r equals the per-sequence (1, 1, d) call bit-for-bit.
+        let logits = self
+            .inner
+            .rt
+            .exec_fv(
+                &self.inner.logits_key,
+                &[
+                    (&h).into(),
+                    self.inner.model.ln_f().into(),
+                    self.inner.model.head().into(),
+                ],
+            )?
+            .remove(0);
+        let v = logits.data.len() / b;
+        for (r, st) in batch.iter_mut().enumerate() {
+            st.logits = logits.data[r * v..(r + 1) * v].to_vec();
+        }
         Ok(())
     }
 }

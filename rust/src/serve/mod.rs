@@ -8,16 +8,21 @@
 //! - [`engine`] — [`DecodeEngine`]: prefill once through the shared
 //!   block core, then one incremental `block_decode` per token, dense
 //!   or sparse-exec, bit-identical to the sliding window under the
-//!   oracle policy ([`generate_decoded`]).
+//!   oracle policy ([`generate_decoded`]). [`BatchedDecodeEngine`]
+//!   fuses the live batch's per-sequence GEMVs into one GEMM per
+//!   projection per layer (DESIGN.md §16), per-row bit-identical.
 //! - [`scheduler`] — [`run_trace`]: admit/retire sequences mid-batch
-//!   under the KV budget, replaying a seeded arrival trace;
+//!   under the KV budget, replaying a seeded arrival trace, stepping
+//!   per sequence or through the fused batch (`batch_gemm`);
 //!   [`run_trace_sliding`] is the measured baseline.
 
 pub mod engine;
 pub mod kv;
 pub mod scheduler;
 
-pub use engine::{generate_decoded, DecodeEngine, DecodeState};
+pub use engine::{
+    generate_decoded, BatchedDecodeEngine, DecodeEngine, DecodeState,
+};
 pub use kv::{seq_bytes, KvPool, SequenceKv, KV_PAGE_POSITIONS};
 pub use scheduler::{
     run_trace, run_trace_sliding, synthetic_trace, SeqOutcome, ServeConfig,

@@ -1,0 +1,296 @@
+//! The batched-decode parity wall (DESIGN.md §16): stacking the live
+//! batch's single-token rows into one `(B, 1, d)` step — a single GEMM
+//! per prunable projection — must be *bit-identical* per row to the
+//! per-sequence `block_decode` path under the oracle policy, at the
+//! kernel level (outputs and the K/V rows appended to each cache) and
+//! at the transcript level through the scheduler (`batch_gemm`), for
+//! dense weights and the packed sparse execution engine alike. Tiled
+//! policies trade bit-exactness for speed and are held to a relative
+//! tolerance instead.
+
+use wandapp::eval::EvalModel;
+use wandapp::model::{load_size, Weights};
+use wandapp::rng::Rng;
+use wandapp::runtime::{Backend, DecodeBlock, KernelPolicy};
+use wandapp::serve::kv::KvLayer;
+use wandapp::serve::{
+    run_trace, run_trace_sliding, seq_bytes, KvPool, ServeConfig,
+    TraceRequest,
+};
+use wandapp::sparsity::SparseModel;
+use wandapp::tensor::Tensor;
+
+fn backend(policy: KernelPolicy) -> Box<dyn Backend> {
+    let rt = wandapp::runtime::open(
+        concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"),
+        "native",
+    )
+    .expect("backend");
+    rt.set_kernel_policy(policy).expect("policy");
+    rt
+}
+
+fn random_tokens(n: usize, vocab: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::seed_from_u64(seed);
+    (0..n).map(|_| rng.gen_range(vocab.min(256)) as i32).collect()
+}
+
+/// Gather embedding rows for `toks` — the same lookup the engines do.
+fn embed_rows(emb: &[f32], toks: &[i32], d: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(toks.len() * d);
+    for &t in toks {
+        let o = t as usize * d;
+        out.extend_from_slice(&emb[o..o + d]);
+    }
+    out
+}
+
+// ---- kernel level: block_decode_batch vs B separate block_decode ----
+
+/// Prefill one cache per sequence at heterogeneous lengths, decode one
+/// fresh row per sequence both ways, and compare outputs and the
+/// appended K/V pages. `rtol == 0.0` demands bitwise equality (oracle);
+/// a positive `rtol` is the tiled-policy contract.
+fn assert_batched_matches_per_seq(
+    rt: &dyn Backend,
+    w: &Weights,
+    sparse: Option<&SparseModel>,
+    rtol: f32,
+) {
+    let cfg = &w.cfg;
+    let (d, t) = (cfg.d, cfg.seq);
+    let fwd_key = format!("{}_block_fwd_t{t}", cfg.name);
+    let blk = || match sparse {
+        Some(sm) => DecodeBlock::Sparse(&sm.blocks[0]),
+        None => DecodeBlock::Dense(w.block(0)),
+    };
+    let emb = &w.get("embed").data;
+    let pool = KvPool::unbounded();
+    // Heterogeneous positions, including the 1-row floor and the last
+    // slot before the context fills (t-1 cached + 1 fresh == t).
+    let lens = [1usize, 3, 7, t - 1];
+    let prefill_set = || -> Vec<KvLayer> {
+        lens.iter()
+            .enumerate()
+            .map(|(r, &p)| {
+                let mut kv = KvLayer::new(&pool, d);
+                let toks = random_tokens(p, cfg.vocab, 100 + r as u64);
+                let h =
+                    Tensor::new(vec![1, p, d], embed_rows(emb, &toks, d));
+                rt.block_prefill(&fwd_key, &h, blk(), &mut kv).unwrap();
+                kv
+            })
+            .collect()
+    };
+    // Two cache sets built by identical calls — bitwise-equal starting
+    // states for the two decode paths.
+    let mut per_seq = prefill_set();
+    let mut batched = prefill_set();
+
+    let rows: Vec<Vec<f32>> = (0..lens.len())
+        .map(|r| {
+            let tok = random_tokens(1, cfg.vocab, 200 + r as u64);
+            embed_rows(emb, &tok, d)
+        })
+        .collect();
+
+    let singles: Vec<Tensor> = rows
+        .iter()
+        .zip(per_seq.iter_mut())
+        .map(|(row, kv)| {
+            let x = Tensor::new(vec![1, 1, d], row.clone());
+            rt.block_decode(&fwd_key, &x, blk(), kv).unwrap()
+        })
+        .collect();
+
+    let stacked: Vec<f32> =
+        rows.iter().flat_map(|r| r.iter().copied()).collect();
+    let x = Tensor::new(vec![lens.len(), 1, d], stacked);
+    let mut refs: Vec<&mut KvLayer> = batched.iter_mut().collect();
+    let y = rt.block_decode_batch(&fwd_key, &x, blk(), &mut refs).unwrap();
+    assert_eq!(y.shape, vec![lens.len(), 1, d]);
+
+    for (r, single) in singles.iter().enumerate() {
+        let got = &y.data[r * d..(r + 1) * d];
+        if rtol == 0.0 {
+            assert_eq!(
+                got,
+                &single.data[..],
+                "batched row {r} (pos {}) diverged bitwise",
+                lens[r]
+            );
+        } else {
+            assert_close(got, &single.data, rtol, &format!("row {r}"));
+        }
+    }
+    for (r, (a, b)) in per_seq.iter().zip(batched.iter()).enumerate() {
+        assert_eq!(a.len(), b.len(), "seq {r} cache length");
+        assert_eq!(a.len(), lens[r] + 1, "seq {r} appended exactly one row");
+        let (ak, av) = a.pages();
+        let (bk, bv) = b.pages();
+        if rtol == 0.0 {
+            assert_eq!(ak, bk, "seq {r} K pages diverged");
+            assert_eq!(av, bv, "seq {r} V pages diverged");
+        } else {
+            for (pa, pb) in ak.iter().zip(&bk) {
+                assert_close(pa, pb, rtol, &format!("seq {r} K page"));
+            }
+            for (pa, pb) in av.iter().zip(&bv) {
+                assert_close(pa, pb, rtol, &format!("seq {r} V page"));
+            }
+        }
+    }
+}
+
+fn assert_close(a: &[f32], b: &[f32], rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = rtol * x.abs().max(y.abs()).max(1.0);
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: {x} vs {y} exceeds rtol {rtol}"
+        );
+    }
+}
+
+#[test]
+fn batched_block_decode_bitwise_dense() {
+    let rt = backend(KernelPolicy::Oracle);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    assert_batched_matches_per_seq(rt, &w, None, 0.0);
+}
+
+#[test]
+fn batched_block_decode_bitwise_sparse_exec() {
+    let rt = backend(KernelPolicy::Oracle);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    let sm = SparseModel::pack(&w);
+    assert_batched_matches_per_seq(rt, &w, Some(&sm), 0.0);
+}
+
+#[test]
+fn batched_block_decode_tiled_within_tolerance() {
+    let rt = backend(KernelPolicy::Tiled);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    assert_batched_matches_per_seq(rt, &w, None, 1e-3);
+}
+
+#[test]
+fn batched_block_decode_rejects_bad_shapes() {
+    let rt = backend(KernelPolicy::Oracle);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    let cfg = &w.cfg;
+    let (d, t) = (cfg.d, cfg.seq);
+    let fwd_key = format!("{}_block_fwd_t{t}", cfg.name);
+    // no sequences
+    let x = Tensor::new(vec![1, 1, d], vec![0.0; d]);
+    let err = rt
+        .block_decode_batch(&fwd_key, &x, DecodeBlock::Dense(w.block(0)), &mut [])
+        .unwrap_err();
+    assert!(err.to_string().contains("at least one sequence"), "{err}");
+    // row count disagrees with the cache count
+    let pool = KvPool::unbounded();
+    let mut kv = KvLayer::new(&pool, d);
+    let x2 = Tensor::new(vec![2, 1, d], vec![0.0; 2 * d]);
+    let err = rt
+        .block_decode_batch(
+            &fwd_key,
+            &x2,
+            DecodeBlock::Dense(w.block(0)),
+            &mut [&mut kv],
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("expects [1, 1,"), "{err}");
+}
+
+// ---- transcript level: run_trace --batch-gemm vs per-sequence ----
+
+/// Heterogeneous arrivals, prompt lengths, and generation quotas —
+/// including prompts at the context edge whose generations slide the
+/// window mid-batch, so retirement and re-prefill both happen while
+/// other sequences keep decoding through the fused GEMM.
+fn wall_trace(vocab: usize, ctx: usize) -> Vec<TraceRequest> {
+    let n_gens = [3usize, 9, 5, 12, 7, 4, 10];
+    let prompt_lens = [2usize, 5, ctx, 9, ctx - 2, 3, 17];
+    n_gens
+        .iter()
+        .zip(&prompt_lens)
+        .enumerate()
+        .map(|(id, (&n_gen, &pl))| TraceRequest {
+            id,
+            arrival_ms: id as f64 * 0.5,
+            prompt: random_tokens(pl, vocab, 300 + id as u64),
+            n_gen,
+            seed: 40 + id as u64,
+        })
+        .collect()
+}
+
+fn run_wall(rt: &dyn Backend, m: EvalModel<'_>) {
+    let cfg = m.cfg();
+    let trace = wall_trace(cfg.vocab, cfg.seq);
+    let budget = seq_bytes(cfg.n_layers, cfg.d, cfg.seq) * 8;
+    let mk = |max_batch: usize, batch_gemm: bool| ServeConfig {
+        kv_budget_bytes: budget,
+        max_batch,
+        temperature: 0.8,
+        batch_gemm,
+    };
+    let sliding = run_trace_sliding(rt, m, &trace, &mk(0, false)).unwrap();
+    for cap in [1usize, 2, 7, 16] {
+        let per_seq = run_trace(rt, m, &trace, &mk(cap, false)).unwrap();
+        let fused = run_trace(rt, m, &trace, &mk(cap, true)).unwrap();
+        assert_eq!(fused.outcomes.len(), trace.len());
+        assert_eq!(fused.total_tokens, per_seq.total_tokens);
+        if cap >= 2 {
+            // The batch really formed — the GEMM path saw B > 1 rows.
+            assert!(
+                fused.max_concurrent > 1,
+                "cap {cap}: expected overlapping sequences, got \
+                 max_concurrent {}",
+                fused.max_concurrent
+            );
+        }
+        for ((a, b), c) in fused
+            .outcomes
+            .iter()
+            .zip(&per_seq.outcomes)
+            .zip(&sliding.outcomes)
+        {
+            assert_eq!(a.id, b.id);
+            assert_eq!(
+                a.tokens, b.tokens,
+                "request {} transcript diverged between fused and \
+                 per-sequence decode (max_batch {cap})",
+                a.id
+            );
+            assert_eq!(
+                a.tokens, c.tokens,
+                "request {} fused transcript diverged from the sliding \
+                 baseline (max_batch {cap})",
+                a.id
+            );
+        }
+    }
+}
+
+#[test]
+fn batched_transcripts_match_per_sequence_dense() {
+    let rt = backend(KernelPolicy::Oracle);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    run_wall(rt, (&w).into());
+}
+
+#[test]
+fn batched_transcripts_match_per_sequence_sparse_exec() {
+    let rt = backend(KernelPolicy::Oracle);
+    let rt = rt.as_ref();
+    let w = load_size(rt, "s0").unwrap();
+    let sm = SparseModel::pack(&w);
+    run_wall(rt, (&sm).into());
+}

@@ -258,7 +258,12 @@ fn one_request(prompt_len: usize, n_gen: usize) -> Vec<TraceRequest> {
 }
 
 fn cfg_with_budget(budget: usize) -> ServeConfig {
-    ServeConfig { kv_budget_bytes: budget, max_batch: 0, temperature: 0.8 }
+    ServeConfig {
+        kv_budget_bytes: budget,
+        max_batch: 0,
+        temperature: 0.8,
+        batch_gemm: false,
+    }
 }
 
 #[test]

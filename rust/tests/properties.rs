@@ -465,6 +465,7 @@ fn prop_serve_respects_budget_and_retires_exactly_once() {
         kv_budget_bytes: budget,
         max_batch: 0,
         temperature: 0.8,
+        batch_gemm: false,
     };
     let cow_before = wandapp::tensor::deep_copied_bytes();
     let report = run_trace(rt, &w, &trace, &scfg).unwrap();
@@ -505,18 +506,22 @@ fn prop_serve_transcripts_independent_of_interleaving() {
     let cfg = &w.cfg;
     let trace = synthetic_trace(cfg.vocab, cfg.seq, 6, 5, 77);
     let seq_max = seq_bytes(cfg.n_layers, cfg.d, cfg.seq);
-    let mk = |budget: usize, max_batch: usize| ServeConfig {
+    let mk = |budget: usize, max_batch: usize, batch_gemm: bool| ServeConfig {
         kv_budget_bytes: budget,
         max_batch,
         temperature: 0.8,
+        batch_gemm,
     };
     let reference =
-        run_trace_sliding(rt, &w, &trace, &mk(64 * seq_max, 0)).unwrap();
+        run_trace_sliding(rt, &w, &trace, &mk(64 * seq_max, 0, false)).unwrap();
     for scfg in [
-        mk(64 * seq_max, 0), // everything batches at once
-        mk(64 * seq_max, 1), // strictly sequential admission
-        mk(64 * seq_max, 2),
-        mk(2 * seq_max, 0), // budget-throttled admission
+        mk(64 * seq_max, 0, false), // everything batches at once
+        mk(64 * seq_max, 1, false), // strictly sequential admission
+        mk(64 * seq_max, 2, false),
+        mk(2 * seq_max, 0, false), // budget-throttled admission
+        mk(64 * seq_max, 0, true), // batched GEMM, full concurrency
+        mk(64 * seq_max, 2, true), // batched GEMM, capped admission
+        mk(2 * seq_max, 0, true),  // batched GEMM, budget-throttled
     ] {
         let r = run_trace(rt, &w, &trace, &scfg).unwrap();
         assert_eq!(r.outcomes.len(), reference.outcomes.len());
