@@ -1,0 +1,351 @@
+//! In-tree invariant auditor behind `wandapp audit` (DESIGN.md §17).
+//!
+//! A hand-rolled, dependency-free static pass over the repo's own Rust
+//! sources: [`scan`] lexes each file into per-line code/comment
+//! channels with literal contents blanked, [`rules`] runs the six
+//! repo-specific line rules over them, and this module resolves
+//! per-site waivers and assembles the [`AuditReport`]. The contracts
+//! being policed — kernel-policy-independent scoring (DESIGN.md §13),
+//! bounded channel staging (§15), justified `unsafe`, explicit panic
+//! debt, Backend/Native method parity, and explicit accumulation
+//! order in the oracle kernels — were previously enforced only by
+//! convention and output-parity tests; this makes them machine-checked
+//! on every push.
+//!
+//! Waiver syntax (full policy in DESIGN.md §17): a line comment of the
+//! form `allow(<rule>[, <rule>])` prefixed with the `audit` marker and
+//! a colon, followed by a separator and a non-empty reason, placed on
+//! the flagged line or in the contiguous comment block directly above
+//! it. A waiver without a reason is itself a finding
+//! (**waiver-syntax**), and waivers that suppress nothing are listed
+//! as stale.
+//!
+//! The auditor audits itself: `rust/src/audit/` is scanned like any
+//! other module, which is why these sources spell rule tokens only
+//! inside string literals (the lexer blanks them).
+
+pub mod report;
+mod rules;
+mod scan;
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+pub use report::{
+    AuditCounts, AuditReport, Finding, Severity, UnsafeSite, UnusedWaiver,
+};
+
+/// A parsed waiver declaration (0-based comment line).
+struct WaiverDecl {
+    line: usize,
+    rules: Vec<String>,
+    /// Parsed but missing the mandatory reason: consulting it is a
+    /// waiver-syntax finding and it suppresses nothing.
+    reasonless: bool,
+    used: bool,
+}
+
+/// Per-file working state while the engine runs.
+struct FileWork {
+    rel: String,
+    fs: scan::FileScan,
+    decls: Vec<WaiverDecl>,
+    /// Lines whose comments contain the waiver marker but nothing
+    /// parseable after it.
+    malformed: Vec<usize>,
+    raws: Vec<rules::Raw>,
+    unsafes: Vec<rules::RawUnsafe>,
+}
+
+/// Audit a set of in-memory `(relative path, contents)` sources. This
+/// is the whole engine — `audit_tree` is a directory walk on top, and
+/// the fixture tests call this directly.
+pub fn audit_sources(files: &[(String, String)]) -> AuditReport {
+    let mut work: Vec<FileWork> = Vec::with_capacity(files.len());
+    let mut trait_decls: Vec<(String, usize)> = Vec::new();
+    let mut impl_names: Vec<String> = Vec::new();
+    for (rel, text) in files {
+        let fs = scan::scan_file(text, rules::watched_fns(rel));
+        let mut decls = Vec::new();
+        let mut malformed = Vec::new();
+        for (li, comment) in fs.comment.iter().enumerate() {
+            scan_waivers(comment, li, &mut decls, &mut malformed);
+        }
+        let (raws, unsafes) = rules::check_file(rel, &fs);
+        if rel == rules::TRAIT_FILE {
+            trait_decls = rules::trait_methods(&fs);
+        }
+        if rel == rules::IMPL_FILE {
+            impl_names = rules::impl_methods(&fs);
+        }
+        work.push(FileWork {
+            rel: rel.clone(),
+            fs,
+            decls,
+            malformed,
+            raws,
+            unsafes,
+        });
+    }
+
+    // backend-completeness: diff the trait and impl method sets and
+    // anchor each miss at the trait declaration line, so its waiver
+    // (and its fix) live next to the contract.
+    for (name, li) in &trait_decls {
+        if impl_names.iter().any(|n| n == name) {
+            continue;
+        }
+        if let Some(fw) = work.iter_mut().find(|w| w.rel == rules::TRAIT_FILE)
+        {
+            fw.raws.push(rules::Raw {
+                rule: "backend-completeness",
+                line: *li,
+                message: format!(
+                    "trait method `{name}` has no NativeBackend impl"
+                ),
+                severity: Severity::Error,
+            });
+        }
+    }
+
+    // Resolve waivers file by file.
+    let mut findings: Vec<Finding> = Vec::new();
+    let mut waived: Vec<Finding> = Vec::new();
+    let mut unsafe_sites: Vec<UnsafeSite> = Vec::new();
+    let mut unused_waivers: Vec<UnusedWaiver> = Vec::new();
+    for fw in &mut work {
+        for &li in &fw.malformed {
+            findings.push(Finding {
+                rule: "waiver-syntax",
+                file: fw.rel.clone(),
+                line: li + 1,
+                message:
+                    "unparseable waiver (expected allow(<rule>) + reason)"
+                        .into(),
+                severity: Severity::Error,
+            });
+        }
+        let mut reasonless_hit: BTreeSet<usize> = BTreeSet::new();
+        for raw in &fw.raws {
+            let covering = covering_decls(&fw.fs, &fw.decls, raw.line);
+            let mut suppressed = false;
+            for &di in &covering {
+                if fw.decls[di].reasonless {
+                    reasonless_hit.insert(fw.decls[di].line);
+                } else if fw.decls[di].rules.iter().any(|r| r == raw.rule) {
+                    fw.decls[di].used = true;
+                    suppressed = true;
+                }
+            }
+            let f = Finding {
+                rule: raw.rule,
+                file: fw.rel.clone(),
+                line: raw.line + 1,
+                message: raw.message.clone(),
+                severity: raw.severity,
+            };
+            if suppressed {
+                waived.push(f);
+            } else {
+                findings.push(f);
+            }
+        }
+        for li in reasonless_hit {
+            findings.push(Finding {
+                rule: "waiver-syntax",
+                file: fw.rel.clone(),
+                line: li + 1,
+                message: "waiver without a reason".into(),
+                severity: Severity::Error,
+            });
+        }
+        for d in &fw.decls {
+            if !d.reasonless && !d.used {
+                unused_waivers.push(UnusedWaiver {
+                    file: fw.rel.clone(),
+                    line: d.line + 1,
+                    rules: d.rules.clone(),
+                });
+            }
+        }
+        for u in &fw.unsafes {
+            unsafe_sites.push(UnsafeSite {
+                file: fw.rel.clone(),
+                line: u.line,
+                commented: u.commented,
+            });
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    waived.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    AuditReport {
+        files_scanned: files.len(),
+        findings,
+        waived,
+        unsafe_sites,
+        unused_waivers,
+    }
+}
+
+/// The marker opening a waiver comment. Assembled from pieces so the
+/// auditor's own sources never contain a bare waiver marker in a
+/// comment-adjacent string that a future grep could confuse; the
+/// concatenation is resolved at compile time.
+const MARKER: &str = concat!("audit", ":");
+
+/// Parse all waiver declarations out of one comment line.
+fn scan_waivers(
+    comment: &str,
+    li: usize,
+    decls: &mut Vec<WaiverDecl>,
+    malformed: &mut Vec<usize>,
+) {
+    if comment.contains(MARKER) && !comment.contains("allow(") {
+        malformed.push(li);
+    }
+    let mut s = comment;
+    while let Some(p) = s.find(MARKER) {
+        s = &s[p + MARKER.len()..];
+        let t = s.trim_start();
+        let Some(body) = t.strip_prefix("allow(") else {
+            continue;
+        };
+        let Some(close) = body.find(')') else {
+            continue;
+        };
+        let rule_list: Vec<String> = body[..close]
+            .split(',')
+            .map(|r| r.trim().to_string())
+            .filter(|r| !r.is_empty())
+            .collect();
+        let reason = body[close + 1..]
+            .trim_start()
+            .trim_start_matches(['—', '–', '-', ':', ' '])
+            .trim();
+        decls.push(WaiverDecl {
+            line: li,
+            rules: rule_list,
+            reasonless: reason.chars().count() < 3,
+            used: false,
+        });
+        s = &body[close + 1..];
+    }
+}
+
+/// Indices of the waiver declarations covering `li` (0-based): a
+/// same-line comment, or any declaration inside the contiguous
+/// comment-only block directly above the line.
+fn covering_decls(
+    fs: &scan::FileScan,
+    decls: &[WaiverDecl],
+    li: usize,
+) -> Vec<usize> {
+    let mut lines: BTreeSet<usize> = BTreeSet::new();
+    lines.insert(li);
+    let mut j = li;
+    while j > 0 {
+        j -= 1;
+        let code_blank = fs.code[j].trim().is_empty();
+        let comment_present = !fs.comment[j].trim().is_empty();
+        if code_blank && comment_present {
+            lines.insert(j);
+        } else {
+            break;
+        }
+    }
+    decls
+        .iter()
+        .enumerate()
+        .filter(|(_, d)| lines.contains(&d.line))
+        .map(|(i, _)| i)
+        .collect()
+}
+
+/// Audit the on-disk source tree under `root`, which may be the
+/// workspace root (containing `rust/src`) or the crate directory
+/// (containing `src` next to `Cargo.toml`). Scans `src`, `tests`,
+/// `benches`, and `examples`, in sorted path order.
+pub fn audit_tree(root: &Path) -> Result<AuditReport> {
+    let crate_dir = resolve_root(root).ok_or_else(|| {
+        anyhow!(
+            "no Rust source tree under {} (expected rust/src or src)",
+            root.display()
+        )
+    })?;
+    let mut rels: Vec<String> = Vec::new();
+    for sub in ["src", "tests", "benches", "examples"] {
+        collect_rs(&crate_dir.join(sub), &crate_dir, &mut rels)?;
+    }
+    rels.sort();
+    let mut files = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let text = std::fs::read_to_string(crate_dir.join(&rel))
+            .with_context(|| format!("audit: reading {rel}"))?;
+        files.push((rel, text));
+    }
+    Ok(audit_sources(&files))
+}
+
+/// Map `root` to the crate directory holding `src/`, accepting either
+/// the workspace root or the crate itself.
+pub fn resolve_root(root: &Path) -> Option<PathBuf> {
+    let nested = root.join("rust");
+    if nested.join("src").is_dir() {
+        return Some(nested);
+    }
+    if root.join("src").is_dir() && root.join("Cargo.toml").is_file() {
+        return Some(root.to_path_buf());
+    }
+    None
+}
+
+/// Find an auditable tree from the current directory upward (a few
+/// levels, so `cargo run` from the workspace root, the crate dir, or a
+/// test working directory all resolve). Used by the bench harness to
+/// fold audit counters into the trajectory opportunistically.
+pub fn discover_root() -> Option<PathBuf> {
+    let mut dir = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        if resolve_root(&dir).is_some() {
+            return Some(dir);
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    None
+}
+
+/// Recursively collect `.rs` files under `dir` as `/`-separated paths
+/// relative to `base`, in sorted order. Missing subtrees (no
+/// `examples/`, say) are fine.
+fn collect_rs(dir: &Path, base: &Path, out: &mut Vec<String>) -> Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("audit: listing {}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, base, out)?;
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = p.strip_prefix(base).map_err(|_| {
+                anyhow!("audit: {} escapes {}", p.display(), base.display())
+            })?;
+            let mut s = String::new();
+            for comp in rel.components() {
+                if !s.is_empty() {
+                    s.push('/');
+                }
+                s.push_str(&comp.as_os_str().to_string_lossy());
+            }
+            out.push(s);
+        }
+    }
+    Ok(())
+}

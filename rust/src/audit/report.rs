@@ -1,0 +1,285 @@
+//! Audit results: findings, waiver accounting, the unsafe inventory,
+//! and the two output formats (human text, streamed JSON).
+//!
+//! The JSON document (`schema: 1`) goes through
+//! [`crate::json::JsonStream`] — same zero-tree emission path as the
+//! bench trajectory — so `wandapp audit --json` can be piped straight
+//! into tooling:
+//!
+//! ```json
+//! {
+//!   "schema": 1, "files_scanned": 40,
+//!   "errors": 0, "warnings": 0, "waived": 17,
+//!   "rules": {"oracle-only-scoring": {"findings": 0, "waived": 0}, ...},
+//!   "findings": [{"rule": ..., "severity": ..., "file": ...,
+//!                 "line": ..., "message": ...}],
+//!   "waivers": [{"rule": ..., "file": ..., "line": ...}],
+//!   "unsafe_sites": [{"file": ..., "line": ..., "commented": true}],
+//!   "unused_waivers": [{"file": ..., "line": ..., "rules": [...]}]
+//! }
+//! ```
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use super::rules::RULES;
+use crate::json::JsonStream;
+
+/// Finding severity. Errors always fail the audit; warnings fail only
+/// under `--deny-warnings` (which is how CI runs it, so the shipped
+/// tree must fix or waive everything).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One rule hit, 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+    pub severity: Severity,
+}
+
+/// One `unsafe` occurrence, 1-based line (inventoried whether or not
+/// it carries a SAFETY comment).
+#[derive(Clone, Debug)]
+pub struct UnsafeSite {
+    pub file: String,
+    pub line: usize,
+    pub commented: bool,
+}
+
+/// A waiver comment that suppressed nothing — reported so stale
+/// waivers surface when the underlying site gets fixed (informational;
+/// it never fails the audit).
+#[derive(Clone, Debug)]
+pub struct UnusedWaiver {
+    pub file: String,
+    pub line: usize,
+    pub rules: Vec<String>,
+}
+
+/// The complete result of one audit run.
+pub struct AuditReport {
+    pub files_scanned: usize,
+    /// Unwaived rule hits, sorted by (file, line).
+    pub findings: Vec<Finding>,
+    /// Hits suppressed by a waiver — the explicit, countable debt.
+    pub waived: Vec<Finding>,
+    pub unsafe_sites: Vec<UnsafeSite>,
+    pub unused_waivers: Vec<UnusedWaiver>,
+}
+
+/// Flat counters for folding into the bench trajectory
+/// (`BENCH_<date>.json` gets an `audit` section; recorded, not gated).
+#[derive(Clone, Copy, Debug)]
+pub struct AuditCounts {
+    pub errors: usize,
+    pub warnings: usize,
+    pub waiver_count: usize,
+    pub unsafe_sites: usize,
+    pub unused_waivers: usize,
+}
+
+impl AuditReport {
+    pub fn error_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| f.severity == Severity::Warning)
+            .count()
+    }
+
+    pub fn waiver_count(&self) -> usize {
+        self.waived.len()
+    }
+
+    /// Pass/fail verdict: errors always fail; warnings fail only when
+    /// denied.
+    pub fn ok(&self, deny_warnings: bool) -> bool {
+        self.error_count() == 0
+            && (!deny_warnings || self.warning_count() == 0)
+    }
+
+    pub fn counts(&self) -> AuditCounts {
+        AuditCounts {
+            errors: self.error_count(),
+            warnings: self.warning_count(),
+            waiver_count: self.waiver_count(),
+            unsafe_sites: self.unsafe_sites.len(),
+            unused_waivers: self.unused_waivers.len(),
+        }
+    }
+
+    /// Per-rule (findings, waived) counts in [`RULES`] order.
+    fn rule_counts(&self) -> Vec<(&'static str, usize, usize)> {
+        RULES
+            .iter()
+            .map(|&(rule, _)| {
+                let hits =
+                    self.findings.iter().filter(|f| f.rule == rule).count();
+                let waived =
+                    self.waived.iter().filter(|f| f.rule == rule).count();
+                (rule, hits, waived)
+            })
+            .collect()
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "wandapp audit: {} files scanned\n",
+            self.files_scanned
+        ));
+        out.push_str(&format!(
+            "  {:<26} {:>8} {:>7}\n",
+            "rule", "findings", "waived"
+        ));
+        for (rule, hits, waived) in self.rule_counts() {
+            out.push_str(&format!("  {rule:<26} {hits:>8} {waived:>7}\n"));
+        }
+        if !self.findings.is_empty() {
+            out.push_str("findings:\n");
+            for f in &self.findings {
+                out.push_str(&format!(
+                    "  {:<7} {}:{}  [{}] {}\n",
+                    f.severity.as_str(),
+                    f.file,
+                    f.line,
+                    f.rule,
+                    f.message
+                ));
+            }
+        }
+        let commented =
+            self.unsafe_sites.iter().filter(|s| s.commented).count();
+        out.push_str(&format!(
+            "unsafe inventory: {} site(s), {} SAFETY-commented\n",
+            self.unsafe_sites.len(),
+            commented
+        ));
+        for s in &self.unsafe_sites {
+            out.push_str(&format!(
+                "  {}:{}{}\n",
+                s.file,
+                s.line,
+                if s.commented { "" } else { "  (uncommented)" }
+            ));
+        }
+        if !self.unused_waivers.is_empty() {
+            out.push_str("unused waivers (stale — consider removing):\n");
+            for w in &self.unused_waivers {
+                out.push_str(&format!(
+                    "  {}:{} [{}]\n",
+                    w.file,
+                    w.line,
+                    w.rules.join(", ")
+                ));
+            }
+        }
+        out.push_str(&format!(
+            "summary: {} error(s), {} warning(s), {} waived\n",
+            self.error_count(),
+            self.warning_count(),
+            self.waiver_count()
+        ));
+        out
+    }
+
+    /// Stream the machine-readable report into `w`.
+    pub fn write_json<W: Write>(&self, w: W) -> Result<()> {
+        let mut j = JsonStream::new(w);
+        j.begin_obj()?;
+        j.num_field("schema", 1.0)?;
+        j.num_field("files_scanned", self.files_scanned as f64)?;
+        j.num_field("errors", self.error_count() as f64)?;
+        j.num_field("warnings", self.warning_count() as f64)?;
+        j.num_field("waived", self.waiver_count() as f64)?;
+        j.key("rules")?;
+        j.begin_obj()?;
+        for (rule, hits, waived) in self.rule_counts() {
+            j.key(rule)?;
+            j.begin_obj()?;
+            j.num_field("findings", hits as f64)?;
+            j.num_field("waived", waived as f64)?;
+            j.end_obj()?;
+        }
+        j.end_obj()?;
+        j.key("findings")?;
+        j.begin_arr()?;
+        for f in &self.findings {
+            finding_json(&mut j, f)?;
+        }
+        j.end_arr()?;
+        j.key("waivers")?;
+        j.begin_arr()?;
+        for f in &self.waived {
+            j.begin_obj()?;
+            j.str_field("rule", f.rule)?;
+            j.str_field("file", &f.file)?;
+            j.num_field("line", f.line as f64)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+        j.key("unsafe_sites")?;
+        j.begin_arr()?;
+        for s in &self.unsafe_sites {
+            j.begin_obj()?;
+            j.str_field("file", &s.file)?;
+            j.num_field("line", s.line as f64)?;
+            j.bool_field("commented", s.commented)?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+        j.key("unused_waivers")?;
+        j.begin_arr()?;
+        for uw in &self.unused_waivers {
+            j.begin_obj()?;
+            j.str_field("file", &uw.file)?;
+            j.num_field("line", uw.line as f64)?;
+            j.key("rules")?;
+            j.begin_arr()?;
+            for r in &uw.rules {
+                j.str_val(r)?;
+            }
+            j.end_arr()?;
+            j.end_obj()?;
+        }
+        j.end_arr()?;
+        j.end_obj()?;
+        j.finish()?;
+        Ok(())
+    }
+}
+
+fn finding_json<W: Write>(j: &mut JsonStream<W>, f: &Finding) -> Result<()> {
+    j.begin_obj()?;
+    j.str_field("rule", f.rule)?;
+    j.str_field("severity", f.severity.as_str())?;
+    j.str_field("file", &f.file)?;
+    j.num_field("line", f.line as f64)?;
+    j.str_field("message", &f.message)?;
+    j.end_obj()?;
+    Ok(())
+}

@@ -1,0 +1,279 @@
+//! The repo-specific invariant rules (DESIGN.md §17).
+//!
+//! Each rule is a line check over a [`FileScan`] plus a scope table
+//! saying where it applies. The scopes are deliberately written down
+//! here as data — when a module moves, the table is the one place to
+//! update, and the `real_tree_audits_clean` test fails loudly if a
+//! rename silently empties a scope.
+//!
+//! Rule inventory (severities in [`RULES`]):
+//!
+//! * **oracle-only-scoring** — the Wanda++ score/RO path must be
+//!   bit-exact regardless of `--kernels` (DESIGN.md §13), so scoring
+//!   scope must never name the kernel-policy dispatch surface. Scope:
+//!   all of `pruner/`, `coordinator/`, `linalg/`, the native model
+//!   oracle, and the watched grad/RO kernel functions inside the
+//!   native backend files that legitimately mix in forward-path
+//!   dispatch elsewhere.
+//! * **no-unbounded-channels** — the pipeline and scheduler arguments
+//!   rely on bounded staging (DESIGN.md §15); `mpsc::channel()` has no
+//!   backpressure and `sync_channel(0)` is a rendezvous that deadlocks
+//!   single-threaded stages. Scope: every scanned file.
+//! * **safety-commented-unsafe** — every `unsafe` needs an adjacent
+//!   `SAFETY:` comment (within three lines above or on the line); all
+//!   sites are additionally reported as an inventory.
+//! * **no-panic-in-library** *(warning)* — `.unwrap()` / `.expect()` /
+//!   `panic!` outside `main.rs`, test/bench/example trees, and
+//!   `#[cfg(test)]` spans. Waivers make the residual debt explicit,
+//!   countable, and justified in place.
+//! * **backend-completeness** — the method set of `pub trait Backend`
+//!   minus the method set of `impl Backend for NativeBackend` must be
+//!   empty (the native backend is the always-available reference);
+//!   pjrt-only escape hatches carry waivers at the trait declaration.
+//! * **float-determinism** — no `mul_add` and no float-iterator
+//!   `.sum()` / `.product()` in the oracle kernel files, where the
+//!   explicit accumulation order *is* the bit-exactness argument.
+//!   Integer turbofish reductions (`.sum::<usize>()`) pass.
+
+use super::report::Severity;
+use super::scan::{collect_block_fns, idents, method_calls, FileScan};
+
+/// Rule names with their severities, in report order.
+pub const RULES: [(&str, Severity); 7] = [
+    ("oracle-only-scoring", Severity::Error),
+    ("no-unbounded-channels", Severity::Error),
+    ("safety-commented-unsafe", Severity::Error),
+    ("no-panic-in-library", Severity::Warning),
+    ("backend-completeness", Severity::Error),
+    ("float-determinism", Severity::Error),
+    ("waiver-syntax", Severity::Error),
+];
+
+/// Whole directories in oracle-only-scoring scope (path-prefix match).
+const ORACLE_PREFIXES: [&str; 3] =
+    ["src/pruner/", "src/coordinator/", "src/linalg/"];
+
+/// Whole files in oracle-only-scoring scope.
+const ORACLE_EXACT: [&str; 1] = ["src/runtime/native/model.rs"];
+
+/// Files where only specific functions are in scoring scope: the
+/// native backend mixes the policy-dispatched forward path with the
+/// grad/RO kernels in one module, so the rule watches the kernel
+/// function bodies instead of the whole file.
+pub fn watched_fns(rel: &str) -> &'static [&'static str] {
+    match rel {
+        "src/runtime/native/block.rs" => {
+            &["block_backward", "site_squares", "site_sums", "site_grams"]
+        }
+        "src/runtime/native/mod.rs" => &["ro_step"],
+        "src/runtime/native/math.rs" => &["rmsprop_update"],
+        _ => &[],
+    }
+}
+
+/// Oracle kernel files policed by float-determinism.
+const FLOAT_FILES: [&str; 5] = [
+    "src/runtime/native/math.rs",
+    "src/runtime/native/block.rs",
+    "src/runtime/native/model.rs",
+    "src/runtime/native/sparse.rs",
+    "src/runtime/native/mod.rs",
+];
+
+/// Integer turbofish types whose `.sum()` / `.product()` reductions
+/// are exact and therefore exempt from float-determinism.
+const INT_TYPES: [&str; 12] = [
+    "u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64",
+    "i128", "isize",
+];
+
+/// Identifier sequence opening the Backend trait block.
+pub const TRAIT_HEADER: [&str; 3] = ["pub", "trait", "Backend"];
+
+/// Identifier sequence opening the native Backend impl block.
+pub const IMPL_HEADER: [&str; 4] = ["impl", "Backend", "for", "NativeBackend"];
+
+/// The file holding `pub trait Backend` (findings anchor there).
+pub const TRAIT_FILE: &str = "src/runtime/mod.rs";
+
+/// The file holding `impl Backend for NativeBackend`.
+pub const IMPL_FILE: &str = "src/runtime/native/mod.rs";
+
+/// A rule hit before waiver resolution (0-based line).
+pub struct Raw {
+    pub rule: &'static str,
+    pub line: usize,
+    pub message: String,
+    pub severity: Severity,
+}
+
+impl Raw {
+    fn new(
+        rule: &'static str,
+        line: usize,
+        message: impl Into<String>,
+        severity: Severity,
+    ) -> Self {
+        Self {
+            rule,
+            line,
+            message: message.into(),
+            severity,
+        }
+    }
+}
+
+/// An `unsafe` occurrence (1-based line), commented or not — the full
+/// inventory goes into the report either way.
+pub struct RawUnsafe {
+    pub line: usize,
+    pub commented: bool,
+}
+
+/// Run every per-line rule over one scanned file. Waiver resolution
+/// happens later in the engine; this only produces raw hits.
+pub fn check_file(rel: &str, fs: &FileScan) -> (Vec<Raw>, Vec<RawUnsafe>) {
+    let mut raws = Vec::new();
+    let mut unsafes = Vec::new();
+    let in_library = rel.starts_with("src/") && rel != "src/main.rs";
+    let oracle_file = ORACLE_PREFIXES.iter().any(|p| rel.starts_with(p))
+        || ORACLE_EXACT.contains(&rel);
+    let float_file = FLOAT_FILES.contains(&rel);
+    for (li, codeln) in fs.code.iter().enumerate() {
+        let ids = idents(codeln);
+
+        // no-unbounded-channels: whitespace-stripped so formatting
+        // can't hide a call split across spaces.
+        let flat: String =
+            codeln.chars().filter(|c| !c.is_whitespace()).collect();
+        if flat.contains("mpsc::channel") {
+            raws.push(Raw::new(
+                "no-unbounded-channels",
+                li,
+                "unbounded mpsc::channel (use sync_channel with a bound)",
+                Severity::Error,
+            ));
+        }
+        if flat.contains("sync_channel(0)") {
+            raws.push(Raw::new(
+                "no-unbounded-channels",
+                li,
+                "rendezvous sync_channel(0) (stages must buffer >= 1)",
+                Severity::Error,
+            ));
+        }
+
+        // safety-commented-unsafe + the unsafe inventory.
+        if ids.iter().any(|&(_, s)| s == "unsafe") {
+            let lo = li.saturating_sub(3);
+            let commented = fs.comment[lo..=li]
+                .iter()
+                .any(|c| c.contains("SAFETY:"));
+            unsafes.push(RawUnsafe {
+                line: li + 1,
+                commented,
+            });
+            if !commented {
+                raws.push(Raw::new(
+                    "safety-commented-unsafe",
+                    li,
+                    "unsafe without an adjacent SAFETY: comment",
+                    Severity::Error,
+                ));
+            }
+        }
+
+        // no-panic-in-library.
+        if in_library && !fs.in_test[li] {
+            for _ in method_calls(codeln, "unwrap") {
+                raws.push(Raw::new(
+                    "no-panic-in-library",
+                    li,
+                    ".unwrap() in library code",
+                    Severity::Warning,
+                ));
+            }
+            for _ in method_calls(codeln, "expect") {
+                raws.push(Raw::new(
+                    "no-panic-in-library",
+                    li,
+                    ".expect() in library code",
+                    Severity::Warning,
+                ));
+            }
+            let has_panic = ids.iter().any(|&(pos, s)| {
+                s == "panic" && codeln.as_bytes().get(pos + 5) == Some(&b'!')
+            });
+            if has_panic {
+                raws.push(Raw::new(
+                    "no-panic-in-library",
+                    li,
+                    "panic! in library code",
+                    Severity::Warning,
+                ));
+            }
+        }
+
+        // oracle-only-scoring: one hit per line is enough.
+        if oracle_file || fs.watched[li] {
+            for &(_, id) in &ids {
+                let banned = id == "KernelPolicy"
+                    || id == "use_tiled"
+                    || id == "tiled"
+                    || id.ends_with("_policy")
+                    || id.ends_with("_tiled");
+                if banned {
+                    raws.push(Raw::new(
+                        "oracle-only-scoring",
+                        li,
+                        format!(
+                            "policy/tiled reference `{id}` in scoring scope"
+                        ),
+                        Severity::Error,
+                    ));
+                    break;
+                }
+            }
+        }
+
+        // float-determinism.
+        if float_file && !fs.in_test[li] {
+            if ids.iter().any(|&(_, s)| s == "mul_add") {
+                raws.push(Raw::new(
+                    "float-determinism",
+                    li,
+                    "mul_add in an oracle kernel file",
+                    Severity::Error,
+                ));
+            }
+            for name in ["sum", "product"] {
+                for ty in method_calls(codeln, name) {
+                    if ty.is_some_and(|t| INT_TYPES.contains(&t)) {
+                        continue;
+                    }
+                    raws.push(Raw::new(
+                        "float-determinism",
+                        li,
+                        format!(".{name}() reduction in an oracle kernel file"),
+                        Severity::Error,
+                    ));
+                }
+            }
+        }
+    }
+    (raws, unsafes)
+}
+
+/// Method set of the Backend trait block in `src/runtime/mod.rs`,
+/// as `(name, 0-based decl line)`.
+pub fn trait_methods(fs: &FileScan) -> Vec<(String, usize)> {
+    collect_block_fns(&fs.code, &TRAIT_HEADER)
+}
+
+/// Method names implemented by `impl Backend for NativeBackend`.
+pub fn impl_methods(fs: &FileScan) -> Vec<String> {
+    collect_block_fns(&fs.code, &IMPL_HEADER)
+        .into_iter()
+        .map(|(n, _)| n)
+        .collect()
+}

@@ -1,0 +1,536 @@
+//! Line-oriented Rust source scanner for the invariant auditor
+//! (DESIGN.md §17).
+//!
+//! This is not a parser. Each file is split into per-line `(code,
+//! comment)` pairs by a small lexer that strips comments out of the
+//! code channel and blanks string/char literal *contents* (the quotes
+//! stay, so column positions survive): line rules can then match
+//! identifiers and call sites without tripping on prose or test
+//! fixtures embedded in string literals. A second pass tracks brace
+//! depth over the code channel to mark `#[cfg(test)]` spans (exempt
+//! from the library-panic rule) and the bodies of *watched functions*
+//! (the native grad/RO kernels policed by the oracle-only-scoring
+//! rule).
+//!
+//! The lexer understands exactly the token shapes that appear in this
+//! tree: `//`-family line comments, nested `/* */` block comments,
+//! plain/byte strings with escapes (including `\`-continued multi-line
+//! strings — the continuation still emits a line break, so line
+//! numbers never drift), raw strings `r#"…"#`, and char literals
+//! versus lifetimes (`'a'` versus `'a`). Anything fancier is outside
+//! the dialect this repo writes.
+
+/// One scanned file: parallel per-line channels plus span flags.
+pub struct FileScan {
+    /// Code text with comments removed and literal contents blanked.
+    pub code: Vec<String>,
+    /// Comment text (line + block), with `//` / `/*` delimiters dropped.
+    pub comment: Vec<String>,
+    /// Line is inside a `#[cfg(test)]` module or function.
+    pub in_test: Vec<bool>,
+    /// Line is inside the body of a watched function.
+    pub watched: Vec<bool>,
+}
+
+/// Scan one file: lex into channels, then mark test and watched-fn
+/// spans. `watched_fns` are the function names whose bodies the
+/// oracle-only-scoring rule polices in this file.
+pub fn scan_file(text: &str, watched_fns: &[&str]) -> FileScan {
+    let (code, comment) = lex(text);
+    let (in_test, watched) = spans(&code, watched_fns);
+    FileScan {
+        code,
+        comment,
+        in_test,
+        watched,
+    }
+}
+
+#[derive(Clone, Copy)]
+enum LexState {
+    Code,
+    LineComment,
+    /// Block comment with its nesting depth.
+    Block(u32),
+    Str,
+    /// Raw string with its `#` fence count.
+    RawStr(usize),
+}
+
+/// Split `text` into per-line `(code, comment)` channels.
+fn lex(text: &str) -> (Vec<String>, Vec<String>) {
+    let cs: Vec<char> = text.chars().collect();
+    let n = cs.len();
+    let mut codes = Vec::new();
+    let mut comments = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = LexState::Code;
+    let mut i = 0usize;
+    while i < n {
+        let c = cs[i];
+        let next = cs.get(i + 1).copied();
+        if c == '\n' {
+            if matches!(state, LexState::LineComment) {
+                state = LexState::Code;
+            }
+            codes.push(std::mem::take(&mut code));
+            comments.push(std::mem::take(&mut comment));
+            i += 1;
+            continue;
+        }
+        match state {
+            LexState::Code => {
+                if c == '/' && next == Some('/') {
+                    state = LexState::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = LexState::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Str;
+                    i += 1;
+                } else if c == 'r' || (c == 'b' && next == Some('r')) {
+                    // Candidate raw (byte) string: r"…", r#"…"#, br"…".
+                    let mut j = i + if c == 'r' { 1 } else { 2 };
+                    let mut h = 0usize;
+                    while cs.get(j) == Some(&'#') {
+                        h += 1;
+                        j += 1;
+                    }
+                    if cs.get(j) == Some(&'"') {
+                        code.push(c);
+                        if c == 'b' {
+                            code.push('r');
+                        }
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        code.push('"');
+                        state = LexState::RawStr(h);
+                        i = j + 1;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    if next == Some('\\') {
+                        // Escaped char literal: blank the body.
+                        code.push_str("' '");
+                        i += 2;
+                        while i < n && cs[i] != '\'' && cs[i] != '\n' {
+                            i += 1;
+                        }
+                        if i < n && cs[i] == '\'' {
+                            i += 1;
+                        }
+                    } else if next.is_some()
+                        && next != Some('\'')
+                        && cs.get(i + 2) == Some(&'\'')
+                    {
+                        // Plain one-char literal 'x'.
+                        code.push_str("' '");
+                        i += 3;
+                    } else {
+                        // Lifetime / loop label: keep the tick.
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            LexState::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            LexState::Block(d) => {
+                if c == '/' && next == Some('*') {
+                    state = LexState::Block(d + 1);
+                    comment.push_str("/*");
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    if d == 1 {
+                        state = LexState::Code;
+                    } else {
+                        state = LexState::Block(d - 1);
+                        comment.push_str("*/");
+                    }
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            LexState::Str => {
+                if c == '\\' {
+                    code.push(' ');
+                    if next == Some('\n') {
+                        // `\`-continued string: the source line still
+                        // ends here — emit the break or every later
+                        // line number in the file drifts.
+                        codes.push(std::mem::take(&mut code));
+                        comments.push(std::mem::take(&mut comment));
+                    } else {
+                        code.push(' ');
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = LexState::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            LexState::RawStr(h) => {
+                let fenced =
+                    (0..h).all(|k| cs.get(i + 1 + k) == Some(&'#'));
+                if c == '"' && fenced {
+                    code.push('"');
+                    for _ in 0..h {
+                        code.push('#');
+                    }
+                    state = LexState::Code;
+                    i += 1 + h;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    codes.push(code);
+    comments.push(comment);
+    (codes, comments)
+}
+
+/// Brace-depth pass over the code channel: mark `#[cfg(test)]` spans
+/// and watched-fn bodies. A `#[cfg(test)]` attribute arms a pending
+/// flag that the next `mod`/`fn` item's opening brace consumes; a
+/// watched `fn` name arms a pending span opened by its body brace.
+/// (A one-line `fn f() { … }` body is never marked — the watched
+/// kernels are all multi-line, and the waiver syntax covers any future
+/// exception.)
+fn spans(codes: &[String], watched_fns: &[&str]) -> (Vec<bool>, Vec<bool>) {
+    enum Span {
+        Plain,
+        Test,
+        WatchedFn,
+    }
+    let mut in_test = vec![false; codes.len()];
+    let mut watched = vec![false; codes.len()];
+    let mut pending_test = false;
+    let mut pending_test_fn = false;
+    let mut pending_fn = false;
+    let mut stack: Vec<Span> = Vec::new();
+    let mut test_depth = 0usize;
+    let mut fn_depth = 0usize;
+    for (li, codeln) in codes.iter().enumerate() {
+        if codeln.contains("#[cfg(test)]") || codeln.contains("cfg(all(test")
+        {
+            pending_test = true;
+        }
+        let ids = idents(codeln);
+        if let Some(name) = fn_decl_name(codeln) {
+            if pending_test {
+                pending_test_fn = true;
+            }
+            if watched_fns.contains(&name) {
+                pending_fn = true;
+            }
+        }
+        let pending_test_mod = if pending_test
+            && ids.iter().any(|&(_, s)| s == "mod")
+        {
+            pending_test_fn = false;
+            true
+        } else {
+            false
+        };
+        if test_depth > 0 {
+            in_test[li] = true;
+        }
+        if fn_depth > 0 {
+            watched[li] = true;
+        }
+        let mut opened_any = false;
+        for ch in codeln.chars() {
+            if ch == '{' {
+                if pending_test && (pending_test_mod || pending_test_fn) {
+                    stack.push(Span::Test);
+                    test_depth += 1;
+                    pending_test = false;
+                    pending_test_fn = false;
+                } else if pending_fn {
+                    stack.push(Span::WatchedFn);
+                    fn_depth += 1;
+                    pending_fn = false;
+                } else {
+                    stack.push(Span::Plain);
+                }
+                opened_any = true;
+                if test_depth > 0 {
+                    in_test[li] = true;
+                }
+            } else if ch == '}' {
+                match stack.pop() {
+                    Some(Span::Test) => {
+                        test_depth = test_depth.saturating_sub(1);
+                    }
+                    Some(Span::WatchedFn) => {
+                        fn_depth = fn_depth.saturating_sub(1);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        // An attribute consumed by a braceless item (`use x;`,
+        // `const X: _ = …;`) stops waiting for a block.
+        let t = codeln.trim();
+        if pending_test && !opened_any && t.ends_with(';') && !t.starts_with('#')
+        {
+            pending_test = false;
+        }
+        if test_depth > 0 {
+            in_test[li] = true;
+        }
+        if fn_depth > 0 {
+            watched[li] = true;
+        }
+    }
+    (in_test, watched)
+}
+
+/// ASCII identifiers in a code line with their byte offsets (keywords
+/// included — callers filter).
+pub fn idents(codeln: &str) -> Vec<(usize, &str)> {
+    let b = codeln.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let start = i;
+            i += 1;
+            while i < b.len()
+                && (b[i] == b'_' || b[i].is_ascii_alphanumeric())
+            {
+                i += 1;
+            }
+            out.push((start, &codeln[start..i]));
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// The name declared by the first `fn <name>` on the line, if any.
+pub fn fn_decl_name(codeln: &str) -> Option<&str> {
+    let ids = idents(codeln);
+    for (k, &(pos, s)) in ids.iter().enumerate() {
+        if s != "fn" {
+            continue;
+        }
+        if let Some(&(npos, name)) = ids.get(k + 1) {
+            let between = &codeln[pos + 2..npos];
+            if !between.is_empty()
+                && between.chars().all(|c| c.is_ascii_whitespace())
+            {
+                return Some(name);
+            }
+        }
+    }
+    None
+}
+
+/// Method-call sites `.name(…)` on a code line (whitespace tolerated
+/// around the dot and parens). Each hit yields the single-identifier
+/// turbofish type if one was written — `.sum::<usize>(…)` reports
+/// `Some("usize")`, plain `.sum(…)` reports `None` — so the
+/// float-determinism rule can pass integer reductions through.
+pub fn method_calls<'a>(codeln: &'a str, name: &str) -> Vec<Option<&'a str>> {
+    let b = codeln.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] != b'.' {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        while j < b.len() && b[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        let matches_name =
+            codeln.get(j..).is_some_and(|rest| rest.starts_with(name));
+        if !matches_name {
+            i += 1;
+            continue;
+        }
+        let mut k = j + name.len();
+        while k < b.len() && b[k].is_ascii_whitespace() {
+            k += 1;
+        }
+        let mut ty = None;
+        if codeln.get(k..).is_some_and(|r| r.starts_with("::<")) {
+            let mut m = k + 3;
+            while m < b.len() && b[m].is_ascii_whitespace() {
+                m += 1;
+            }
+            let ts = m;
+            while m < b.len()
+                && (b[m] == b'_' || b[m].is_ascii_alphanumeric())
+            {
+                m += 1;
+            }
+            let te = m;
+            while m < b.len() && b[m].is_ascii_whitespace() {
+                m += 1;
+            }
+            if te == ts || m >= b.len() || b[m] != b'>' {
+                // Not a simple one-identifier turbofish; no match here.
+                i += 1;
+                continue;
+            }
+            m += 1;
+            while m < b.len() && b[m].is_ascii_whitespace() {
+                m += 1;
+            }
+            ty = Some(&codeln[ts..te]);
+            k = m;
+        }
+        if k < b.len() && b[k] == b'(' {
+            out.push(ty);
+            i = k + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// `fn` names declared one level inside the block opened by a line
+/// containing the consecutive identifier sequence `header` (e.g.
+/// `["pub", "trait", "Backend"]`), with their 0-based lines. Bodies of
+/// default methods are skipped by the depth check, so nested closures
+/// and helpers never leak into the method set.
+pub fn collect_block_fns(
+    codes: &[String],
+    header: &[&str],
+) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let mut depth = 0i64;
+    let mut target: Option<i64> = None;
+    let mut armed = false;
+    for (li, codeln) in codes.iter().enumerate() {
+        if target.is_none() && has_ident_seq(codeln, header) {
+            armed = true;
+        }
+        if target == Some(depth) {
+            if let Some(name) = fn_decl_name(codeln) {
+                out.push((name.to_string(), li));
+            }
+        }
+        for ch in codeln.chars() {
+            if ch == '{' {
+                depth += 1;
+                if armed {
+                    target = Some(depth);
+                    armed = false;
+                }
+            } else if ch == '}' {
+                if target == Some(depth) {
+                    target = None;
+                }
+                depth -= 1;
+            }
+        }
+    }
+    out
+}
+
+/// Does the line's identifier stream contain `seq` consecutively?
+fn has_ident_seq(codeln: &str, seq: &[&str]) -> bool {
+    let ids: Vec<&str> = idents(codeln).into_iter().map(|(_, s)| s).collect();
+    if seq.is_empty() || ids.len() < seq.len() {
+        return false;
+    }
+    ids.windows(seq.len()).any(|w| w == seq)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_leave_the_code_channel() {
+        let src = "let x = \"mpsc::channel in a string\"; // mpsc::channel\n\
+                   /* block .unwrap() */ let y = 1;\n";
+        let fs = scan_file(src, &[]);
+        assert!(!fs.code[0].contains("mpsc"));
+        assert!(fs.comment[0].contains("mpsc::channel"));
+        assert!(!fs.code[1].contains("unwrap"));
+        assert!(fs.code[1].contains("let y = 1;"));
+    }
+
+    #[test]
+    fn continued_strings_keep_line_numbers() {
+        let src = "let s = \"a \\\n   b\";\nlet t = 1;\n";
+        let fs = scan_file(src, &[]);
+        // 3 source lines + the trailing empty line after the final \n.
+        assert_eq!(fs.code.len(), 4);
+        assert!(fs.code[2].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_and_char_literals_blank() {
+        let src = "let r = r#\"has .unwrap() inside\"#;\nlet c = '{'; let l: &'static str = \"x\";\n";
+        let fs = scan_file(src, &[]);
+        assert!(!fs.code[0].contains("unwrap"));
+        // The blanked '{' char literal must not count as a brace.
+        let (in_test, _) = spans(&fs.code, &[]);
+        assert!(!in_test.iter().any(|&t| t));
+    }
+
+    #[test]
+    fn cfg_test_spans_cover_the_module() {
+        let src = "fn lib() {}\n#[cfg(test)]\nmod tests {\n    fn t() { x(); }\n}\nfn lib2() {}\n";
+        let fs = scan_file(src, &[]);
+        assert!(!fs.in_test[0]);
+        assert!(fs.in_test[2] && fs.in_test[3] && fs.in_test[4]);
+        assert!(!fs.in_test[5]);
+    }
+
+    #[test]
+    fn watched_fn_spans_cover_the_body() {
+        let src = "fn other() {\n    a();\n}\nfn ro_step(\n    x: u32,\n) {\n    b();\n}\n";
+        let fs = scan_file(src, &["ro_step"]);
+        assert!(!fs.watched[1]);
+        assert!(fs.watched[5] && fs.watched[6] && fs.watched[7]);
+    }
+
+    #[test]
+    fn method_calls_match_exact_names_and_turbofish() {
+        assert_eq!(method_calls("x.sum::<usize>()", "sum"), vec![Some("usize")]);
+        assert_eq!(method_calls("x.sum::<f32>()", "sum"), vec![Some("f32")]);
+        assert_eq!(method_calls("x . sum ()", "sum"), vec![None]);
+        assert!(method_calls("x.sums()", "sum").is_empty());
+        assert!(method_calls("x.unwrap_or(0)", "unwrap").is_empty());
+        assert_eq!(method_calls("a.unwrap().unwrap()", "unwrap").len(), 2);
+    }
+
+    #[test]
+    fn block_fn_collection_skips_default_bodies() {
+        let src = "pub trait Backend {\n    fn a(&self);\n    fn b(&self) {\n        fn nested() {}\n    }\n}\nfn outside() {}\n";
+        let codes = lex(src).0;
+        let fns = collect_block_fns(&codes, &["pub", "trait", "Backend"]);
+        let names: Vec<&str> =
+            fns.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, ["a", "b"]);
+    }
+}

@@ -86,9 +86,12 @@ pub fn build_calib_stream_with(
     opts: &PruneOptions,
 ) -> Result<CalibStream> {
     let b = rt.manifest().consts.b_cal;
-    if opts.n_calib % b != 0 {
+    // Zero is a multiple of B_CAL, so check it explicitly: an empty
+    // calibration stream used to sail through here and panic deep in
+    // the accumulators instead of erroring at the CLI boundary.
+    if opts.n_calib == 0 || opts.n_calib % b != 0 {
         return Err(anyhow!(
-            "n_calib={} must be a multiple of B_CAL={b}",
+            "n_calib={} must be a positive multiple of B_CAL={b}",
             opts.n_calib
         ));
     }
@@ -170,7 +173,8 @@ pub fn gblm_full_grads(
             }
         }
     }
-    let flat = acc.expect("no calibration chunks");
+    let flat =
+        acc.ok_or_else(|| anyhow!("empty calibration stream for GBLM"))?;
     Ok(flat
         .chunks(7)
         .map(|c| BlockGrads { sq: c.to_vec(), samples: calib.n })

@@ -18,9 +18,16 @@
 //!   "e2e": {"prune_secs": ..., "ppl_dense_secs": ...,
 //!           "ppl_sparse_secs": ..., "ppl": ...},
 //!   "pipeline": {"seq_secs": ..., "overlap_secs": ...,
-//!                "overlap_ratio": ...}
+//!                "overlap_ratio": ...},
+//!   "audit": {"errors": 0, "warnings": 0, "waived": 17,
+//!             "unsafe_sites": 3, "unused_waivers": 0}
 //! }
 //! ```
+//!
+//! The `audit` section records the invariant-auditor counters
+//! (DESIGN.md §17) whenever the source tree is discoverable from the
+//! working directory — recorded for the trajectory, never gated here
+//! (CI's lint job runs the blocking `audit --deny-warnings`).
 //!
 //! A baseline file is the same document with an optional
 //! `max_regression_pct` (default 20): the gate fails when a measured
@@ -37,6 +44,7 @@ use std::time::{Instant, SystemTime, UNIX_EPOCH};
 
 use anyhow::{bail, Result};
 
+use crate::audit::AuditCounts;
 use crate::eval::perplexity_split;
 use crate::json::{Json, JsonStream};
 use crate::latency::measured::{measure_gemm_24, print_gemm_table, GemmMeasurement};
@@ -122,9 +130,29 @@ pub fn bench_trajectory(rt: &dyn Backend, cfg: &BenchConfig) -> Result<()> {
         pipe.overlap_ratio()
     );
 
+    // Invariant-auditor counters, folded in when the checkout is
+    // discoverable (recorded, not gated — the lint job gates).
+    let audit = audit_counts();
+    match &audit {
+        Some(c) => println!(
+            "  audit: {} error(s), {} warning(s), {} waived, {} unsafe \
+             site(s)",
+            c.errors, c.warnings, c.waiver_count, c.unsafe_sites
+        ),
+        None => println!("  audit: source tree not found; counters skipped"),
+    }
+
     if cfg.write_json || cfg.out.is_some() {
-        let doc =
-            build_json(cfg, &rows, prune_secs, ppl_dense_secs, ppl_sparse_secs, ppl, &pipe)?;
+        let doc = build_json(
+            cfg,
+            &rows,
+            prune_secs,
+            ppl_dense_secs,
+            ppl_sparse_secs,
+            ppl,
+            &pipe,
+            audit.as_ref(),
+        )?;
         let path = match &cfg.out {
             Some(p) => p.clone(),
             None => format!("BENCH_{}.json", today_utc()),
@@ -209,6 +237,15 @@ fn gemm_json<W: std::io::Write>(
     Ok(())
 }
 
+/// Audit the checkout the bench is running from, if findable. Any
+/// failure (detached working directory, unreadable tree) degrades to
+/// `None` — the bench's job is timing, not policing.
+fn audit_counts() -> Option<AuditCounts> {
+    let root = crate::audit::discover_root()?;
+    let report = crate::audit::audit_tree(&root).ok()?;
+    Some(report.counts())
+}
+
 #[allow(clippy::too_many_arguments)]
 fn build_json(
     cfg: &BenchConfig,
@@ -218,6 +255,7 @@ fn build_json(
     ppl_sparse_secs: f64,
     ppl: f64,
     pipe: &PipelineBench,
+    audit: Option<&AuditCounts>,
 ) -> Result<Vec<u8>> {
     let mut j = JsonStream::new(Vec::new());
     j.begin_obj()?;
@@ -244,6 +282,16 @@ fn build_json(
     j.num_field("overlap_secs", pipe.overlap_secs)?;
     j.num_field("overlap_ratio", pipe.overlap_ratio())?;
     j.end_obj()?;
+    if let Some(c) = audit {
+        j.key("audit")?;
+        j.begin_obj()?;
+        j.num_field("errors", c.errors as f64)?;
+        j.num_field("warnings", c.warnings as f64)?;
+        j.num_field("waived", c.waiver_count as f64)?;
+        j.num_field("unsafe_sites", c.unsafe_sites as f64)?;
+        j.num_field("unused_waivers", c.unused_waivers as f64)?;
+        j.end_obj()?;
+    }
     j.end_obj()?;
     let mut buf = j.finish()?;
     buf.push(b'\n');
@@ -387,11 +435,28 @@ mod tests {
             seq_secs: 2.0,
             overlap_secs: 1.6,
         };
+        let counts = AuditCounts {
+            errors: 0,
+            warnings: 0,
+            waiver_count: 17,
+            unsafe_sites: 3,
+            unused_waivers: 0,
+        };
         let doc =
-            build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0, &pipe).unwrap();
+            build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0, &pipe, Some(&counts))
+                .unwrap();
         let back =
             Json::parse(std::str::from_utf8(&doc).unwrap()).unwrap();
         assert_eq!(back.get("schema").unwrap().as_usize().unwrap(), 1);
+        let a = back.get("audit").unwrap();
+        assert_eq!(a.get("waived").unwrap().as_usize().unwrap(), 17);
+        assert_eq!(a.get("unsafe_sites").unwrap().as_usize().unwrap(), 3);
+        // An undiscoverable tree just omits the section.
+        let doc =
+            build_json(&cfg, &[m], 1.0, 2.0, 1.5, 42.0, &pipe, None).unwrap();
+        let back =
+            Json::parse(std::str::from_utf8(&doc).unwrap()).unwrap();
+        assert!(back.opt("audit").is_none());
         assert_eq!(back.get("seed").unwrap().as_usize().unwrap(), 7);
         let g = &back.get("gemm").unwrap().as_arr().unwrap()[0];
         assert_eq!(g.get("d").unwrap().as_usize().unwrap(), 512);

@@ -358,14 +358,20 @@ impl<'a> Parser<'a> {
                                 std::str::from_utf8(&self.b[self.i..self.i + 4])?;
                             let cp = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
-                            // surrogate pairs
+                            // surrogate pairs (bounds-checked: a
+                            // truncated document must error, not panic)
                             let ch = if (0xD800..0xDC00).contains(&cp) {
-                                if &self.b[self.i..self.i + 2] != b"\\u" {
+                                let nxt = self.b.get(self.i..self.i + 2);
+                                if nxt != Some(&b"\\u"[..]) {
                                     bail!("lone surrogate");
                                 }
                                 self.i += 2;
                                 let hex2 = std::str::from_utf8(
-                                    &self.b[self.i..self.i + 4],
+                                    self.b
+                                        .get(self.i..self.i + 4)
+                                        .ok_or_else(|| {
+                                            anyhow!("bad \\u escape")
+                                        })?,
                                 )?;
                                 let lo = u32::from_str_radix(hex2, 16)?;
                                 self.i += 4;
@@ -443,6 +449,25 @@ mod tests {
         assert_eq!(j.as_str().unwrap(), "a\"b\\c\ndAé");
         let w = Json::Str("a\"b\\c\nd".into()).write();
         assert_eq!(Json::parse(&w).unwrap().as_str().unwrap(), "a\"b\\c\nd");
+    }
+
+    #[test]
+    fn surrogate_pairs_parse_and_truncations_error_not_panic() {
+        // A full escaped pair decodes…
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str().unwrap(), "😀");
+        // …and every truncation point after a high surrogate is a
+        // typed error (these used to slice out of bounds and panic).
+        for bad in [
+            r#""\ud83d"#,      // document ends at the high surrogate
+            r#""\ud83d\"#,     // ends mid-escape
+            r#""\ud83d\u"#,    // ends before the low hex digits
+            r#""\ud83d\u12"#,  // ends inside the low hex digits
+            r#""\ud83d x""#,   // followed by a non-escape: lone
+            r#""\ud83d\n""#,   // followed by the wrong escape: lone
+        ] {
+            assert!(Json::parse(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

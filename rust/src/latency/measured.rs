@@ -40,6 +40,8 @@ pub fn gemm_24_fixture(
     let scores =
         Tensor::new(w.shape.clone(), w.data.iter().map(|v| v.abs()).collect());
     let wp = w.hadamard(&nm_mask_native(&scores, 2, 4));
+    // audit: allow(no-panic-in-library) — the mask applied one line up
+    // guarantees 2:4 structure, so packing cannot fail.
     let c = compress_24(&wp).expect("magnitude-2:4 matrix must pack");
     let x: Vec<f32> = (0..n * d).map(|_| rng.gen_normal()).collect();
     (wp, c, x)

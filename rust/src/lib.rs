@@ -46,6 +46,7 @@
 //! - [`lora`] — sparsity-aware LoRA fine-tuning (paper §5.6).
 //! - [`harness`] — one driver per paper table/figure (DESIGN.md §7).
 
+pub mod audit;
 pub mod bench;
 pub mod coordinator;
 pub mod eval;
@@ -96,6 +97,8 @@ pub fn stat_site(name: &str) -> usize {
         "wo" => 1,               // attention output
         "wg" | "wu" => 2,        // post-ln2 hidden states
         "wd" => 3,               // swiglu activations
+        // audit: allow(no-panic-in-library) — callers iterate the fixed
+        // PRUNABLE set; any other name is a programming error.
         _ => panic!("not a prunable weight: {name}"),
     }
 }

@@ -98,6 +98,8 @@ pub fn finetune(
         }
         inputs.push((&lr_t).into());
         let mut out = rt.exec_fv(&key, &inputs)?;
+        // audit: allow(no-panic-in-library) — output arity is fixed by
+        // the manifest the exec call just validated against.
         let loss = out.pop().expect("loss").item();
         let n = lora.tensors.len();
         let vs = out.split_off(n);

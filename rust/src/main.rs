@@ -86,6 +86,13 @@ COMMANDS
   inspect  --weights FILE [--fmt fp16|f32]
            Per-layer sparsity + 2:4 compressed-size report of a pruned model.
   profile  [--size s0]  Execution profile of a short Wanda++ run.
+  audit    [--json] [--deny-warnings] [--root DIR]
+           Static invariant audit of the repo's own Rust sources
+           (DESIGN.md 17): oracle-only scoring, bounded channels,
+           SAFETY-commented unsafe, explicit panic debt, Backend/Native
+           method parity, float determinism. Exits nonzero on errors;
+           --deny-warnings (how CI runs it) also fails on warnings.
+           --json streams the machine-readable report to stdout.
 
 METHODS  magnitude wanda sparsegpt gblm wanda++rgs wanda++ro wanda++
          — or any registered scorer by name (built-ins add: stade ria),
@@ -95,11 +102,11 @@ PATTERNS 2:4  4:8  u<frac> (unstructured)  r<frac> (structured rows)
 ";
 
 /// Valueless switches: `--sparse-exec`, `--measured`, `--smoke`,
-/// `--json`, `--trace`, `--decode`, `--batch-gemm` take no argument
-/// (everything else is a `--key value` pair).
-const BOOL_FLAGS: [&str; 7] = [
+/// `--json`, `--trace`, `--decode`, `--batch-gemm`, `--deny-warnings`
+/// take no argument (everything else is a `--key value` pair).
+const BOOL_FLAGS: [&str; 8] = [
     "sparse-exec", "measured", "smoke", "json", "trace", "decode",
-    "batch-gemm",
+    "batch-gemm", "deny-warnings",
 ];
 
 /// Tiny flag parser: positional args + `--key value` pairs + boolean
@@ -206,6 +213,32 @@ fn main() -> Result<()> {
         .first()
         .ok_or_else(|| anyhow!("no command\n{USAGE}"))?
         .clone();
+
+    // Source-level command: runs on the checkout alone, before any
+    // backend is opened (CI's lint job has no artifacts).
+    if cmd == "audit" {
+        let root = args.get("root", ".");
+        let report =
+            wandapp::audit::audit_tree(std::path::Path::new(&root))?;
+        if args.has("json") {
+            let stdout = std::io::stdout();
+            report.write_json(stdout.lock())?;
+            println!();
+        } else {
+            print!("{}", report.render());
+        }
+        let deny = args.has("deny-warnings");
+        if !report.ok(deny) {
+            bail!(
+                "audit failed: {} error(s), {} warning(s){}",
+                report.error_count(),
+                report.warning_count(),
+                if deny { " (warnings denied)" } else { "" }
+            );
+        }
+        return Ok(());
+    }
+
     let rt_box = wandapp::runtime::open(&artifacts, &args.get("backend", "auto"))?;
     let rt: &dyn Backend = rt_box.as_ref();
     rt.set_kernel_policy(KernelPolicy::parse(&args.get("kernels", "oracle"))?)?;

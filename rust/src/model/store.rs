@@ -167,6 +167,8 @@ impl Weights {
             .iter()
             .map(|n| {
                 map.remove(n)
+                    // audit: allow(no-panic-in-library) — documented
+                    // contract: a partial model is a bug, not a state.
                     .unwrap_or_else(|| panic!("missing tensor `{n}`"))
             })
             .collect();
@@ -210,6 +212,8 @@ impl Weights {
     }
 
     pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        // audit: allow(no-panic-in-library) — names come from the
+        // canonical set built in from_map; same contract as get().
         let i = *self.index.get(name).expect("unknown tensor");
         &mut self.tensors[i]
     }
@@ -243,6 +247,8 @@ impl Weights {
         let k = BLOCK_PARAMS
             .iter()
             .position(|p| *p == param)
+            // audit: allow(no-panic-in-library) — param names come from
+            // the closed BLOCK_PARAMS set; a miss is a programming error.
             .unwrap_or_else(|| panic!("unknown block tensor {param}"));
         self.set_block_param(i, k, t);
     }

@@ -50,6 +50,8 @@ impl Weights {
                     "wo" => normal_tensor(&mut rng, &[d, d], s_d * damp),
                     "wg" | "wu" => normal_tensor(&mut rng, &[f, d], s_d),
                     "wd" => normal_tensor(&mut rng, &[d, f], s_f * damp),
+                    // audit: allow(no-panic-in-library) — the match
+                    // iterates the closed BLOCK_PARAMS set.
                     other => panic!("unknown block param {other}"),
                 };
                 map.insert(format!("blocks.{li}.{name}"), t);

@@ -368,6 +368,8 @@ pub fn score_weight(
             Tensor::new(vec![1], vec![alpha]).into(),
         ],
     )?;
+    // audit: allow(no-panic-in-library) — score kernels emit exactly one
+    // output; arity was validated by the exec call above.
     Ok(out.into_iter().next().unwrap())
 }
 
@@ -386,6 +388,8 @@ pub fn mask_from_scores(
             let tag = Manifest::shape_tag(weight_name);
             let key = format!("{size}_mask{n}{m}_{tag}");
             let out = rt.exec_f32(&key, &[scores.clone().into()])?;
+            // audit: allow(no-panic-in-library) — mask kernels emit
+            // exactly one output; arity validated by the exec call.
             Ok(out.into_iter().next().unwrap())
         }
         other => Ok(select_mask(scores, other)),

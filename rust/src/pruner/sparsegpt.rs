@@ -44,6 +44,8 @@ pub fn sparsegpt_prune(
     }
 
     let u = hessian_inv_chol(&h, cols, PERCDAMP)
+        // audit: allow(no-panic-in-library) — H is PSD by construction
+        // and the loop above plus percdamp force positive pivots.
         .expect("hessian not invertible even after damping");
     let diag: Vec<f64> = (0..cols).map(|j| u[j * cols + j]).collect();
 

@@ -185,6 +185,8 @@ impl Manifest {
             "wq" | "wk" | "wv" | "wo" => "sq",
             "wg" | "wu" => "sf",
             "wd" => "fd",
+            // audit: allow(no-panic-in-library) — callers iterate the
+            // fixed PRUNABLE set; any other name is a programming error.
             _ => panic!("not a prunable weight: {name}"),
         }
     }

@@ -169,12 +169,16 @@ pub trait Backend {
     }
 
     /// Execute with owned inputs (convenience over [`Backend::exec_v`]).
+    // audit: allow(backend-completeness) — pure delegation to exec_v;
+    // overriding it could only diverge from the validated path.
     fn exec(&self, key: &str, inputs: &[Value]) -> Result<Vec<Value>> {
         let views: Vec<ValueView> = inputs.iter().map(ValueView::from).collect();
         self.exec_v(key, &views)
     }
 
     /// Execute and return only f32 outputs.
+    // audit: allow(backend-completeness) — type-narrowing wrapper over
+    // exec; no backend-specific behavior to override.
     fn exec_f32(&self, key: &str, inputs: &[Value]) -> Result<Vec<Tensor>> {
         self.exec(key, inputs)?
             .into_iter()
@@ -183,6 +187,8 @@ pub trait Backend {
     }
 
     /// Borrowed-input variant of [`Backend::exec_f32`] — the hot-path form.
+    // audit: allow(backend-completeness) — type-narrowing wrapper over
+    // exec_v; no backend-specific behavior to override.
     fn exec_fv(&self, key: &str, inputs: &[ValueView]) -> Result<Vec<Tensor>> {
         self.exec_v(key, inputs)?
             .into_iter()

@@ -98,6 +98,8 @@ where
             handles.push(s.spawn(move || (lo..hi).map(fref).collect::<Vec<T>>()));
         }
         for h in handles {
+            // audit: allow(no-panic-in-library) — re-raising a worker
+            // panic on the caller's thread is the intended behavior.
             parts.push(h.join().expect("worker panicked"));
         }
     });

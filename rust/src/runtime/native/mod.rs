@@ -432,9 +432,14 @@ impl NativeBackend {
                 let per: Vec<[Vec<f32>; 7]> = par_map(dims.b, |s| {
                     let xs = &x.data[s * row..(s + 1) * row];
                     let (y, cache) = block_forward(xs, w, one);
-                    let norm = (y.iter().map(|v| v * v).sum::<f32>()
-                        + 1e-12)
-                        .sqrt();
+                    // Explicit in-order accumulation from 0.0: the RGS
+                    // score feeds pruning decisions, so the reduction
+                    // order is spelled out (oracle bit-exactness).
+                    let mut ss = 0.0f32;
+                    for v in &y {
+                        ss += v * v;
+                    }
+                    let norm = (ss + 1e-12).sqrt();
                     let dy: Vec<f32> = y.iter().map(|v| v / norm).collect();
                     let bb = block_backward(&dy, xs, w, &cache, one, false);
                     let [_, wq, wk, wv, wo, _, wg, wu, wd] = bb.into_params();

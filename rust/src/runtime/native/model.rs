@@ -45,7 +45,14 @@ pub fn head_loss(
         }
         let row = &logits[p * vocab..(p + 1) * vocab];
         let maxv = row.iter().fold(f32::NEG_INFINITY, |a, b| a.max(*b));
-        let logz = row.iter().map(|v| (v - maxv).exp()).sum::<f32>().ln() + maxv;
+        // Explicit in-order accumulation from 0.0 — the oracle's
+        // bit-exactness contract spells the reduction order out rather
+        // than leaning on the iterator adapter's current behavior.
+        let mut z = 0.0f32;
+        for v in row {
+            z += (v - maxv).exp();
+        }
+        let logz = z.ln() + maxv;
         nll += logz - row[targets[p] as usize];
         count += 1.0;
     }

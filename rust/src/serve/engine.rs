@@ -272,6 +272,8 @@ impl<'rt, 'm> BatchedDecodeEngine<'rt, 'm> {
         let emb = &self.inner.model.embed().data;
         let mut hs = Vec::with_capacity(b * d);
         for st in batch.iter() {
+            // audit: allow(no-panic-in-library) — admission pushed the
+            // prompt tokens, so the vec is never empty here.
             let tok = *st.tokens.last().expect("token pushed above");
             if tok < 0 || tok >= vocab as i32 {
                 bail!("decode: token id {tok} outside vocab 0..{vocab}");

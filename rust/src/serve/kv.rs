@@ -185,8 +185,12 @@ impl KvLayer {
             // Pages are uniquely owned, so make_mut never deep-copies
             // (asserted by the serving property tests via
             // `deep_copied_bytes`).
+            // audit: allow(no-panic-in-library) — the slot==0 branch
+            // above pushed a page, so last_mut is always Some.
             self.k_pages.last_mut().unwrap().make_mut()[lo..hi]
                 .copy_from_slice(&k[rlo..rhi]);
+            // audit: allow(no-panic-in-library) — same invariant as the
+            // K-page write one statement up.
             self.v_pages.last_mut().unwrap().make_mut()[lo..hi]
                 .copy_from_slice(&v[rlo..rhi]);
             self.len += 1;

@@ -274,6 +274,9 @@ impl Tensor {
     /// the buffer twice; see DESIGN.md §6).
     #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
+        // SAFETY: read-only `&[f32] -> &[u8]` view of one allocation;
+        // f32 has no padding or invalid bit patterns, u8 alignment (1)
+        // is weaker, and the length is exactly `len * 4` owned bytes.
         let bytes = unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const u8,
@@ -317,6 +320,9 @@ impl TensorI32 {
 
     #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
+        // SAFETY: same invariant as `Tensor::to_literal` — i32 has no
+        // padding or invalid bit patterns, u8 alignment is weaker, and
+        // the view spans exactly the `len * 4` bytes of `self.data`.
         let bytes = unsafe {
             std::slice::from_raw_parts(
                 self.data.as_ptr() as *const u8,
@@ -503,5 +509,33 @@ mod tests {
             *v = 1.0;
         }
         assert_eq!(deep_copied_bytes(), before);
+    }
+
+    /// The repo's only `unsafe` lives in the two `to_literal` byte-cast
+    /// views (pjrt feature, so CI never compiles them). This replays
+    /// the identical cast pattern in a default build so the nightly
+    /// Miri CI step exercises it: Miri validates the raw-parts view
+    /// (provenance, bounds, alignment) and the assert pins it to the
+    /// safe per-element conversion.
+    #[test]
+    fn byte_view_matches_per_element_bytes() {
+        let t = Tensor::new(
+            vec![2, 2],
+            vec![1.0, -0.5, 3.25, f32::MIN_POSITIVE],
+        );
+        // SAFETY: same invariant as `Tensor::to_literal` — a read-only
+        // `&[f32] -> &[u8]` view of one allocation, u8 alignment is
+        // weaker, length spans exactly the `len * 4` owned bytes.
+        let view = unsafe {
+            std::slice::from_raw_parts(
+                t.data.as_ptr() as *const u8,
+                t.data.len() * 4,
+            )
+        };
+        let mut manual = Vec::new();
+        for v in t.data.iter() {
+            manual.extend_from_slice(&v.to_ne_bytes());
+        }
+        assert_eq!(view, &manual[..]);
     }
 }

@@ -1,0 +1,371 @@
+//! Tests for the in-tree invariant auditor (DESIGN.md §17).
+//!
+//! Three layers: per-rule fixtures through `audit_sources` (each rule
+//! fires exactly once, waivers suppress, exemptions hold), a
+//! self-check that the shipped tree passes `--deny-warnings`, and
+//! CLI-level runs of the built binary against throwaway source trees.
+//!
+//! Fixture sources live in string literals — the scanner blanks
+//! literal contents, so this file never trips the rules it tests.
+
+use std::path::{Path, PathBuf};
+
+use wandapp::audit::{audit_sources, audit_tree, AuditReport, Severity};
+use wandapp::json::Json;
+
+fn audit_one(rel: &str, lines: &[&str]) -> AuditReport {
+    audit_sources(&[(rel.to_string(), lines.join("\n"))])
+}
+
+fn rules_of(r: &AuditReport) -> Vec<&'static str> {
+    r.findings.iter().map(|f| f.rule).collect()
+}
+
+#[test]
+fn oracle_rule_fires_only_in_scoring_scope() {
+    let lines = ["pub fn score(p: KernelPolicy) -> f32 {", "    0.0", "}"];
+    let r = audit_one("src/pruner/scorer.rs", &lines);
+    assert_eq!(rules_of(&r), ["oracle-only-scoring"]);
+    assert_eq!(r.findings[0].line, 1);
+    assert_eq!(r.findings[0].severity, Severity::Error);
+    // Same content outside scoring scope: clean.
+    let r = audit_one("src/serve/scorer.rs", &lines);
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn oracle_rule_watches_kernel_fns_not_whole_file() {
+    // block.rs mixes policy dispatch with watched grad kernels: the
+    // banned ident is fine at file scope but not inside block_backward.
+    let r = audit_one(
+        "src/runtime/native/block.rs",
+        &[
+            "pub fn forward(use_tiled: bool) {}",
+            "pub fn block_backward() {",
+            "    let t = use_tiled;",
+            "}",
+        ],
+    );
+    assert_eq!(rules_of(&r), ["oracle-only-scoring"]);
+    assert_eq!(r.findings[0].line, 3);
+}
+
+#[test]
+fn channel_rule_flags_unbounded_and_rendezvous() {
+    let r = audit_one(
+        "src/pipeline/stage.rs",
+        &[
+            "use std::sync::mpsc;",
+            "pub fn open() {",
+            "    let a = mpsc :: channel::<u8>();",
+            "    let b = mpsc::sync_channel(0);",
+            "    let c = mpsc::sync_channel(8);",
+            "}",
+        ],
+    );
+    assert_eq!(
+        rules_of(&r),
+        ["no-unbounded-channels", "no-unbounded-channels"]
+    );
+    assert_eq!(r.findings[0].line, 3);
+    assert_eq!(r.findings[1].line, 4);
+}
+
+#[test]
+fn unsafe_rule_requires_adjacent_safety_comment() {
+    let bare = ["pub fn p() -> *const u8 {", "    unsafe { go() }", "}"];
+    let r = audit_one("src/tensor2.rs", &bare);
+    assert_eq!(rules_of(&r), ["safety-commented-unsafe"]);
+    assert_eq!(r.unsafe_sites.len(), 1);
+    assert!(!r.unsafe_sites[0].commented);
+
+    let r = audit_one(
+        "src/tensor2.rs",
+        &[
+            "pub fn p() -> *const u8 {",
+            "    // SAFETY: null is a valid *const.",
+            "    unsafe { go() }",
+            "}",
+        ],
+    );
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.unsafe_sites.len(), 1);
+    assert!(r.unsafe_sites[0].commented);
+}
+
+#[test]
+fn panic_rule_is_a_warning_scoped_to_library_code() {
+    let lines = ["pub fn f(x: Option<u8>) -> u8 {", "    x.unwrap()", "}"];
+    let r = audit_one("src/util.rs", &lines);
+    assert_eq!(rules_of(&r), ["no-panic-in-library"]);
+    assert_eq!(r.findings[0].severity, Severity::Warning);
+    // Warnings fail only when denied.
+    assert!(r.ok(false));
+    assert!(!r.ok(true));
+    // main.rs and test files are out of scope.
+    assert!(audit_one("src/main.rs", &lines).findings.is_empty());
+    assert!(audit_one("tests/util.rs", &lines).findings.is_empty());
+}
+
+#[test]
+fn panic_rule_skips_cfg_test_spans() {
+    let r = audit_one(
+        "src/util.rs",
+        &[
+            "pub fn f() {}",
+            "#[cfg(test)]",
+            "mod tests {",
+            "    fn helper(x: Option<u8>) -> u8 {",
+            "        panic!(\"boom {}\", x.unwrap())",
+            "    }",
+            "}",
+        ],
+    );
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn float_rule_flags_reductions_but_not_integer_turbofish() {
+    let r = audit_one(
+        "src/runtime/native/math.rs",
+        &[
+            "pub fn f(xs: &[f32]) -> f32 {",
+            "    let n = xs.iter().map(|v| v.abs() as usize).sum::<usize>();",
+            "    let s = xs.iter().sum::<f32>();",
+            "    let t = xs[0].mul_add(s, n as f32);",
+            "    t",
+            "}",
+        ],
+    );
+    assert_eq!(rules_of(&r), ["float-determinism", "float-determinism"]);
+    assert_eq!(r.findings[0].line, 3);
+    assert_eq!(r.findings[1].line, 4);
+    // Outside the oracle kernel files the same code is fine.
+    let r = audit_one(
+        "src/eval/ppl.rs",
+        &["pub fn f(xs: &[f32]) -> f32 {", "    xs.iter().sum()", "}"],
+    );
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+#[test]
+fn backend_completeness_diffs_trait_against_native_impl() {
+    let trait_file = [
+        "pub trait Backend {",
+        "    fn name(&self) -> &'static str;",
+        "    fn extra(&self) -> u8 {",
+        "        0",
+        "    }",
+        "}",
+    ]
+    .join("\n");
+    let impl_file = [
+        "pub struct NativeBackend;",
+        "impl Backend for NativeBackend {",
+        "    fn name(&self) -> &'static str {",
+        "        \"native\"",
+        "    }",
+        "}",
+    ]
+    .join("\n");
+    let r = audit_sources(&[
+        ("src/runtime/mod.rs".to_string(), trait_file),
+        ("src/runtime/native/mod.rs".to_string(), impl_file),
+    ]);
+    assert_eq!(rules_of(&r), ["backend-completeness"]);
+    assert_eq!(r.findings[0].file, "src/runtime/mod.rs");
+    assert_eq!(r.findings[0].line, 3);
+    assert!(r.findings[0].message.contains("extra"));
+}
+
+#[test]
+fn waiver_suppresses_and_moves_finding_to_the_waived_ledger() {
+    let r = audit_one(
+        "src/util.rs",
+        &[
+            "pub fn f(x: Option<u8>) -> u8 {",
+            "    // audit: allow(no-panic-in-library) — x checked above.",
+            "    x.unwrap()",
+            "}",
+        ],
+    );
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+    assert_eq!(r.waiver_count(), 1);
+    assert_eq!(r.waived[0].rule, "no-panic-in-library");
+    assert!(r.unused_waivers.is_empty());
+    assert!(r.ok(true));
+}
+
+#[test]
+fn waiver_for_the_wrong_rule_suppresses_nothing() {
+    let r = audit_one(
+        "src/util.rs",
+        &[
+            "pub fn f(x: Option<u8>) -> u8 {",
+            "    // audit: allow(float-determinism) — wrong rule here.",
+            "    x.unwrap()",
+            "}",
+        ],
+    );
+    assert_eq!(rules_of(&r), ["no-panic-in-library"]);
+    assert_eq!(r.unused_waivers.len(), 1);
+}
+
+#[test]
+fn reasonless_waiver_is_a_syntax_finding_and_suppresses_nothing() {
+    let r = audit_one(
+        "src/util.rs",
+        &[
+            "pub fn f(x: Option<u8>) -> u8 {",
+            "    // audit: allow(no-panic-in-library)",
+            "    x.unwrap()",
+            "}",
+        ],
+    );
+    let mut rules = rules_of(&r);
+    rules.sort();
+    assert_eq!(rules, ["no-panic-in-library", "waiver-syntax"]);
+    assert!(!r.ok(false), "reasonless waiver must fail the audit");
+}
+
+#[test]
+fn malformed_waiver_marker_is_flagged() {
+    let r = audit_one(
+        "src/util.rs",
+        &["pub fn f() {}", "// audit: TODO tighten this module"],
+    );
+    assert_eq!(rules_of(&r), ["waiver-syntax"]);
+    assert_eq!(r.findings[0].line, 2);
+}
+
+#[test]
+fn string_literals_never_trigger_rules() {
+    let r = audit_one(
+        "src/pruner/help.rs",
+        &[
+            "pub fn help() -> &'static str {",
+            "    \"KernelPolicy uses mpsc::channel() and x.unwrap()\"",
+            "}",
+        ],
+    );
+    assert!(r.findings.is_empty(), "{:?}", r.findings);
+}
+
+/// The shipped tree must pass the exact check CI runs
+/// (`audit --deny-warnings`): zero errors, zero unwaived warnings,
+/// every `unsafe` SAFETY-commented, no stale waivers.
+#[test]
+fn real_tree_audits_clean() {
+    let crate_dir = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let r = audit_tree(crate_dir).expect("audit of the shipped tree");
+    assert!(
+        r.ok(true),
+        "shipped tree must audit clean:\n{}",
+        r.render()
+    );
+    assert!(r.files_scanned > 30, "scope collapsed: {}", r.files_scanned);
+    assert!(
+        r.unsafe_sites.iter().all(|s| s.commented),
+        "uncommented unsafe: {:?}",
+        r.unsafe_sites
+    );
+    assert!(r.unused_waivers.is_empty(), "{:?}", r.unused_waivers);
+    // The waiver ledger is the explicit panic/completeness debt; if it
+    // drains to zero the scope tables probably rotted.
+    assert!(r.waiver_count() > 0);
+}
+
+fn write_tree(name: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root = std::env::temp_dir()
+        .join(format!("wandapp_audit_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, text) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().expect("parent")).expect("mkdir");
+        std::fs::write(p, text).expect("write fixture");
+    }
+    std::fs::write(root.join("Cargo.toml"), "[package]\n").expect("write");
+    root
+}
+
+fn run_audit(extra: &[&str]) -> (bool, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_wandapp"))
+        .arg("audit")
+        .args(extra)
+        .output()
+        .expect("spawn wandapp");
+    (out.status.success(), String::from_utf8_lossy(&out.stdout).into_owned())
+}
+
+#[test]
+fn cli_deny_warnings_fails_on_seeded_violation_and_passes_clean() {
+    // A scorer that names the kernel-policy dispatch surface: error.
+    let bad = write_tree(
+        "bad",
+        &[(
+            "src/pruner/scorer.rs",
+            "pub fn score(p: KernelPolicy) -> f32 {\n    0.0\n}\n",
+        )],
+    );
+    let root = bad.to_string_lossy().into_owned();
+    let (ok, out) = run_audit(&["--root", &root, "--deny-warnings"]);
+    assert!(!ok, "seeded violation must fail:\n{out}");
+    assert!(out.contains("oracle-only-scoring"));
+
+    // A warning-only tree: passes plain, fails under --deny-warnings.
+    let warn = write_tree(
+        "warn",
+        &[(
+            "src/util.rs",
+            "pub fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n",
+        )],
+    );
+    let root = warn.to_string_lossy().into_owned();
+    let (ok, _) = run_audit(&["--root", &root]);
+    assert!(ok, "warnings alone must not fail the plain audit");
+    let (ok, _) = run_audit(&["--root", &root, "--deny-warnings"]);
+    assert!(!ok, "--deny-warnings must fail on an unwaived warning");
+
+    let clean = write_tree(
+        "clean",
+        &[("src/lib.rs", "pub fn one() -> usize {\n    1\n}\n")],
+    );
+    let root = clean.to_string_lossy().into_owned();
+    let (ok, out) = run_audit(&["--root", &root, "--deny-warnings"]);
+    assert!(ok, "clean tree must pass:\n{out}");
+    assert!(out.contains("summary: 0 error(s), 0 warning(s)"));
+
+    for d in [bad, warn, clean] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn cli_json_output_parses_and_counts_by_rule() {
+    let bad = write_tree(
+        "json",
+        &[(
+            "src/pruner/scorer.rs",
+            "pub fn score(p: KernelPolicy) -> f32 {\n    0.0\n}\n",
+        )],
+    );
+    let root = bad.to_string_lossy().into_owned();
+    let (ok, out) = run_audit(&["--root", &root, "--json"]);
+    assert!(!ok, "error findings must fail even without deny-warnings");
+    let j = Json::parse(out.trim()).expect("audit JSON parses");
+    assert_eq!(j.get("schema").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(j.get("errors").unwrap().as_usize().unwrap(), 1);
+    let per_rule = j
+        .get("rules")
+        .unwrap()
+        .get("oracle-only-scoring")
+        .unwrap();
+    assert_eq!(per_rule.get("findings").unwrap().as_usize().unwrap(), 1);
+    let findings = j.get("findings").unwrap().as_arr().unwrap();
+    assert_eq!(findings.len(), 1);
+    assert_eq!(
+        findings[0].get("file").unwrap().as_str().unwrap(),
+        "src/pruner/scorer.rs"
+    );
+    let _ = std::fs::remove_dir_all(bad);
+}
